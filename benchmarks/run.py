@@ -1,0 +1,51 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines (plus human-readable tables
+on stderr-adjacent stdout).  Set ORPHEUS_BENCH_FAST=1 for a quick pass
+(skips the two big CNNs and autotune).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> None:
+    fast = os.environ.get("ORPHEUS_BENCH_FAST", "0") == "1"
+    t0 = time.time()
+
+    print("# --- table1: framework feature metrics ---")
+    from benchmarks import table1_features
+    table1_features.main()
+
+    print("# --- fig2: CNN inference time per conv backend ---")
+    from benchmarks import fig2_inference_time
+    models = (["wrn-40-2", "mobilenet-v1", "resnet-18"] if fast else None)
+    rows = fig2_inference_time.run(models=models, reps=2,
+                                   include_autotune=not fast)
+    cols = [c for c in rows[0] if c not in ("model", "winner")]
+    for r in rows:
+        for c in cols:
+            print(f"fig2/{r['model']}/{c},{r[c]*1e6:.0f},winner={r['winner']}")
+
+    print("# --- per-layer evaluation ---")
+    from benchmarks import per_layer
+    for r in per_layer.run(top_k=3 if fast else 5):
+        for b, t in r["times"].items():
+            print(f"per_layer/{r['layer']}/{b},{t*1e6:.0f},best={r['best']}")
+
+    print("# --- kernel microbenches ---")
+    from benchmarks import bench_kernels
+    for k, v in bench_kernels.run().items():
+        if k.endswith(("tflops", "_ai")):
+            print(f"kernels/{k},{v:.3f},analytic")
+        else:
+            print(f"kernels/{k},{v*1e6:.0f},wall")
+
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""The paper's Figure 2, reproduced: inference time of the five evaluation
+CNNs under each conv-backend assignment, single thread, batch 1.
+
+The paper's finding was that the best backend is workload-dependent (GEMM
+conv won its big models, spatial-pack its small ones on a Cortex-A73).
+This script reruns that comparison on THIS machine's CPU via XLA and
+reports whichever backend wins where — plus the autotuned per-layer mix,
+which is the point of the framework.
+
+Run:  PYTHONPATH=src:. python examples/orpheus_cnn_eval.py [--fast]
+"""
+
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.fig2_inference_time import run  # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="three small models, no autotune")
+    args = ap.parse_args()
+    models = (["wrn-40-2", "mobilenet-v1", "resnet-18"] if args.fast else None)
+    rows = run(models=models, reps=2, include_autotune=not args.fast)
+    cols = [c for c in rows[0] if c not in ("model", "winner")]
+    print(f"\n{'model':14s} " + " ".join(f"{c:>10s}" for c in cols)
+          + "  winner")
+    for r in rows:
+        print(f"{r['model']:14s} "
+              + " ".join(f"{r[c]*1e3:9.1f}ms" for c in cols)
+              + f"  {r['winner']}")
+    print("\n(The paper's Fig. 2 claim — backend choice is workload-"
+          "dependent — holds iff the winner column isn't constant.)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Serving example: continuous batching with slot reuse (the end-to-end
+driver for the paper's kind — Orpheus is an inference framework).
+
+A stream of requests with different prompt lengths flows through a fixed
+decode batch; finished slots are refilled immediately.  Outputs are checked
+against an unbatched greedy reference for the first request.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.models.lm import LM
+from repro.runtime.batching import ContinuousBatcher, Request
+
+
+def main() -> None:
+    cfg = get_reduced("gemma3-1b")   # local:global attention, MQA — the
+    model = LM(cfg)                  # most cache-interesting reduced arch
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(2, cfg.vocab,
+                                        size=int(rng.integers(4, 14))
+                                        ).astype(np.int32),
+                    max_new_tokens=10)
+            for i in range(12)]
+
+    batcher = ContinuousBatcher(model, params, n_slots=4, cache_cap=64,
+                                eos_id=-1)
+    for r in reqs:
+        batcher.submit(r)
+    t0 = time.time()
+    batcher.run(max_steps=2000)
+    dt = time.time() - t0
+
+    n_out = sum(len(r.out_tokens) for r in reqs)
+    print(f"12 requests over 4 slots: {n_out} tokens in {dt:.2f}s "
+          f"({n_out/dt:,.0f} tok/s), slot utilisation "
+          f"{batcher.utilisation:.0%}")
+
+    # verify request 0 against unbatched greedy decode
+    r0 = reqs[0]
+    toks = jnp.asarray(r0.prompt)[None]
+    lg, caches, lengths = model.prefill(params, {"tokens": toks}, cache_cap=64)
+    want = [int(jnp.argmax(lg[0]))]
+    for _ in range(len(r0.out_tokens) - 1):
+        lg, caches = model.decode_step(params, jnp.asarray([want[-1]]),
+                                       caches, lengths)
+        lengths = lengths + 1
+        want.append(int(jnp.argmax(lg[0])))
+    assert r0.out_tokens == want, (r0.out_tokens, want)
+    print(f"req0 output matches unbatched greedy ✓  ({want})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro — Orpheus-JAX: a multi-backend DNN framework for TPU pods.
+
+Importing ``repro`` registers all standard ops (core.nnops) and all Pallas
+TPU backends (kernels.ops) in the global backend registry.
+"""
+
+from repro import core  # noqa: F401  (registers standard ops)
+
+try:  # Pallas backends are optional at import time (e.g. minimal installs)
+    from repro.kernels import ops as _kernel_ops  # noqa: F401
+except ImportError:  # pragma: no cover
+    _kernel_ops = None
+
+__version__ = "1.0.0"

@@ -1,0 +1,29 @@
+"""Analysis-mode switches shared across layers/kernels/models.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE (trip count ignored),
+so any ``lax.scan`` hides its true FLOPs/bytes/collectives from the
+dry-run roofline.  Under ``unroll_scans()`` every analysis-aware scan in
+the model stack (layer periods, SSD chunk loops) lowers as a Python loop —
+numerics identical (asserted in tests), HLO costs complete.  Execution
+paths keep scans (compile-time O(body))."""
+
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL_SCANS = False
+
+
+def unrolling() -> bool:
+    return _UNROLL_SCANS
+
+
+@contextlib.contextmanager
+def unroll_scans():
+    global _UNROLL_SCANS
+    prev = _UNROLL_SCANS
+    _UNROLL_SCANS = True
+    try:
+        yield
+    finally:
+        _UNROLL_SCANS = prev

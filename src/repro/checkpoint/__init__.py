@@ -1,0 +1,6 @@
+"""Mesh-agnostic checkpointing with async saves and elastic restore."""
+
+from repro.checkpoint import io  # noqa: F401
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["io", "CheckpointManager"]

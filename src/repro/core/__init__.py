@@ -1,0 +1,29 @@
+"""Orpheus-JAX core: GraphIR, backend registry, passes, importer, executor.
+
+Importing this package registers the standard NN ops (:mod:`repro.core.nnops`).
+Pallas/TPU backends are registered by importing :mod:`repro.kernels.ops`
+(done automatically by ``import repro``).
+"""
+
+from repro.core import nnops as _nnops  # noqa: F401  (registers standard ops)
+from repro.core.executor import Executor, NodeReport
+from repro.core.importer import load_graph, save_graph
+from repro.core.ir import Graph, GraphError, Node, TensorSpec, topological_order
+from repro.core.passes import (eliminate_common_subexpr, eliminate_dead,
+                               fold_batchnorm, fold_constants, fuse_bias_act,
+                               infer_shapes, simplify)
+from repro.core.registry import (Cost, OpDef, OpImpl, backends_for, defop,
+                                 get_impl, get_op, impl, registered_ops)
+from repro.core.selector import (TPU_V5E, AutotunePolicy, BackendPolicy,
+                                 CostModelPolicy, FixedPolicy, HardwareProfile)
+
+__all__ = [
+    "Executor", "NodeReport", "load_graph", "save_graph",
+    "Graph", "GraphError", "Node", "TensorSpec", "topological_order",
+    "eliminate_common_subexpr", "eliminate_dead", "fold_batchnorm",
+    "fold_constants", "fuse_bias_act", "infer_shapes", "simplify",
+    "Cost", "OpDef", "OpImpl", "backends_for", "defop", "get_impl", "get_op",
+    "impl", "registered_ops",
+    "TPU_V5E", "AutotunePolicy", "BackendPolicy", "CostModelPolicy",
+    "FixedPolicy", "HardwareProfile",
+]

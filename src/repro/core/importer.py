@@ -1,0 +1,126 @@
+"""OXF — the Orpheus eXchange Format (the repo's ONNX analogue).
+
+A serialized model is a directory (or a single ``.oxf`` zip-less bundle):
+
+    model.json        graph topology: inputs, outputs, nodes, attrs
+    weights.npz       parameters, keyed by value name
+
+The importer mirrors the paper's "parse pre-trained models exported from
+popular training frameworks": any JAX/numpy training code can export its
+pytree of weights + a node list, and Orpheus-JAX loads, simplifies
+(:func:`repro.core.passes.simplify`) and executes it on any registered
+backend. Round-trip (save -> load) is exact and covered by tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core.ir import Graph, GraphError, Node, TensorSpec
+
+__all__ = ["save_graph", "load_graph", "graph_to_dict", "graph_from_dict"]
+
+_FORMAT_VERSION = 1
+
+
+def _spec_to_json(spec: TensorSpec) -> Dict[str, Any]:
+    return {"shape": list(spec.shape), "dtype": spec.dtype}
+
+
+def _spec_from_json(d: Dict[str, Any]) -> TensorSpec:
+    return TensorSpec(tuple(int(x) for x in d["shape"]), str(d["dtype"]))
+
+
+def _jsonable_attrs(attrs: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in attrs.items():
+        if isinstance(v, np.ndarray):
+            out[k] = {"__ndarray__": v.tolist(), "dtype": str(v.dtype)}
+        elif isinstance(v, tuple):
+            out[k] = {"__tuple__": [_jsonable_attrs({"v": x})["v"] for x in v]}
+        elif isinstance(v, (np.integer,)):
+            out[k] = int(v)
+        elif isinstance(v, (np.floating,)):
+            out[k] = float(v)
+        else:
+            out[k] = v
+    return out
+
+
+def _attrs_from_json(attrs: Dict[str, Any]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for k, v in attrs.items():
+        if isinstance(v, dict) and "__ndarray__" in v:
+            out[k] = np.asarray(v["__ndarray__"], dtype=v["dtype"])
+        elif isinstance(v, dict) and "__tuple__" in v:
+            out[k] = tuple(_attrs_from_json({"v": x})["v"] for x in v["__tuple__"])
+        elif isinstance(v, list):
+            out[k] = tuple(_attrs_from_json({"v": x})["v"] for x in v)
+        else:
+            out[k] = v
+    return out
+
+
+def graph_to_dict(graph: Graph) -> Dict[str, Any]:
+    return {
+        "format_version": _FORMAT_VERSION,
+        "name": graph.name,
+        "inputs": {k: _spec_to_json(v) for k, v in graph.inputs.items()},
+        "outputs": list(graph.outputs),
+        "nodes": [
+            {
+                "name": n.name,
+                "op": n.op,
+                "inputs": list(n.inputs),
+                "outputs": list(n.outputs),
+                "attrs": _jsonable_attrs(n.attrs),
+                **({"backend": n.backend} if n.backend else {}),
+            }
+            for n in graph.nodes
+        ],
+    }
+
+
+def graph_from_dict(d: Dict[str, Any], params: Dict[str, Any]) -> Graph:
+    if int(d.get("format_version", -1)) != _FORMAT_VERSION:
+        raise GraphError(f"unsupported OXF version {d.get('format_version')!r}")
+    g = Graph(
+        name=str(d["name"]),
+        inputs={k: _spec_from_json(v) for k, v in d["inputs"].items()},
+        outputs=list(d["outputs"]),
+        nodes=[
+            Node(
+                name=nd["name"],
+                op=nd["op"],
+                inputs=list(nd["inputs"]),
+                outputs=list(nd["outputs"]),
+                attrs=_attrs_from_json(nd.get("attrs", {})),
+                backend=nd.get("backend"),
+            )
+            for nd in d["nodes"]
+        ],
+        params=dict(params),
+    )
+    g.validate()
+    return g
+
+
+def save_graph(graph: Graph, path: str) -> None:
+    """Serialize ``graph`` to directory ``path`` (model.json + weights.npz)."""
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "model.json"), "w") as f:
+        json.dump(graph_to_dict(graph), f, indent=1, sort_keys=True)
+    arrays = {k: np.asarray(v) for k, v in graph.params.items()}
+    np.savez(os.path.join(path, "weights.npz"), **arrays)
+
+
+def load_graph(path: str) -> Graph:
+    with open(os.path.join(path, "model.json")) as f:
+        d = json.load(f)
+    with np.load(os.path.join(path, "weights.npz")) as z:
+        params = {k: z[k] for k in z.files}
+    return graph_from_dict(d, params)

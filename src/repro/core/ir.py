@@ -1,0 +1,221 @@
+"""GraphIR — Orpheus-JAX's computation-graph intermediate representation.
+
+This is the analogue of the paper's ONNX-imported graph: a flat, explicitly
+named operator graph over which the simplification passes
+(:mod:`repro.core.passes`) run, and which the executor
+(:mod:`repro.core.executor`) lowers to a jitted JAX callable with per-node
+backend selection (:mod:`repro.core.registry`).
+
+Design notes
+------------
+* Values are identified by string names (SSA-ish: each value produced once).
+* ``Graph.params`` holds trained weights / constants as numpy or JAX arrays,
+  keyed by value name; graph *inputs* are the runtime-fed tensors.
+* ``value_info`` carries inferred ``TensorSpec`` metadata for every value —
+  populated by :func:`repro.core.passes.infer_shapes` and consumed by the
+  cost models and backend ``supports`` predicates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "TensorSpec",
+    "Node",
+    "Graph",
+    "GraphError",
+    "topological_order",
+]
+
+
+class GraphError(ValueError):
+    """Raised for malformed graphs (cycles, missing values, duplicate defs)."""
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """Shape/dtype metadata for a value in the graph."""
+
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+    @property
+    def nelems(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= int(d)
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.nelems * np.dtype(self.dtype).itemsize
+
+    def __repr__(self) -> str:  # compact: f32[1,3,224,224]
+        short = {"float32": "f32", "float16": "f16", "bfloat16": "bf16",
+                 "int32": "i32", "int8": "i8", "bool": "pred"}.get(self.dtype, self.dtype)
+        return f"{short}[{','.join(str(d) for d in self.shape)}]"
+
+
+@dataclass
+class Node:
+    """One operator application.
+
+    ``backend`` is an optional per-node override; when ``None`` the executor's
+    :class:`~repro.core.selector.BackendPolicy` decides (the paper's
+    runtime-selected implementation).
+    """
+
+    name: str
+    op: str
+    inputs: List[str]
+    outputs: List[str]
+    attrs: Dict[str, Any] = field(default_factory=dict)
+    backend: Optional[str] = None
+
+    def clone(self, **overrides: Any) -> "Node":
+        kw = dict(
+            name=self.name,
+            op=self.op,
+            inputs=list(self.inputs),
+            outputs=list(self.outputs),
+            attrs=dict(self.attrs),
+            backend=self.backend,
+        )
+        kw.update(overrides)
+        return Node(**kw)
+
+
+@dataclass
+class Graph:
+    """A named operator graph with parameters (weights) attached."""
+
+    name: str
+    inputs: Dict[str, TensorSpec]
+    outputs: List[str]
+    nodes: List[Node]
+    params: Dict[str, Any] = field(default_factory=dict)
+    value_info: Dict[str, TensorSpec] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------ #
+    # Introspection helpers
+    # ------------------------------------------------------------------ #
+    def producers(self) -> Dict[str, Node]:
+        """Map value name -> producing node. Raises on duplicate definition."""
+        out: Dict[str, Node] = {}
+        for node in self.nodes:
+            for v in node.outputs:
+                if v in out:
+                    raise GraphError(f"value {v!r} defined twice ({out[v].name}, {node.name})")
+                if v in self.inputs or v in self.params:
+                    raise GraphError(f"value {v!r} shadows a graph input/param")
+                out[v] = node
+        return out
+
+    def consumers(self) -> Dict[str, List[Node]]:
+        out: Dict[str, List[Node]] = {}
+        for node in self.nodes:
+            for v in node.inputs:
+                out.setdefault(v, []).append(node)
+        return out
+
+    def available_values(self) -> set:
+        vals = set(self.inputs) | set(self.params)
+        for node in self.nodes:
+            vals.update(node.outputs)
+        return vals
+
+    def spec_of(self, value: str) -> TensorSpec:
+        if value in self.value_info:
+            return self.value_info[value]
+        if value in self.inputs:
+            return self.inputs[value]
+        if value in self.params:
+            arr = self.params[value]
+            return TensorSpec(tuple(int(d) for d in np.shape(arr)), str(np.asarray(arr).dtype))
+        raise GraphError(f"no spec known for value {value!r}; run infer_shapes first")
+
+    # ------------------------------------------------------------------ #
+    # Validation
+    # ------------------------------------------------------------------ #
+    def validate(self) -> None:
+        """Check well-formedness: every input defined before use, no cycles,
+        outputs produced, no duplicate node names."""
+        self.producers()  # raises on duplicate value defs
+        names = set()
+        for node in self.nodes:
+            if node.name in names:
+                raise GraphError(f"duplicate node name {node.name!r}")
+            names.add(node.name)
+        available = set(self.inputs) | set(self.params)
+        for node in topological_order(self):
+            for v in node.inputs:
+                if v not in available:
+                    raise GraphError(f"node {node.name!r} uses undefined value {v!r}")
+            available.update(node.outputs)
+        for v in self.outputs:
+            if v not in available:
+                raise GraphError(f"graph output {v!r} is never produced")
+
+    def clone(self) -> "Graph":
+        return Graph(
+            name=self.name,
+            inputs=dict(self.inputs),
+            outputs=list(self.outputs),
+            nodes=[n.clone() for n in self.nodes],
+            params=dict(self.params),
+            value_info=dict(self.value_info),
+        )
+
+    def __repr__(self) -> str:
+        return (f"Graph({self.name!r}, {len(self.nodes)} nodes, "
+                f"{len(self.inputs)} inputs, {len(self.params)} params)")
+
+
+def topological_order(graph: Graph) -> List[Node]:
+    """Kahn's algorithm over value dependencies. Raises GraphError on cycles.
+
+    Nodes already in a valid order pass through stably (we seed the ready
+    queue in graph order), which keeps pass output deterministic.
+    """
+    produced_by: Dict[str, Node] = {}
+    for node in graph.nodes:
+        for v in node.outputs:
+            produced_by[v] = node
+
+    indegree: Dict[str, int] = {}
+    dependents: Dict[str, List[Node]] = {}
+    roots: List[Node] = []
+    base = set(graph.inputs) | set(graph.params)
+    for node in graph.nodes:
+        deps = {v for v in node.inputs if v not in base}
+        for v in deps:
+            if v not in produced_by:
+                raise GraphError(f"node {node.name!r} uses undefined value {v!r}")
+        indegree[node.name] = len(deps)
+        for v in deps:
+            dependents.setdefault(produced_by[v].name, []).append(node)
+        if not deps:
+            roots.append(node)
+
+    order: List[Node] = []
+    queue = list(roots)
+    seen = set()
+    while queue:
+        node = queue.pop(0)
+        if node.name in seen:
+            continue
+        seen.add(node.name)
+        order.append(node)
+        for dep in dependents.get(node.name, []):
+            indegree[dep.name] -= 1
+            if indegree[dep.name] == 0:
+                queue.append(dep)
+    if len(order) != len(graph.nodes):
+        missing = [n.name for n in graph.nodes if n.name not in seen]
+        raise GraphError(f"cycle detected involving nodes {missing[:5]}")
+    return order

@@ -1,0 +1,261 @@
+"""Graph simplification passes — the paper's "apply simplifications to the
+computation graph" layer (§I contribution 2).
+
+Passes are pure functions ``Graph -> Graph`` (input untouched).  The standard
+pipeline (:func:`simplify`) runs:
+
+    infer_shapes -> fold_constants -> fold_batchnorm -> fuse_bias_act
+                 -> eliminate_common_subexpr -> eliminate_dead -> infer_shapes
+
+All passes preserve graph semantics; ``tests/test_passes.py`` property-checks
+this with hypothesis-generated random graphs.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ir import Graph, GraphError, Node, TensorSpec, topological_order
+from repro.core.registry import get_impl, get_op
+
+__all__ = [
+    "infer_shapes",
+    "fold_constants",
+    "fold_batchnorm",
+    "fuse_bias_act",
+    "eliminate_dead",
+    "eliminate_common_subexpr",
+    "simplify",
+]
+
+
+# --------------------------------------------------------------------------- #
+def infer_shapes(graph: Graph) -> Graph:
+    """Populate ``value_info`` for every intermediate value."""
+    g = graph.clone()
+    g.validate()
+    info: Dict[str, TensorSpec] = {}
+
+    def spec(v: str) -> TensorSpec:
+        if v in info:
+            return info[v]
+        return g.spec_of(v)
+
+    for node in topological_order(g):
+        in_specs = [spec(v) for v in node.inputs]
+        try:
+            out_specs = get_op(node.op).shape_fn(in_specs, node.attrs)
+        except Exception as e:  # annotate which node failed
+            raise GraphError(f"shape inference failed at {node.name} ({node.op}): {e}") from e
+        if len(out_specs) != len(node.outputs):
+            raise GraphError(
+                f"{node.name}: shape_fn returned {len(out_specs)} specs for "
+                f"{len(node.outputs)} outputs")
+        for v, s in zip(node.outputs, out_specs):
+            info[v] = s
+    g.value_info = info
+    return g
+
+
+# --------------------------------------------------------------------------- #
+def fold_constants(graph: Graph, max_bytes: int = 1 << 27) -> Graph:
+    """Evaluate nodes whose inputs are all params/constants with the ``ref``
+    backend and promote results to params.  ``max_bytes`` caps the size of a
+    folded result so we never materialise something huge at import time."""
+    g = infer_shapes(graph)
+    const = set(g.params)
+    new_nodes: List[Node] = []
+    for node in topological_order(g):
+        if all(v in const for v in node.inputs) and node.op != "identity_barrier":
+            out_specs = [g.value_info[v] for v in node.outputs]
+            if sum(s.nbytes for s in out_specs) <= max_bytes:
+                fn = get_impl(node.op, "ref")
+                vals = fn([np.asarray(g.params[v]) for v in node.inputs], node.attrs)
+                for v, val in zip(node.outputs, vals):
+                    g.params[v] = np.asarray(val)
+                    const.add(v)
+                continue
+        new_nodes.append(node)
+    g.nodes = new_nodes
+    # params that were only consumed by folded nodes get cleaned by DCE
+    return eliminate_dead(g)
+
+
+# --------------------------------------------------------------------------- #
+def fold_batchnorm(graph: Graph) -> Graph:
+    """Fold inference batchnorm into a preceding conv2d when the conv weight
+    and all BN stats are graph params:  w' = w * s,  b' = (bias - mean*s)
+    with s = scale / sqrt(var + eps), broadcast over output channels.
+
+    Produces a ``conv2d_fused`` node (bias folded in, act 'none') so a later
+    activation can still fuse into it."""
+    g = infer_shapes(graph)
+    producers = g.producers()
+    consumers = g.consumers()
+    replaced: Dict[str, Node] = {}
+    drop: set = set()
+    for node in g.nodes:
+        if node.op != "batchnorm":
+            continue
+        x = node.inputs[0]
+        prev = producers.get(x)
+        if prev is None or prev.op != "conv2d" or len(consumers.get(x, [])) != 1:
+            continue
+        wname = prev.inputs[1]
+        stats = node.inputs[1:]
+        if wname not in g.params or any(s not in g.params for s in stats):
+            continue
+        w = np.asarray(g.params[wname], dtype=np.float64)
+        scale, bias, mean, var = (np.asarray(g.params[s], dtype=np.float64) for s in stats)
+        eps = float(node.attrs.get("eps", 1e-5))
+        s = scale / np.sqrt(var + eps)
+        w_f = (w * s[None, None, None, :]).astype(np.asarray(g.params[wname]).dtype)
+        b_f = (bias - mean * s).astype(np.asarray(g.params[wname]).dtype)
+        new_w = f"{prev.name}.folded_w"
+        new_b = f"{prev.name}.folded_b"
+        g.params[new_w] = w_f
+        g.params[new_b] = b_f
+        fused = Node(name=f"{prev.name}.bnfold", op="conv2d_fused",
+                     inputs=[prev.inputs[0], new_w, new_b],
+                     outputs=list(node.outputs),
+                     attrs={**prev.attrs, "act": "none"},
+                     backend=prev.backend)
+        replaced[prev.name] = fused
+        drop.add(node.name)
+    if not replaced:
+        return g
+    new_nodes = []
+    for node in g.nodes:
+        if node.name in drop:
+            continue
+        new_nodes.append(replaced.get(node.name, node))
+    g.nodes = new_nodes
+    return eliminate_dead(infer_shapes(g))
+
+
+# --------------------------------------------------------------------------- #
+_ACTS = {"relu", "relu6", "gelu", "silu", "sigmoid", "tanh"}
+_FUSABLE = {"conv2d": "conv2d_fused", "conv2d_fused": "conv2d_fused",
+            "dense": "dense_fused", "dense_fused": "dense_fused"}
+
+
+def fuse_bias_act(graph: Graph) -> Graph:
+    """Pattern-fuse  (conv2d|dense) [-> bias_add] [-> activation]  into the
+    corresponding fused op.  Only fires when the intermediate value has a
+    single consumer (otherwise fusing would duplicate work)."""
+    g = infer_shapes(graph)
+    changed = True
+    while changed:
+        changed = False
+        producers = g.producers()
+        consumers = g.consumers()
+
+        def sole_consumer(v: str) -> Optional[Node]:
+            cs = consumers.get(v, [])
+            return cs[0] if len(cs) == 1 and v not in g.outputs else None
+
+        for node in list(g.nodes):
+            if node.op not in _FUSABLE:
+                continue
+            out = node.outputs[0]
+            nxt = sole_consumer(out)
+            if nxt is None:
+                continue
+            fused: Optional[Node] = None
+            if nxt.op == "bias_add" and nxt.inputs[0] == out and node.op in ("conv2d", "dense"):
+                fused = Node(name=f"{node.name}.fb", op=_FUSABLE[node.op],
+                             inputs=list(node.inputs) + [nxt.inputs[1]],
+                             outputs=list(nxt.outputs),
+                             attrs={**node.attrs, "act": "none"}, backend=node.backend)
+            elif nxt.op in _ACTS and node.op in ("conv2d_fused", "dense_fused") \
+                    and node.attrs.get("act", "none") in ("none", None):
+                fused = node.clone(name=f"{node.name}.fa",
+                                   outputs=list(nxt.outputs),
+                                   attrs={**node.attrs, "act": nxt.op})
+            if fused is not None:
+                g.nodes = [n for n in g.nodes if n.name not in (node.name, nxt.name)]
+                g.nodes.append(fused)
+                g.nodes = topological_order(g)
+                g = infer_shapes(g)
+                changed = True
+                break
+    return g
+
+
+# --------------------------------------------------------------------------- #
+def eliminate_dead(graph: Graph) -> Graph:
+    """Drop nodes (and params) that do not contribute to graph outputs."""
+    g = graph.clone()
+    producers = g.producers()
+    live_vals: set = set(g.outputs)
+    live_nodes: set = set()
+    stack = [v for v in g.outputs]
+    while stack:
+        v = stack.pop()
+        node = producers.get(v)
+        if node is None or node.name in live_nodes:
+            continue
+        live_nodes.add(node.name)
+        for u in node.inputs:
+            if u not in live_vals:
+                live_vals.add(u)
+                stack.append(u)
+    g.nodes = [n for n in g.nodes if n.name in live_nodes]
+    g.params = {k: v for k, v in g.params.items() if k in live_vals}
+    g.value_info = {k: v for k, v in g.value_info.items()
+                    if k in live_vals or k in g.inputs}
+    return g
+
+
+# --------------------------------------------------------------------------- #
+def _node_key(node: Node) -> Tuple:
+    def freeze(x: Any):
+        if isinstance(x, dict):
+            return tuple(sorted((k, freeze(v)) for k, v in x.items()))
+        if isinstance(x, (list, tuple)):
+            return tuple(freeze(v) for v in x)
+        if isinstance(x, np.ndarray):
+            return ("ndarray", x.shape, str(x.dtype), x.tobytes())
+        return x
+
+    return (node.op, tuple(node.inputs), freeze(node.attrs))
+
+
+def eliminate_common_subexpr(graph: Graph) -> Graph:
+    """Merge structurally identical nodes (same op, inputs, attrs)."""
+    g = graph.clone()
+    seen: Dict[Tuple, Node] = {}
+    rename: Dict[str, str] = {}
+    new_nodes: List[Node] = []
+    for node in topological_order(g):
+        node = node.clone(inputs=[rename.get(v, v) for v in node.inputs])
+        key = _node_key(node)
+        if key in seen:
+            keep = seen[key]
+            for old, new in zip(node.outputs, keep.outputs):
+                rename[old] = new
+        else:
+            seen[key] = node
+            new_nodes.append(node)
+    g.nodes = new_nodes
+    g.outputs = [rename.get(v, v) for v in g.outputs]
+    return eliminate_dead(g)
+
+
+# --------------------------------------------------------------------------- #
+def simplify(graph: Graph, *, fold_bn: bool = True, fuse: bool = True,
+             fold_const: bool = True, cse: bool = True) -> Graph:
+    """The standard import-time simplification pipeline."""
+    g = infer_shapes(graph)
+    if fold_const:
+        g = fold_constants(g)
+    if fold_bn:
+        g = fold_batchnorm(g)
+    if fuse:
+        g = fuse_bias_act(g)
+    if cse:
+        g = eliminate_common_subexpr(g)
+    g = eliminate_dead(g)
+    return infer_shapes(g)

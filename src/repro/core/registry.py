@@ -1,0 +1,163 @@
+"""Backend registry — the heart of the Orpheus programming model.
+
+Layers/operators are first-class citizens: every op is declared once
+(:func:`defop`, with a shape function and an analytic cost model) and may
+carry *multiple implementations* ("backends") registered independently
+(:func:`impl`).  Which implementation runs is decided at execution time by a
+:class:`~repro.core.selector.BackendPolicy` — fixed assignment, cost-model
+argmin, or autotuning — exactly the paper's runtime layer-implementation
+selection, adapted to a traced/compiled setting.
+
+Backends used across the repo:
+
+* ``ref``    — pure ``jax.numpy`` reference (always registered first; the
+               oracle every other backend is tested against).
+* ``xla``    — the "third-party library" backend: XLA's own fused lowerings
+               (``lax.conv_general_dilated``, ``lax.dot_general`` …).
+* ``pallas`` — hand-written TPU kernels (``pl.pallas_call`` + BlockSpec),
+               registered by :mod:`repro.kernels.ops` on import.
+
+The analytic cost models double as the roofline tool's source of truth for
+FLOPs/bytes inside Pallas custom calls (XLA cost analysis cannot see into
+them).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from repro.core.ir import TensorSpec
+
+__all__ = [
+    "Cost",
+    "OpImpl",
+    "OpDef",
+    "defop",
+    "impl",
+    "get_op",
+    "get_impl",
+    "backends_for",
+    "registered_ops",
+    "RegistryError",
+]
+
+
+class RegistryError(KeyError):
+    pass
+
+
+@dataclass(frozen=True)
+class Cost:
+    """Analytic per-call cost: floating-point ops and HBM bytes moved."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __add__(self, other: "Cost") -> "Cost":
+        return Cost(self.flops + other.flops, self.bytes + other.bytes)
+
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(self.bytes, 1.0)
+
+
+ShapeFn = Callable[[Sequence[TensorSpec], Dict[str, Any]], List[TensorSpec]]
+CostFn = Callable[[Sequence[TensorSpec], Dict[str, Any]], Cost]
+ImplFn = Callable[[Sequence[Any], Dict[str, Any]], Sequence[Any]]
+SupportsFn = Callable[[Sequence[TensorSpec], Dict[str, Any]], bool]
+
+
+@dataclass
+class OpImpl:
+    op: str
+    backend: str
+    fn: ImplFn
+    supports: SupportsFn
+    note: str = ""
+    # Optional per-implementation cost override, for backends whose ALGORITHM
+    # changes the op's flop count (e.g. winograd conv: 2.25x fewer multiplies).
+    cost_fn: Optional[CostFn] = None
+
+    def __call__(self, inputs: Sequence[Any], attrs: Dict[str, Any]) -> Sequence[Any]:
+        return self.fn(inputs, attrs)
+
+    def cost(self, specs: Sequence[TensorSpec], attrs: Dict[str, Any]) -> "Cost":
+        fn = self.cost_fn or get_op(self.op).cost_fn
+        return fn(specs, attrs)
+
+
+@dataclass
+class OpDef:
+    name: str
+    shape_fn: ShapeFn
+    cost_fn: CostFn
+    impls: Dict[str, OpImpl] = field(default_factory=dict)
+    doc: str = ""
+
+
+_OPS: Dict[str, OpDef] = {}
+
+
+def defop(name: str, shape_fn: ShapeFn, cost_fn: CostFn, doc: str = "") -> OpDef:
+    """Declare an operator. Idempotent on identical redefinition is NOT
+    allowed — ops are declared exactly once (helps catch import mistakes)."""
+    if name in _OPS:
+        raise RegistryError(f"op {name!r} already declared")
+    op = OpDef(name=name, shape_fn=shape_fn, cost_fn=cost_fn, doc=doc)
+    _OPS[name] = op
+    return op
+
+
+def impl(op: str, backend: str, *, supports: Optional[SupportsFn] = None,
+         note: str = "", cost_fn: Optional[CostFn] = None) -> Callable[[ImplFn], ImplFn]:
+    """Decorator registering ``fn`` as the ``backend`` implementation of ``op``.
+
+    Re-registration of the same (op, backend) replaces the previous impl —
+    this is deliberate: it is how a third-party module overrides a stock
+    backend (the paper's "easy integration" property).
+    """
+
+    def wrap(fn: ImplFn) -> ImplFn:
+        if op not in _OPS:
+            raise RegistryError(f"op {op!r} not declared; call defop first")
+        _OPS[op].impls[backend] = OpImpl(
+            op=op, backend=backend, fn=fn,
+            supports=supports or (lambda specs, attrs: True), note=note,
+            cost_fn=cost_fn)
+        return fn
+
+    return wrap
+
+
+def get_op(name: str) -> OpDef:
+    try:
+        return _OPS[name]
+    except KeyError:
+        raise RegistryError(f"unknown op {name!r}; known: {sorted(_OPS)}") from None
+
+
+def get_impl(name: str, backend: str) -> OpImpl:
+    op = get_op(name)
+    try:
+        return op.impls[backend]
+    except KeyError:
+        raise RegistryError(
+            f"op {name!r} has no backend {backend!r}; available: {sorted(op.impls)}"
+        ) from None
+
+
+def backends_for(name: str, specs: Optional[Sequence[TensorSpec]] = None,
+                 attrs: Optional[Dict[str, Any]] = None) -> List[str]:
+    """Backends registered for ``name``; filtered by ``supports`` when specs
+    are given. ``ref`` sorts first so tests/selectors treat it as baseline."""
+    op = get_op(name)
+    names = sorted(op.impls, key=lambda b: (b != "ref", b))
+    if specs is None:
+        return names
+    attrs = attrs or {}
+    return [b for b in names if op.impls[b].supports(specs, attrs)]
+
+
+def registered_ops() -> List[str]:
+    return sorted(_OPS)

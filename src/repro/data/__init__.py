@@ -1,0 +1,6 @@
+"""Data pipeline: deterministic synthetic stream, packing, prefetch."""
+
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import SyntheticLM, pack_documents
+
+__all__ = ["PrefetchLoader", "SyntheticLM", "pack_documents"]

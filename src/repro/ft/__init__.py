@@ -1,0 +1,7 @@
+"""Fault tolerance: straggler watchdog, hang detection, membership/elastic."""
+
+from repro.ft.coordinator import Coordinator, plan_mesh_after_failure
+from repro.ft.watchdog import HangDetector, StepWatchdog
+
+__all__ = ["Coordinator", "plan_mesh_after_failure", "HangDetector",
+           "StepWatchdog"]

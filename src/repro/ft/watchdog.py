@@ -1,0 +1,80 @@
+"""Straggler / hang detection for the training loop.
+
+``StepWatchdog`` tracks per-step wall times and flags stragglers against a
+rolling median (real fleets: a slow HBM or thermal-throttled chip shows up
+exactly like this).  ``HangDetector`` arms a timer around each step; if a
+step exceeds the deadline the registered callback fires (checkpoint and
+abort, typically) — on a real cluster that converts a hung collective into
+a clean restart instead of a silent stall.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, List, Optional
+
+__all__ = ["StepWatchdog", "HangDetector"]
+
+
+@dataclass
+class StepWatchdog:
+    window: int = 50
+    threshold: float = 2.0     # x median => straggler
+    _times: Deque[float] = field(default_factory=deque)
+    stragglers: List[int] = field(default_factory=list)
+    _step: int = 0
+    _t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record one step; returns True if it was a straggler."""
+        assert self._t0 is not None, "start() not called"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        self._step += 1
+        is_straggler = False
+        if len(self._times) >= 5:
+            med = sorted(self._times)[len(self._times) // 2]
+            if dt > self.threshold * med:
+                self.stragglers.append(self._step)
+                is_straggler = True
+        self._times.append(dt)
+        if len(self._times) > self.window:
+            self._times.popleft()
+        return is_straggler
+
+    @property
+    def median(self) -> float:
+        if not self._times:
+            return 0.0
+        return sorted(self._times)[len(self._times) // 2]
+
+
+class HangDetector:
+    """Arms a deadline around a step; fires ``on_hang`` if exceeded."""
+
+    def __init__(self, timeout: float, on_hang: Callable[[], None]):
+        self.timeout = timeout
+        self.on_hang = on_hang
+        self._timer: Optional[threading.Timer] = None
+        self.fired = False
+
+    def __enter__(self):
+        def fire():
+            self.fired = True
+            self.on_hang()
+
+        self._timer = threading.Timer(self.timeout, fire)
+        self._timer.daemon = True
+        self._timer.start()
+        return self
+
+    def __exit__(self, *exc):
+        if self._timer is not None:
+            self._timer.cancel()
+        return False

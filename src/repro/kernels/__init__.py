@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the performance-critical ops, each with a pure-jnp
+oracle (:mod:`repro.kernels.ref`) and a registry-integrated jit'd wrapper
+(:mod:`repro.kernels.ops`).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU via ``interpret=True``.
+"""
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_decode import flash_decode, flash_decode_partial
+from repro.kernels.gemm import batched_gemm, gemm
+from repro.kernels.rmsnorm import rmsnorm as rmsnorm_kernel
+from repro.kernels.ssd import ssd_scan
+
+__all__ = [
+    "flash_attention", "flash_decode", "flash_decode_partial",
+    "batched_gemm", "gemm", "rmsnorm_kernel", "ssd_scan",
+]

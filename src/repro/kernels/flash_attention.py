@@ -1,0 +1,148 @@
+"""Flash attention (prefill/training-forward) as a Pallas TPU kernel.
+
+Blockwise-softmax attention tiled for VMEM: the query block, one KV block,
+and the f32 accumulator live in VMEM; the (Sq x Skv) score matrix is never
+materialised in HBM.  Grid = (batch*q_heads, Sq/bq, Skv/bkv) with the KV
+axis innermost — TPU grid iteration is sequential, so the running max /
+sum-of-exp / accumulator scratch carries across KV blocks of one query block
+(the classic online-softmax recurrence).
+
+GQA is handled by index maps (each q head reads its kv head h // group);
+KV is never materialised repeated.  Causal and sliding-window masks skip
+fully-masked KV blocks with ``pl.when`` (no MXU work issued for them).
+
+Block sizes default to (bq, bkv) = (256, 512), clamped to the sequence
+lengths; head_dim is used as-is (Mosaic pads the lane dim to 128 — full MXU
+efficiency needs D % 128 == 0, true for 7/10 assigned archs; see DESIGN.md).
+
+VMEM budget at defaults, D=128, f32 scratch: q 256x128x4 + kv 2x512x128x4
++ acc 256x128x4 + m/l 2x256x128x4 ≈ 1.0 MB — comfortably inside 16 MB, and
+Pallas double-buffers the KV streams automatically.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  bq: int, bkv: int, n_kv_blocks: int, q_offset: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # absolute positions of this block's first row/col
+    row0 = qi * bq + q_offset
+    col0 = ki * bkv
+    # any (row, col) pair live in this block?
+    live = jnp.bool_(True)
+    if causal:
+        live &= (row0 + bq - 1) >= col0          # max row reaches min col
+    if window is not None:
+        live &= (col0 + bkv - 1) > (row0 - window)  # max col inside min row's window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
+        v = v_ref[0].astype(jnp.float32)                  # (bkv, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq,bkv)
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = jnp.ones((bq, bkv), dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (bq, bkv)
+        l_ref[:, :1] = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 256, block_kv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q (B, Sq, Hq, D), k/v (B, Skv, Hkv, D) -> (B, Sq, Hq, D).
+
+    Query row i sits at absolute position (Skv - Sq + i), matching
+    ``ref.attention_ref`` (relevant for chunked prefill where Sq < Skv).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[3]  # may differ from d (MLA: qk_dim 192 vs v_dim 128)
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    bq = min(block_q, sq)
+    bkv = min(block_kv, skv)
+    assert sq % bq == 0 and skv % bkv == 0, (
+        f"seq lengths must divide block sizes: {sq}%{bq}, {skv}%{bkv}")
+    nq, nkv = sq // bq, skv // bkv
+
+    # (B, S, H, D) -> (B*H, S, D): head-major layout keeps index maps trivial.
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, dv)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // group, ki, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, n_kv_blocks=nkv, q_offset=skv - sq)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bkv, d), kv_map),
+            pl.BlockSpec((1, bkv, dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),   # acc
+            pltpu.VMEM((bq, 128), jnp.float32),  # running max (col 0 used)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running sum-of-exp
+        ],
+        interpret=interpret,
+        name="flash_attention",
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq, dv).transpose(0, 2, 1, 3)

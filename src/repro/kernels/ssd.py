@@ -1,0 +1,119 @@
+"""Mamba2 SSD (state-space duality) chunked scan as a Pallas TPU kernel.
+
+The SSD insight (Dao & Gu, 2024): a scalar-decay SSM over a chunk of Q steps
+equals a small masked "attention" inside the chunk plus a rank-stable state
+carried between chunks.  That maps perfectly onto the TPU: the intra-chunk
+part is three MXU matmuls of shape (Q,N)x(N,Q), (Q,Q)x(Q,P), (Q,N)^T x (Q,P),
+and the inter-chunk carry is a sequential grid axis with the (P,N) state
+held in VMEM scratch — no HBM round-trip for the state, ever.
+
+Grid = (B, H, S/Q); the chunk axis is innermost/sequential.  B/C projections
+are shared across heads in a group (G groups) and are read through index
+maps — never materialised per-head in HBM.
+
+Decay math is done in log space: the kernel receives la = dt * A (negative)
+and uses exp(cumsum) differences, which is exact and underflow-safe.
+
+All compute f32; inputs may be bf16.  The final SSM state (B,H,P,N) is also
+emitted so prefill can hand off to step-wise decode.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+__all__ = ["ssd_scan"]
+
+
+def _ssd_kernel(xbar_ref, la_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xb = xbar_ref[0, :, 0].astype(jnp.float32)    # (Q, P)
+    la = la_ref[0, :, 0:1].astype(jnp.float32)    # (Q, 1) log-decay
+    Bc = b_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+    Cc = c_ref[0, :, 0].astype(jnp.float32)       # (Q, N)
+
+    cs = jnp.cumsum(la, axis=0)                   # (Q, 1) inclusive log decay
+    # intra-chunk: y[i] = sum_{j<=i} exp(cs_i - cs_j) (C_i . B_j) xbar_j
+    smat = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (Q,Q)
+    dec = cs - cs.T                               # (Q, Q): cs_i - cs_j
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(cols <= rows, jnp.exp(dec), 0.0)
+    y_intra = jax.lax.dot_general(smat * L, xb, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)  # (Q,P)
+    # inter-chunk: y[i] += exp(cs_i) * C_i @ state^T   (state: (P,N))
+    y_inter = jax.lax.dot_general(Cc, state_ref[...], (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) * jnp.exp(cs)
+    y_ref[0, :, 0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+    # state' = exp(cs_last) * state + sum_j exp(cs_last - cs_j) xbar_j B_j^T
+    w = jnp.exp(cs[-1:] - cs)                     # (Q, 1)
+    state_ref[...] = (state_ref[...] * jnp.exp(cs[-1, 0])
+                      + jax.lax.dot_general(xb * w, Bc, (((0,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32))
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, D: Optional[jax.Array] = None, *,
+             chunk: int = 128, interpret: bool = False
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Shapes as in ``ref.ssd_ref``:
+    x (B,S,H,P), dt (B,S,H), A (H,), B/C (B,S,G,N) -> y (B,S,H,P),
+    final state (B,H,P,N)."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert h % g == 0
+    hpg = h // g
+    q = min(chunk, s)
+    assert s % q == 0, f"seq {s} must divide chunk {q}"
+    nc = s // q
+
+    # precompute in plain JAX (cheap, elementwise): log-decay & dt-scaled x
+    la = dt.astype(jnp.float32) * A.astype(jnp.float32)[None, None, :]  # (B,S,H)
+    xbar = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]    # (B,S,H,P)
+
+    kernel = functools.partial(_ssd_kernel, chunk=q, n_chunks=nc)
+    # grid (B, H, nc); chunk axis innermost => sequential state carry
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, q, 1, n), lambda bi, hi, ci, _hpg=hpg: (bi, ci, hi // _hpg, 0)),
+            pl.BlockSpec((1, q, 1, n), lambda bi, hi, ci, _hpg=hpg: (bi, ci, hi // _hpg, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+        name="ssd_scan",
+    )(xbar, la, B, C)
+    if D is not None:
+        y = (y.astype(jnp.float32)
+             + x.astype(jnp.float32) * D.astype(jnp.float32)[None, None, :, None]
+             ).astype(x.dtype)
+    return y, state

@@ -1,0 +1,10 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: repro.launch.dryrun must be imported/run as the FIRST jax touch in a
+process (it sets --xla_force_host_platform_device_count=512); don't import
+it from library code.
+"""
+
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

@@ -1,0 +1,133 @@
+"""Cell builders: (architecture x input shape) -> lowerable step + arg specs.
+
+A *cell* is one entry of the assigned 10x4 grid.  ``build_cell`` returns
+everything the dry-run needs: the jitted+sharded step function and
+ShapeDtypeStruct stand-ins for every argument (params, optimizer state,
+batch, caches — no device allocation anywhere).
+
+Step kinds:
+  train    -> train_step  (fwd + bwd + AdamW update, bf16 params/f32 master)
+  prefill  -> serve prefill (forward + cache build)
+  decode   -> serve decode  (ONE new token vs a seq_len-deep cache)
+
+Enc-dec conventions (seamless): train splits seq_len into src=tgt=S/2;
+prefill encodes S frames + 1k decoder prefill; decode runs the decoder
+against S-deep cross-attention KV with a 1k self cache.  Frontend stubs
+(audio/vlm): embeds inputs replace token ids where the config says so.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.serve import make_decode_step, serve_shardings
+from repro.runtime.train import make_train_step, train_state_shardings
+from repro.sharding.specs import batch_specs, data_axes, named_shardings
+
+__all__ = ["build_cell", "Cell", "DEC_SELF_CAP"]
+
+DEC_SELF_CAP = 1024       # enc-dec decoder self-attention cache at decode
+ENC_DEC_PREFILL_TGT = 1024
+
+
+@dataclass
+class Cell:
+    name: str
+    arch: str
+    shape: str
+    kind: str
+    step: Callable           # jitted, sharded
+    args: Tuple[Any, ...]    # ShapeDtypeStruct pytrees
+    model: Any
+    cfg: ArchConfig
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _train_batch_specs(cfg: ArchConfig, sc: ShapeCfg) -> Dict[str, Any]:
+    b, s = sc.global_batch, sc.seq_len
+    if cfg.n_encoder_layers:
+        half = s // 2
+        return {"src_embeds": _sds((b, half, cfg.d_model), cfg.dtype),
+                "tokens": _sds((b, half), "int32"),
+                "labels": _sds((b, half), "int32")}
+    if cfg.frontend == "embeds":
+        return {"embeds": _sds((b, s, cfg.d_model), cfg.dtype),
+                "labels": _sds((b, s), "int32")}
+    return {"tokens": _sds((b, s), "int32"),
+            "labels": _sds((b, s), "int32")}
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               cfg: Optional[ArchConfig] = None,
+               seq_shard_fallback: bool = True) -> Cell:
+    cfg = cfg or get_config(arch)
+    sc = cfg.shape(shape_name)
+    if shape_name in cfg.skip_shapes:
+        raise ValueError(f"{arch}: shape {shape_name} is documented-skip "
+                         f"(see DESIGN.md §4)")
+    model = EncDec(cfg) if cfg.n_encoder_layers else LM(cfg)
+    params_sds = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+
+    if sc.kind == "train":
+        batch = _train_batch_specs(cfg, sc)
+        opt_cfg = AdamWConfig()
+        step = make_train_step(model, cfg, opt_cfg, mesh=mesh,
+                               batch_example=batch)
+        opt_sds = jax.eval_shape(partial(adamw.init, cfg=opt_cfg), params_sds)
+        return Cell(f"{arch}/{shape_name}", arch, shape_name, "train",
+                    step, (params_sds, opt_sds, batch), model, cfg)
+
+    if sc.kind == "prefill":
+        b, s = sc.global_batch, sc.seq_len
+        if cfg.n_encoder_layers:
+            inputs = {"src_embeds": _sds((b, s, cfg.d_model), cfg.dtype),
+                      "tokens": _sds((b, ENC_DEC_PREFILL_TGT), "int32")}
+            cap = ENC_DEC_PREFILL_TGT
+            def step_fn(params, inp):
+                return model.prefill(params, inp, cache_cap=cap)
+        elif cfg.frontend == "embeds":
+            inputs = {"embeds": _sds((b, s, cfg.d_model), cfg.dtype)}
+            def step_fn(params, inp):
+                return model.prefill(params, inp, cache_cap=s)
+        else:
+            inputs = {"tokens": _sds((b, s), "int32")}
+            def step_fn(params, inp):
+                return model.prefill(params, inp, cache_cap=s)
+        from repro.sharding.specs import param_specs
+        p_sh = named_shardings(param_specs(params_sds, cfg, mesh), mesh)
+        b_sh = named_shardings(batch_specs(inputs, mesh), mesh)
+        step = jax.jit(step_fn, in_shardings=(p_sh, b_sh))
+        return Cell(f"{arch}/{shape_name}", arch, shape_name, "prefill",
+                    step, (params_sds, inputs), model, cfg)
+
+    # ---- decode ----
+    b, s = sc.global_batch, sc.seq_len
+    enc_len = s if cfg.n_encoder_layers else 0
+    cap = DEC_SELF_CAP if cfg.n_encoder_layers else s
+    step = make_decode_step(model, cfg, mesh=mesh, batch=b, cache_cap=cap,
+                            enc_len=enc_len,
+                            seq_shard_fallback=seq_shard_fallback)
+    if cfg.n_encoder_layers:
+        caches_sds = jax.eval_shape(
+            partial(model.init_caches, b, cap, enc_len))
+    else:
+        caches_sds = jax.eval_shape(partial(model.init_caches, b, cap))
+    tokens = _sds((b,), "int32")
+    lengths = _sds((b,), "int32")
+    return Cell(f"{arch}/{shape_name}", arch, shape_name, "decode",
+                step, (params_sds, tokens, caches_sds, lengths), model, cfg)

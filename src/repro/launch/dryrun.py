@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell on the production meshes, with 512 placeholder host devices.
+
+THIS FILE ONLY sets --xla_force_host_platform_device_count (above, before
+any other import — jax locks the device count at first init).  Smoke tests
+and benches see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b   # one arch
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b \
+      --shape decode_32k --mesh multipod
+  PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Per cell it records compile success, compiled.memory_analysis(),
+cost_analysis() and the per-chip collective wire bytes (parsed from the
+post-SPMD HLO) into experiments/dryrun/<arch>__<shape>__<mesh>.json —
+the roofline table (EXPERIMENTS.md §Roofline) is generated from these.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, list_configs  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.tools.roofline import analyze, model_flops_for  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str = OUT_DIR, save_hlo: bool = False) -> dict:
+    cfg = get_config(arch)
+    sc = cfg.shape(shape_name)
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.size
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "status": "unknown"}
+    try:
+        if shape_name in cfg.skip_shapes:
+            rec["status"] = "skipped"
+            rec["reason"] = "documented skip (full attention arch; DESIGN.md §4)"
+            return _save(rec, out_dir)
+        from repro.models.stack import unroll_scans
+        with mesh, unroll_scans():
+            # unroll the layer scan: XLA cost_analysis counts loop bodies
+            # once, which would undercount FLOPs/collectives by ~n_layers
+            cell = build_cell(arch, shape_name, mesh)
+            lowered = cell.step.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis() or {}
+            hlo = compiled.as_text()
+        # memory_analysis runs on the per-device partitioned module: sizes
+        # are already per-device (verified against sharded param math).
+        per_device_bytes = (mem.argument_size_in_bytes
+                            + mem.output_size_in_bytes
+                            + mem.temp_size_in_bytes
+                            - mem.alias_size_in_bytes)
+        report = analyze(
+            cell.name, mesh_kind, chips, cost, hlo,
+            model_flops=model_flops_for(cfg, sc.kind, sc.seq_len,
+                                        sc.global_batch),
+            bytes_per_device=per_device_bytes)
+        rec.update(json.loads(report.to_json()))
+        rec["status"] = "ok"
+        rec["kind"] = sc.kind
+        rec["seq_len"] = sc.seq_len
+        rec["global_batch"] = sc.global_batch
+        rec["memory_analysis"] = {
+            "argument_size_in_bytes": mem.argument_size_in_bytes,
+            "output_size_in_bytes": mem.output_size_in_bytes,
+            "temp_size_in_bytes": mem.temp_size_in_bytes,
+            "alias_size_in_bytes": mem.alias_size_in_bytes,
+            "generated_code_size_in_bytes": mem.generated_code_size_in_bytes,
+        }
+        rec["lower_s"] = round(t_lower, 2)
+        rec["compile_s"] = round(t_compile, 2)
+        if save_hlo:
+            rec["hlo_path"] = os.path.join(
+                out_dir, f"{arch}__{shape_name}__{mesh_kind}.hlo")
+            with open(rec["hlo_path"], "w") as f:
+                f.write(hlo)
+        print(f"[ok]   {arch:24s} {shape_name:12s} {mesh_kind:9s} "
+              f"flops={rec['hlo_flops']:.3e} wire={rec['wire_bytes_per_chip']:.3e} "
+              f"bottleneck={rec['bottleneck']} ({t_lower:.0f}+{t_compile:.0f}s)")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[FAIL] {arch:24s} {shape_name:12s} {mesh_kind:9s} {rec['error']}")
+    return _save(rec, out_dir)
+
+
+def _save(rec: dict, out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True, default=str)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_configs()
+    meshes = (["single", "multipod"] if args.mesh == "both" else [args.mesh])
+    if args.list:
+        for a in archs:
+            cfg = get_config(a)
+            for s in cfg.shapes:
+                skip = " (skip)" if s.name in cfg.skip_shapes else ""
+                print(f"{a:24s} {s.name:12s} {s.kind:8s}{skip}")
+        return 0
+
+    n_fail = 0
+    for a in archs:
+        cfg = get_config(a)
+        shapes = [args.shape] if args.shape else [s.name for s in cfg.shapes]
+        for s in shapes:
+            for m in meshes:
+                rec = run_cell(a, s, m, out_dir=args.out,
+                               save_hlo=args.save_hlo)
+                if rec["status"] == "error":
+                    n_fail += 1
+    print(f"done; {n_fail} failures")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,4 @@
+"""Composable NN layers (functional: init/apply pairs), all dispatching
+matmuls and mixers through the Orpheus backend registry."""
+
+from repro.layers import attention, common, mlp, moe, ssm  # noqa: F401

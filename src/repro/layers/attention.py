@@ -1,0 +1,305 @@
+"""Attention blocks: GQA (global + sliding-window), MLA (DeepSeek-V2),
+cross-attention (enc-dec), and Zamba2-style shared blocks.
+
+Three modes share one code path per variant:
+
+* ``train``   — full-sequence causal attention, no cache.
+* ``prefill`` — same compute; additionally returns the KV cache.
+* ``decode``  — one new token per sequence against the cache.
+
+Cache layout (per block):
+  global attn:  {"k","v"}: (B, cap, Hkv, Dh) with cap = max context
+  local  attn:  rolling buffer, cap = window; slot = position % cap
+  MLA:          {"ckv": (B, cap, rank), "kpe": (B, cap, rope_dim)} — the
+                latent cache (the whole point of MLA: 576 vs 2*H*Dh floats
+                per token); decode uses the absorbed-matmul trick and runs
+                MQA-style flash-decode over the latent.
+  cross attn:   encoder K/V computed once at prefill, read-only afterwards.
+
+``lengths`` (B,) counts valid cache entries BEFORE the current decode step;
+the new token is written at slot ``lengths`` (mod cap for local) and
+attention runs over ``lengths + 1`` entries.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.layers.common import apply_rope, dense, dense_init, rope_for_seq, rope_table
+
+Params = Dict[str, Any]
+Cache = Optional[Dict[str, jax.Array]]
+
+
+# --------------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------------- #
+
+def attn_init(key: jax.Array, cfg: ArchConfig, *, cross: bool = False,
+              dtype=jnp.float32) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, hq * dh, dtype=dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype=dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype=dtype),
+        "wo": dense_init(ks[3], hq * dh, d, dtype=dtype),
+    }
+
+
+def mla_init(key: jax.Array, cfg: ArchConfig, *, dtype=jnp.float32) -> Params:
+    d, hq = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], d, hq * m.qk_dim, dtype=dtype),
+        "wdkv": dense_init(ks[1], d, m.kv_lora_rank, dtype=dtype),
+        "wkpe": dense_init(ks[2], d, m.rope_dim, dtype=dtype),
+        # up-projections from the latent, per head
+        "wuk": dense_init(ks[3], m.kv_lora_rank, hq * m.nope_dim, dtype=dtype),
+        "wuv": dense_init(ks[4], m.kv_lora_rank, hq * m.v_dim, dtype=dtype),
+        "wo": dense_init(jax.random.fold_in(key, 9), hq * m.v_dim, d, dtype=dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# GQA attention (global / sliding window / cross)
+# --------------------------------------------------------------------------- #
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def _replicate_q_if_seq_sharded_cache(q: jax.Array, n_kv: int,
+                                      batch: int) -> jax.Array:
+    """Decode perf fix (EXPERIMENTS.md §Perf-1b): when kv heads don't divide
+    the model axis the cache is sequence-sharded over "model"
+    (sharding/specs.py).  Column-parallel wq leaves q HEAD-sharded, and XLA
+    resolves the mismatch by involuntarily all-gathering the whole cache to
+    head-sharded f32 (~100 GB/step for stablelm decode_32k).  Constraining q
+    replicated over "model" flips the resolution: scores stay seq-sharded,
+    softmax partitions with tiny psums, and the cache is never gathered."""
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.specs import ambient_mesh, data_axes
+    mesh = ambient_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q
+    if n_kv % mesh.shape["model"] == 0:
+        return q        # head-sharded cache path; head-sharded q is right
+    dp = data_axes(mesh)
+    import numpy as _np
+    dp_size = int(_np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    bspec = dp if (dp and batch % dp_size == 0 and dp_size > 1) else None
+    return jax.lax.with_sharding_constraint(q, P(bspec, None, None))
+
+
+def attn_apply(p: Params, x: jax.Array, *, cfg: ArchConfig, mode: str,
+               window: Optional[int] = None, cache: Cache = None,
+               lengths: Optional[jax.Array] = None,
+               enc_out: Optional[jax.Array] = None,
+               enc_lengths: Optional[jax.Array] = None,
+               cross: bool = False, causal: bool = True,
+               cache_cap: Optional[int] = None
+               ) -> Tuple[jax.Array, Cache]:
+    """Returns (output, new_cache). x: (B,S,d) train/prefill, (B,1,d) decode."""
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ab = cfg.backend("attention")
+    db = cfg.backend("decode_attention")
+
+    if cross:
+        return _cross_attn(p, x, cfg=cfg, mode=mode, cache=cache,
+                           enc_out=enc_out, enc_lengths=enc_lengths)
+
+    if mode in ("train", "prefill"):
+        b, s, _ = x.shape
+        q = _split_heads(dense(x, p["wq"]), hq)
+        k = _split_heads(dense(x, p["wk"]), hkv)
+        v = _split_heads(dense(x, p["wv"]), hkv)
+        cos, sin = rope_for_seq(s, dh, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        o = kops.attention(q, k, v, causal=causal, window=window, backend=ab)
+        y = dense(o.reshape(b, s, hq * dh), p["wo"])
+        new_cache = None
+        if mode == "prefill":
+            cap = cache_cap or s
+            if window is not None:
+                cap = min(cap, window)
+            if cap >= s:       # straight copy into the head of the buffer
+                ck = k if cap == s else \
+                    jnp.zeros((b, cap, hkv, dh), k.dtype).at[:, :s].set(k)
+                cv = v if cap == s else \
+                    jnp.zeros((b, cap, hkv, dh), v.dtype).at[:, :s].set(v)
+            else:              # rolling buffer: token t lives at slot t % cap
+                idx = jnp.arange(s - cap, s) % cap
+                ck = jnp.zeros((b, cap, hkv, dh), k.dtype).at[:, idx].set(k[:, s - cap:])
+                cv = jnp.zeros((b, cap, hkv, dh), v.dtype).at[:, idx].set(v[:, s - cap:])
+            new_cache = {"k": ck, "v": cv}
+        return y, new_cache
+
+    # ---- decode ----
+    assert cache is not None and lengths is not None
+    b = x.shape[0]
+    cap = cache["k"].shape[1]
+    q = dense(x[:, 0], p["wq"]).reshape(b, hq, dh)
+    k_new = dense(x[:, 0], p["wk"]).reshape(b, hkv, dh)
+    v_new = dense(x[:, 0], p["wv"]).reshape(b, hkv, dh)
+    q = _replicate_q_if_seq_sharded_cache(q, hkv, b)
+    cos, sin = rope_table(lengths, dh, cfg.rope_theta)  # (B, rd/2)
+    cos, sin = cos[:, None, :], sin[:, None, :]
+    q = apply_rope(q, cos, sin)
+    k_new = apply_rope(k_new, cos, sin)
+    slot = lengths % cap if window is not None else lengths
+    bidx = jnp.arange(b)
+    ck = cache["k"].at[bidx, slot].set(k_new.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v_new.astype(cache["v"].dtype))
+    eff_len = jnp.minimum(lengths + 1, cap)
+    o = kops.decode_attention(q, ck, cv, eff_len, backend=db)
+    # row-parallel wo would pull a head-sharded layout back through the
+    # attention (re-gathering a seq-sharded cache); pin o replicated so the
+    # contraction psums (B,Hq,Dh) instead — see _replicate_q_... docstring
+    o = _replicate_q_if_seq_sharded_cache(o, hkv, b)
+    y = dense(o.reshape(b, 1, hq * dh), p["wo"])
+    return y, {"k": ck, "v": cv}
+
+
+def _cross_attn(p, x, *, cfg, mode, cache, enc_out, enc_lengths):
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+    if mode in ("train", "prefill"):
+        assert enc_out is not None
+        k = _split_heads(dense(enc_out, p["wk"]), hkv)
+        v = _split_heads(dense(enc_out, p["wv"]), hkv)
+    else:
+        assert cache is not None
+        k, v = cache["k"], cache["v"]
+    s = x.shape[1]
+    q = _split_heads(dense(x, p["wq"]), hq)
+    if mode == "decode":
+        o = kops.decode_attention(q[:, 0], k, v, enc_lengths,
+                                  backend=cfg.backend("decode_attention"))
+        o = o[:, None]
+    else:
+        # non-causal full cross attention (no rope, standard enc-dec)
+        o = kops.attention(q, k, v, causal=False,
+                           backend=cfg.backend("attention"))
+    y = dense(o.reshape(b, s, hq * dh), p["wo"])
+    new_cache = {"k": k, "v": v} if mode == "prefill" else (cache if mode == "decode" else None)
+    return y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# MLA (DeepSeek-V2): latent KV cache + absorbed decode
+# --------------------------------------------------------------------------- #
+
+def mla_apply(p: Params, x: jax.Array, *, cfg: ArchConfig, mode: str,
+              cache: Cache = None, lengths: Optional[jax.Array] = None,
+              cache_cap: Optional[int] = None) -> Tuple[jax.Array, Cache]:
+    m = cfg.mla
+    hq = cfg.n_heads
+    scale = 1.0 / math.sqrt(m.qk_dim)
+    if mode in ("train", "prefill"):
+        b, s, _ = x.shape
+        q = dense(x, p["wq"]).reshape(b, s, hq, m.qk_dim)
+        q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+        ckv = dense(x, p["wdkv"])                       # (B,S,rank)
+        kpe = dense(x, p["wkpe"])                       # (B,S,rope_dim)
+        cos, sin = rope_for_seq(s, m.rope_dim, cfg.rope_theta, rotary_dim=m.rope_dim)
+        q_pe = apply_rope(q_pe, cos, sin)
+        kpe = apply_rope(kpe[:, :, None, :], cos, sin)  # (B,S,1,rd)
+        k_nope = dense(ckv, p["wuk"]).reshape(b, s, hq, m.nope_dim)
+        v = dense(ckv, p["wuv"]).reshape(b, s, hq, m.v_dim)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(kpe, (b, s, hq, m.rope_dim))], -1)
+        qc = jnp.concatenate([q_nope, q_pe], -1)
+        o = kops.attention(qc, k, v, causal=True, scale=scale,
+                           backend=cfg.backend("attention"))
+        y = dense(o.reshape(b, s, hq * m.v_dim), p["wo"])
+        new_cache = None
+        if mode == "prefill":
+            cap = cache_cap or s
+            ckv_c, kpe_c = ckv, kpe[:, :, 0, :]
+            if cap > s:
+                ckv_c = jnp.zeros((b, cap, m.kv_lora_rank), ckv.dtype
+                                  ).at[:, :s].set(ckv_c)
+                kpe_c = jnp.zeros((b, cap, m.rope_dim), kpe.dtype
+                                  ).at[:, :s].set(kpe_c)
+            new_cache = {"ckv": ckv_c, "kpe": kpe_c}
+        return y, new_cache
+
+    # ---- decode (absorbed): score = q_nope^T Wuk ckv + q_pe^T kpe ----
+    assert cache is not None and lengths is not None
+    b = x.shape[0]
+    q = dense(x[:, 0], p["wq"]).reshape(b, hq, m.qk_dim)
+    q_nope, q_pe = q[..., :m.nope_dim], q[..., m.nope_dim:]
+    cos, sin = rope_table(lengths, m.rope_dim, cfg.rope_theta, rotary_dim=m.rope_dim)
+    q_pe = apply_rope(q_pe, cos[:, None, :], sin[:, None, :])
+    ckv_new = dense(x[:, 0], p["wdkv"])                 # (B,rank)
+    kpe_new = dense(x[:, 0], p["wkpe"])                 # (B,rd)
+    kpe_new = apply_rope(kpe_new[:, None, :], cos[:, None, :], sin[:, None, :])[:, 0]
+    bidx = jnp.arange(b)
+    ckv = cache["ckv"].at[bidx, lengths].set(ckv_new.astype(cache["ckv"].dtype))
+    kpe = cache["kpe"].at[bidx, lengths].set(kpe_new.astype(cache["kpe"].dtype))
+    # absorb W_uk into q: q_lat[h] = q_nope[h] @ Wuk[h]  -> (B,H,rank)
+    wuk = p["wuk"].reshape(m.kv_lora_rank, hq, m.nope_dim)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32)).astype(x.dtype)
+    q_cat = jnp.concatenate([q_lat, q_pe], -1)          # (B,H,rank+rd)
+    # MLA's latent cache is single-"head": always seq-sharded under TP,
+    # so q must be model-replicated (same fix as GQA small-kv decode)
+    q_cat = _replicate_q_if_seq_sharded_cache(q_cat, 1, b)
+    k_cat = jnp.concatenate([ckv, kpe], -1)[:, :, None, :]  # (B,S,1,rank+rd)
+    v_lat = ckv[:, :, None, :]                          # (B,S,1,rank)
+    o_lat = kops.decode_attention(q_cat, k_cat, v_lat, lengths + 1, scale=scale,
+                                  backend=cfg.backend("decode_attention"))
+    # un-absorb W_uv: out[h] = o_lat[h] @ Wuv[h]
+    o_lat = _replicate_q_if_seq_sharded_cache(o_lat, 1, b)
+    wuv = p["wuv"].reshape(m.kv_lora_rank, hq, m.v_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(jnp.float32),
+                   wuv.astype(jnp.float32)).astype(x.dtype)
+    y = dense(o.reshape(b, 1, hq * m.v_dim), p["wo"])
+    return y, {"ckv": ckv, "kpe": kpe}
+
+
+# --------------------------------------------------------------------------- #
+# Zamba2-style shared attention block (weights shared across periods)
+# --------------------------------------------------------------------------- #
+
+def shared_attn_init(key: jax.Array, cfg: ArchConfig, *, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    from repro.layers.mlp import swiglu_init  # local import to avoid cycle
+    return {
+        "fuse": dense_init(ks[0], 2 * d, d, dtype=dtype),
+        "attn": attn_init(ks[1], cfg, dtype=dtype),
+        "mlp": swiglu_init(ks[2], d, cfg.d_ff, dtype=dtype),
+        "norm1": jnp.ones((d,), dtype),
+        "norm2": jnp.ones((d,), dtype),
+    }
+
+
+def shared_attn_apply(p: Params, x: jax.Array, emb0: jax.Array, *,
+                      cfg: ArchConfig, mode: str, cache: Cache = None,
+                      lengths: Optional[jax.Array] = None,
+                      cache_cap: Optional[int] = None
+                      ) -> Tuple[jax.Array, Cache]:
+    """Zamba2 shared block: fused(concat(h, initial_embedding)) -> attn+MLP.
+    Residuals are added by the caller's block wrapper."""
+    from repro.layers.mlp import swiglu_apply
+    from repro.layers.common import norm
+    nb = cfg.backend("rmsnorm")
+    h_in = dense(jnp.concatenate([x, emb0], axis=-1), p["fuse"])
+    a, new_cache = attn_apply(p["attn"], norm(h_in, p["norm1"], eps=cfg.norm_eps,
+                                              backend=nb),
+                              cfg=cfg, mode=mode, cache=cache, lengths=lengths,
+                              cache_cap=cache_cap)
+    h = h_in + a
+    h = h + swiglu_apply(p["mlp"], norm(h, p["norm2"], eps=cfg.norm_eps,
+                                        backend=nb), cfg=cfg)
+    return h, new_cache

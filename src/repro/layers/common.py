@@ -1,0 +1,79 @@
+"""Shared layer primitives: linear, embedding, RoPE, norm dispatch.
+
+Functional style throughout: ``init(key, ...) -> params`` (a dict pytree)
+and pure ``apply(params, x, ...)``.  All matmul-bearing layers route through
+the registry-dispatched kernel ops so backend selection (ref / pallas)
+applies uniformly (the Orpheus model: layers are first-class, impls swap).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+
+def dense_init(key: jax.Array, d_in: int, d_out: int, *,
+               dtype=jnp.float32, scale: Optional[float] = None) -> jax.Array:
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, *, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, *, backend: str = "ref") -> jax.Array:
+    """Registry-dispatched matmul; computes in x.dtype with f32 accumulate."""
+    from repro.core.registry import get_impl
+    return get_impl("dense", backend)([x, w.astype(x.dtype)], {})[0]
+
+
+def norm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+         residual: Optional[jax.Array] = None, backend: str = "ref") -> jax.Array:
+    return kops.rmsnorm(x, w, eps=eps, residual=residual, backend=backend)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE
+# --------------------------------------------------------------------------- #
+
+def rope_table(positions: jax.Array, head_dim: int, theta: float = 1e4,
+               rotary_dim: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``positions`` (any shape) -> (..., rotary_dim/2)."""
+    rd = head_dim if rotary_dim is None else rotary_dim
+    assert rd % 2 == 0
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., rd/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., H, D); cos/sin broadcastable to (..., 1, D_rot/2).
+    Rotates the first ``2 * cos.shape[-1]`` features (pair-interleaved
+    halves, GPT-NeoX style); the rest pass through."""
+    rd2 = cos.shape[-1]
+    xr, xp = x[..., :2 * rd2], x[..., 2 * rd2:]
+    x1, x2 = xr[..., :rd2], xr[..., rd2:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2, xp], axis=-1).astype(x.dtype)
+
+
+def rope_for_seq(seq_len: int, head_dim: int, theta: float = 1e4,
+                 offset: int = 0, rotary_dim: Optional[int] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin shaped (seq, 1, rd/2) — broadcast over (B, S, H, D)."""
+    pos = jnp.arange(offset, offset + seq_len)
+    cos, sin = rope_table(pos, head_dim, theta, rotary_dim)
+    return cos[:, None, :], sin[:, None, :]

@@ -1,0 +1,51 @@
+"""Channel mixers: SwiGLU (gated) and plain 2-matrix MLP."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.layers.common import dense, dense_init
+
+Params = Dict[str, Any]
+
+
+def swiglu_init(key: jax.Array, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "w_up": dense_init(ks[1], d, d_ff, dtype=dtype),
+        "w_down": dense_init(ks[2], d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu_apply(p: Params, x: jax.Array, *, cfg: ArchConfig) -> jax.Array:
+    b = cfg.backend("dense")
+    g = dense(x, p["w_gate"], backend=b)
+    u = dense(x, p["w_up"], backend=b)
+    h = kops.swiglu(g, u, backend=cfg.backend("swiglu"))
+    return dense(h, p["w_down"], backend=b)
+
+
+def mlp_init(key: jax.Array, d: int, d_ff: int, *, dtype=jnp.float32) -> Params:
+    ks = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(ks[0], d, d_ff, dtype=dtype),
+        "w_out": dense_init(ks[1], d_ff, d, dtype=dtype),
+    }
+
+
+def mlp_apply(p: Params, x: jax.Array, *, cfg: ArchConfig) -> jax.Array:
+    b = cfg.backend("dense")
+    h = dense(x, p["w_in"], backend=b)
+    if cfg.act == "relu":
+        h = jnp.maximum(h, 0)
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        h = jax.nn.silu(h)
+    return dense(h, p["w_out"], backend=b)

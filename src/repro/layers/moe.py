@@ -1,0 +1,204 @@
+"""Mixture-of-Experts channel mixer (routed top-k + optional shared experts).
+
+Dispatch is capacity-based (Switch/GShard style), built to be
+SPMD-shardable: the routed tokens are scattered into a dense
+(E, capacity, d) buffer — expert dim sharded over the `model` axis (EP),
+capacity over `data` — and expert FFNs run as batched GEMMs through the
+registry (``moe_gemm``: ref einsum or the Pallas batched-GEMM kernel).
+
+Position-within-expert is computed with a sort-based rank (no (T*k, E)
+one-hot materialisation — that matrix would be ~400M elements for the
+train_4k shape).  Tokens over capacity are dropped (weight 0), standard for
+capacity-based MoE; capacity_factor 1.25 default.
+
+Padded experts (e.g. qwen2's 60 -> 64 for even EP): router logits for
+padding experts are masked to -inf, so they are never selected; their
+(zero-init) weights occupy storage only.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.layers.common import dense, dense_init
+from repro.layers.mlp import swiglu_init, swiglu_apply
+
+Params = Dict[str, Any]
+
+
+def moe_init(key: jax.Array, cfg: ArchConfig, *, dtype=jnp.float32) -> Params:
+    mo = cfg.moe
+    d, f, e = cfg.d_model, mo.d_expert, mo.n_experts
+    ks = jax.random.split(key, 5)
+    scale = 1.0 / math.sqrt(d)
+    p: Params = {
+        "router": dense_init(ks[0], d, e, dtype=jnp.float32, scale=0.02),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   / math.sqrt(f)).astype(dtype),
+    }
+    if mo.n_shared:
+        p["shared"] = swiglu_init(ks[4], d, mo.d_shared, dtype=dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    mo = cfg.moe
+    c = int(math.ceil(n_tokens * mo.top_k / mo.n_experts * mo.capacity_factor))
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU-friendly tiles
+
+
+def route(logits: jax.Array, cfg: ArchConfig) -> Tuple[jax.Array, jax.Array]:
+    """(T, E) router logits -> (top-k weights, top-k expert ids)."""
+    mo = cfg.moe
+    if mo.n_routed_padded and mo.n_routed_padded > mo.n_routed:
+        pad_mask = jnp.arange(logits.shape[-1]) >= mo.n_routed
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, mo.top_k)
+    if mo.router_norm_topk:
+        topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+    return topw, topi
+
+
+def moe_apply(p: Params, x: jax.Array, *, cfg: ArchConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x (B, S, d) -> (y (B, S, d), aux_loss scalar)."""
+    if cfg.moe.dispatch == "local":
+        return moe_apply_local(p, x, cfg=cfg)
+    mo = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    k = mo.top_k
+    e = mo.n_experts
+    xt = x.reshape(t, d)
+
+    logits = dense(xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    topw, topi = route(logits, cfg)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (t * k)
+    frac_probs = probs.mean(0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- sort-based position-within-expert ----
+    cap = _capacity(t, cfg)
+    fi = topi.reshape(-1)                                 # (T*k,)
+    order = jnp.argsort(fi, stable=True)
+    counts = jnp.zeros((e,), jnp.int32).at[fi].add(1)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(t * k, dtype=jnp.int32) - starts[fi[order]]
+    pos = jnp.zeros((t * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    pos_c = jnp.minimum(pos, cap - 1)
+
+    # ---- dispatch: (E, cap, d); dropped tokens contribute 0 ----
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    xe = jnp.zeros((e, cap, d), x.dtype)
+    xe = xe.at[fi, pos_c].add(xt[tok_idx] * keep[:, None].astype(x.dtype))
+
+    # ---- expert FFNs (batched GEMMs via registry) ----
+    mb = cfg.backend("moe_gemm")
+    g = kops.moe_gemm(xe, p["w_gate"].astype(x.dtype), backend=mb)
+    u = kops.moe_gemm(xe, p["w_up"].astype(x.dtype), backend=mb)
+    h = kops.swiglu(g, u, backend=cfg.backend("swiglu"))
+    ye = kops.moe_gemm(h, p["w_down"].astype(x.dtype), backend=mb)  # (E,cap,d)
+
+    # ---- combine ----
+    gathered = ye[fi, pos_c] * (keep[:, None] * topw.reshape(-1)[:, None]
+                                ).astype(x.dtype)        # (T*k, d)
+    y = jnp.zeros((t, d), x.dtype).at[tok_idx].add(gathered)
+
+    if mo.n_shared:
+        y = y + swiglu_apply(p["shared"], xt, cfg=cfg)
+    return y.reshape(b, s, d), aux
+
+
+def moe_apply_local(p: Params, x: jax.Array, *, cfg: ArchConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Batch-local dispatch: capacity pools, cumsum ranks and scatters are
+    computed PER BATCH ROW (vmapped), so with the batch dim sharded over the
+    DP axes every routing index op is shard-local — the cross-device traffic
+    of the MoE block reduces to the token->expert-owner movement plus weight
+    gradients.  Semantics: per-row drops instead of global drops (the
+    standard per-device-capacity trade; same expected drop rate)."""
+    mo = cfg.moe
+    b, s, d = x.shape
+    k = mo.top_k
+    e = mo.n_experts
+    cap = _capacity(s, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    topw, topi = route(logits.reshape(b * s, e), cfg)
+    topw = topw.reshape(b, s, k)
+    topi = topi.reshape(b, s, k)
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac_tokens = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) \
+        / (b * s * k)
+    aux = e * jnp.sum(frac_tokens * probs.mean((0, 1)))
+
+    def row_dispatch(xt, fi_k, w_k):
+        """xt (S,d), fi_k (S,k), w_k (S,k) -> (xe (E,cap,d), pos, keep)."""
+        fi = fi_k.reshape(-1)
+        order = jnp.argsort(fi, stable=True)
+        counts = jnp.zeros((e,), jnp.int32).at[fi].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos_sorted = jnp.arange(s * k, dtype=jnp.int32) - starts[fi[order]]
+        pos = jnp.zeros((s * k,), jnp.int32).at[order].set(pos_sorted)
+        keep = pos < cap
+        pos_c = jnp.minimum(pos, cap - 1)
+        tok = jnp.repeat(jnp.arange(s), k)
+        xe = jnp.zeros((e, cap, d), xt.dtype)
+        xe = xe.at[fi, pos_c].add(xt[tok] * keep[:, None].astype(xt.dtype))
+        return xe, fi, pos_c, keep, tok
+
+    xe, fi, pos_c, keep, tok = jax.vmap(row_dispatch)(x, topi, topw)
+
+    # pin the dispatched buffer to (batch over DP, experts over model): the
+    # scatter output's sharding is otherwise unconstrained and XLA falls
+    # back to replication (measured: +8s collective on qwen2 train_4k)
+    from jax.sharding import PartitionSpec as P
+    from repro.sharding.specs import ambient_mesh, constrain, data_axes
+    mesh = ambient_mesh()
+    if mesh is not None:
+        dp = data_axes(mesh)
+        ep = ("model" if ("model" in mesh.axis_names
+                          and e % mesh.shape["model"] == 0) else None)
+        bs = dp if (dp and b % int(np.prod([mesh.shape[a] for a in dp])) == 0) \
+            else None
+        xe = constrain(xe, P(bs, ep, None, None))
+
+    mb = cfg.backend("moe_gemm")
+    wg = p["w_gate"].astype(x.dtype)
+    wu = p["w_up"].astype(x.dtype)
+    wd = p["w_down"].astype(x.dtype)
+    g = jax.vmap(lambda xb: kops.moe_gemm(xb, wg, backend=mb))(xe)
+    u = jax.vmap(lambda xb: kops.moe_gemm(xb, wu, backend=mb))(xe)
+    h = kops.swiglu(g, u, backend=cfg.backend("swiglu"))
+    ye = jax.vmap(lambda hb: kops.moe_gemm(hb, wd, backend=mb))(h)  # (B,E,cap,d)
+    if mesh is not None:
+        ye = constrain(ye, P(bs, ep, None, None))
+
+    def row_combine(ye_b, fi_b, pos_b, keep_b, tok_b, w_b):
+        gathered = ye_b[fi_b, pos_b] * (keep_b[:, None]
+                                        * w_b.reshape(-1)[:, None]
+                                        ).astype(ye_b.dtype)
+        return jnp.zeros((s, d), ye_b.dtype).at[tok_b].add(gathered)
+
+    y = jax.vmap(row_combine)(ye, fi, pos_c, keep, tok, topw)
+
+    if mo.n_shared:
+        y = y + swiglu_apply(p["shared"], x.reshape(b * s, d),
+                             cfg=cfg).reshape(b, s, d)
+    return y, aux

@@ -1,0 +1,157 @@
+"""Mamba2 block (SSD sequence mixer) — train/prefill/decode.
+
+Block structure (Mamba2, arXiv:2405.21060):
+
+    z  = x @ wz                      (gate,   d -> d_inner)
+    xs = silu(conv_x(x @ wx))        (stream, d -> d_inner)
+    B  = silu(conv_B(x @ wB))        (d -> G*N)
+    C  = silu(conv_C(x @ wC))        (d -> G*N)
+    dt = softplus(x @ wdt + bias)    (d -> H)
+    y  = SSD(xs, dt, A, B, C) + D*xs  <- registry op: ref/chunked/pallas
+    out = (rmsnorm(y * silu(z))) @ out_proj
+
+The projections are stored SEPARATELY (not one fused in_proj) so tensor
+parallelism shards each stream on its natural axis: wz/wx column-parallel
+over d_inner (and SSD heads H = d_inner/P shard with them), wdt over H,
+out_proj row-parallel; B/C streams (G*N each, small) are replicated.
+A fused in_proj would put TP shard boundaries mid-stream and force
+reshard collectives at every split.
+
+Decode carries two states per block: the conv tails ((B, K-1, ·) per
+stream) and the SSM state (B, H, P, N) — O(1) per step, which is why SSM
+archs run long_500k at constant memory.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.kernels import ops as kops
+from repro.layers.common import dense, dense_init, norm
+
+Params = Dict[str, Any]
+Cache = Optional[Dict[str, jax.Array]]
+
+
+def mamba_init(key: jax.Array, cfg: ArchConfig, *, dtype=jnp.float32) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    h = s.n_heads
+    gn = s.n_groups * s.state
+    ks = jax.random.split(key, 8)
+    # dt bias init so softplus(dt_bias) spans [dt_min, dt_max] (mamba2 init)
+    u = jax.random.uniform(ks[6], (h,), jnp.float32)
+    dt = jnp.exp(u * (math.log(s.dt_max) - math.log(s.dt_min)) + math.log(s.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+
+    def conv_w(k_, c):
+        return (jax.random.normal(k_, (s.conv_kernel, c), jnp.float32)
+                / math.sqrt(s.conv_kernel)).astype(dtype)
+
+    return {
+        "wz": dense_init(ks[0], d, s.d_inner, dtype=dtype),
+        "wx": dense_init(ks[1], d, s.d_inner, dtype=dtype),
+        "wB": dense_init(ks[2], d, gn, dtype=dtype),
+        "wC": dense_init(ks[3], d, gn, dtype=dtype),
+        "wdt": dense_init(ks[4], d, h, dtype=dtype),
+        "conv_x": conv_w(ks[5], s.d_inner),
+        "conv_B": conv_w(jax.random.fold_in(key, 21), gn),
+        "conv_C": conv_w(jax.random.fold_in(key, 22), gn),
+        "conv_bx": jnp.zeros((s.d_inner,), dtype),
+        "conv_bB": jnp.zeros((gn,), dtype),
+        "conv_bC": jnp.zeros((gn,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_w": jnp.ones((s.d_inner,), dtype),
+        "out_proj": dense_init(ks[7], s.d_inner, d, dtype=dtype),
+    }
+
+
+def _causal_conv(xs: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv, width K. xs (B,S,C), w (K,C). ``tail``
+    (B,K-1,C) supplies left context (decode / chunked prefill)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((xs.shape[0], k - 1, xs.shape[2]), xs.dtype)
+    xp = jnp.concatenate([tail, xs], axis=1)            # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xs.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def mamba_apply(p: Params, x: jax.Array, *, cfg: ArchConfig, mode: str,
+                cache: Cache = None, lengths: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Cache]:
+    s = cfg.ssm
+    h, pd, g, n = s.n_heads, s.head_dim, s.n_groups, s.state
+    b = x.shape[0]
+    A = -jnp.exp(p["A_log"])
+    dt_c = x.dtype
+
+    if mode in ("train", "prefill"):
+        _, sl, _ = x.shape
+        z = dense(x, p["wz"])
+        x_raw = dense(x, p["wx"])
+        B_raw = dense(x, p["wB"])
+        C_raw = dense(x, p["wC"])
+        dt_raw = dense(x, p["wdt"])
+        xs = jax.nn.silu(_causal_conv(x_raw, p["conv_x"].astype(dt_c),
+                                      p["conv_bx"].astype(dt_c)))
+        Bm = jax.nn.silu(_causal_conv(B_raw, p["conv_B"].astype(dt_c),
+                                      p["conv_bB"].astype(dt_c)))
+        Cm = jax.nn.silu(_causal_conv(C_raw, p["conv_C"].astype(dt_c),
+                                      p["conv_bC"].astype(dt_c)))
+        xs = xs.reshape(b, sl, h, pd)
+        Bm = Bm.reshape(b, sl, g, n)
+        Cm = Cm.reshape(b, sl, g, n)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, None, :])
+        y, ssm_state = kops.ssd(xs, dt, A, Bm, Cm, p["D"], chunk=s.chunk,
+                                backend=cfg.backend("ssd"))
+        y = y.reshape(b, sl, s.d_inner)
+        y = norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"], eps=cfg.norm_eps, backend=cfg.backend("rmsnorm"))
+        out = dense(y, p["out_proj"])
+        new_cache = None
+        if mode == "prefill":
+            k = s.conv_kernel
+            new_cache = {"conv_x": x_raw[:, -(k - 1):, :],
+                         "conv_B": B_raw[:, -(k - 1):, :],
+                         "conv_C": C_raw[:, -(k - 1):, :],
+                         "ssm": ssm_state.astype(jnp.float32)}
+        return out, new_cache
+
+    # ---- decode: one step, O(1) state update ----
+    assert cache is not None
+    xt = x[:, 0]
+    z = dense(xt, p["wz"])
+    x_new = dense(xt, p["wx"])[:, None]
+    B_new = dense(xt, p["wB"])[:, None]
+    C_new = dense(xt, p["wC"])[:, None]
+    dt_raw = dense(xt, p["wdt"])
+
+    def step_conv(new, tail, w, bias):
+        out = jax.nn.silu(_causal_conv(new, w.astype(dt_c), bias.astype(dt_c),
+                                       tail=tail))[:, 0]
+        new_tail = jnp.concatenate([tail[:, 1:], new], axis=1)
+        return out, new_tail
+
+    xs, tail_x = step_conv(x_new, cache["conv_x"], p["conv_x"], p["conv_bx"])
+    Bm, tail_B = step_conv(B_new, cache["conv_B"], p["conv_B"], p["conv_bB"])
+    Cm, tail_C = step_conv(C_new, cache["conv_C"], p["conv_C"], p["conv_bC"])
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    y, ssm_state = kops.ssd_step(xs.reshape(b, h, pd), dtv, A,
+                                 Bm.reshape(b, g, n), Cm.reshape(b, g, n),
+                                 p["D"], cache["ssm"])
+    y = norm(y.reshape(b, 1, s.d_inner)
+             * jax.nn.silu(z[:, None].astype(jnp.float32)).astype(y.dtype),
+             p["norm_w"], eps=cfg.norm_eps, backend=cfg.backend("rmsnorm"))
+    out = dense(y, p["out_proj"])
+    return out, {"conv_x": tail_x, "conv_B": tail_B, "conv_C": tail_C,
+                 "ssm": ssm_state}

@@ -1,0 +1,7 @@
+"""Model assemblies: decoder LMs, encoder-decoder, and the paper's CNN zoo."""
+
+from repro.models.cnn import CNN_MODELS, build_cnn
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+
+__all__ = ["CNN_MODELS", "build_cnn", "EncDec", "LM"]

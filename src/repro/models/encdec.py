@@ -1,0 +1,114 @@
+"""Encoder-decoder model (seamless-m4t backbone).
+
+Encoder: non-causal attn + MLP blocks over precomputed frame embeddings
+(the audio frontend is a stub per the assignment — ``input_specs`` provides
+(B, S_src, d) embeddings).  Decoder: causal self-attn + cross-attn + MLP
+over text tokens.  Decode-time cross-attention K/V are computed once at
+prefill and cached read-only.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Block, LayerPlan
+from repro.layers.common import dense_init, embed_init, norm
+from repro.models.lm import cross_entropy, mask_vocab
+from repro.models.stack import init_stack_caches, stack_apply, stack_init
+
+Params = Dict[str, Any]
+
+
+class EncDec:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.enc_plan = LayerPlan(period=(Block("attn", "mlp"),),
+                                  n_periods=cfg.n_encoder_layers)
+        self.dec_plan = cfg.plan  # blocks carry cross=True
+
+    def init_params(self, key: jax.Array, dtype=None) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype) if dtype is None else dtype
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype=dtype),
+            "encoder": stack_init(ks[1], cfg, self.enc_plan, dtype=dtype),
+            "enc_norm": jnp.ones((cfg.d_model,), dtype),
+            "decoder": stack_init(ks[2], cfg, self.dec_plan, dtype=dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+            "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab_padded, dtype=dtype),
+        }
+
+    # ------------------------------------------------------------------ #
+    def encode(self, params: Params, src_embeds: jax.Array,
+               remat: bool = True) -> jax.Array:
+        cfg = self.cfg
+        h = src_embeds.astype(jnp.dtype(cfg.dtype))
+        h, _, _ = stack_apply(params["encoder"], h, self.enc_plan, cfg=cfg,
+                              mode="train", causal=False, remat=remat)
+        return norm(h, params["enc_norm"], eps=cfg.norm_eps,
+                    backend=cfg.backend("rmsnorm"))
+
+    def _decode_trunk(self, params, h, *, mode, caches, lengths, enc_out,
+                      enc_lengths, cache_cap, remat=True):
+        cfg = self.cfg
+        h, new_caches, aux = stack_apply(
+            params["decoder"], h, self.dec_plan, cfg=cfg, mode=mode,
+            caches=caches, lengths=lengths, enc_out=enc_out,
+            enc_lengths=enc_lengths, cache_cap=cache_cap, remat=remat)
+        h = norm(h, params["final_norm"], eps=cfg.norm_eps,
+                 backend=cfg.backend("rmsnorm"))
+        return h, new_caches, aux
+
+    # ------------------------------------------------------------------ #
+    def train_loss(self, params: Params, batch: Dict[str, jax.Array],
+                   *, remat: bool = True):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"], remat=remat)
+        h = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+        h, _, aux = self._decode_trunk(params, h, mode="train", caches=None,
+                                       lengths=None, enc_out=enc_out,
+                                       enc_lengths=None, cache_cap=None,
+                                       remat=remat)
+        logits = jnp.einsum("...d,dv->...v", h,
+                            params["lm_head"].astype(h.dtype))
+        ce = cross_entropy(logits, batch["labels"], cfg)
+        return ce, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, params: Params, batch: Dict[str, jax.Array], *,
+                cache_cap: int):
+        """Encode src, prefill decoder over ``tokens``; returns
+        (last logits, caches, lengths)."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"], remat=False)
+        b, s_src = enc_out.shape[0], enc_out.shape[1]
+        h = params["embed"][batch["tokens"]].astype(jnp.dtype(cfg.dtype))
+        h, caches, _ = self._decode_trunk(
+            params, h, mode="prefill", caches=None, lengths=None,
+            enc_out=enc_out, enc_lengths=jnp.full((b,), s_src, jnp.int32),
+            cache_cap=cache_cap, remat=False)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"].astype(h.dtype))
+        lengths = jnp.full((b,), batch["tokens"].shape[1], jnp.int32)
+        return mask_vocab(logits, cfg), caches, lengths
+
+    def decode_step(self, params: Params, tokens: jax.Array, caches,
+                    lengths: jax.Array, enc_lengths: jax.Array):
+        cfg = self.cfg
+        h = params["embed"][tokens[:, None]].astype(jnp.dtype(cfg.dtype))
+        h, new_caches, _ = self._decode_trunk(
+            params, h, mode="decode", caches=caches, lengths=lengths,
+            enc_out=None, enc_lengths=enc_lengths, cache_cap=None, remat=False)
+        logits = jnp.einsum("bd,dv->bv", h[:, 0],
+                            params["lm_head"].astype(h.dtype))
+        return mask_vocab(logits, cfg), new_caches
+
+    # ------------------------------------------------------------------ #
+    def init_caches(self, batch: int, cache_cap: int, enc_len: int,
+                    dtype=None):
+        dtype = jnp.dtype(self.cfg.dtype) if dtype is None else dtype
+        return init_stack_caches(self.cfg, self.dec_plan, batch, cache_cap,
+                                 enc_len=enc_len, dtype=dtype)

@@ -1,0 +1,135 @@
+"""Decoder-only LM assembled from a LayerPlan: embed -> stack -> norm -> head.
+
+Covers dense (phi3/stablelm/minitron), MoE (qwen2-moe/deepseek-v2-lite),
+local:global (gemma3), hybrid (zamba2), SSM (mamba2) and embeds-frontend
+(pixtral) architectures — the block composition lives entirely in the
+config's LayerPlan.
+
+API (all pure functions of params):
+  init_params(key)                         -> params pytree
+  train_loss(params, batch)                -> (loss, metrics)
+  prefill(params, batch, cache_cap)        -> (last_logits, caches, lengths)
+  decode_step(params, tokens, caches, lengths) -> (logits, new_caches)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.layers.common import embed_init, dense_init, norm
+from repro.models.stack import init_stack_caches, stack_apply, stack_init
+
+Params = Dict[str, Any]
+
+
+def mask_vocab(logits: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """-inf the padding vocab rows (vocab_padded > vocab)."""
+    if cfg.vocab_padded == cfg.vocab:
+        return logits
+    mask = jnp.arange(logits.shape[-1]) < cfg.vocab
+    return jnp.where(mask, logits, -1e30)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  cfg: ArchConfig) -> jax.Array:
+    """Token-mean CE in f32; labels < 0 are ignored."""
+    logits = mask_vocab(logits, cfg).astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, jnp.maximum(labels, 0)[..., None],
+                             axis=-1)[..., 0]
+    valid = (labels >= 0).astype(jnp.float32)
+    nll = (lse - ll) * valid
+    return nll.sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+class LM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ #
+    def init_params(self, key: jax.Array, dtype=None) -> Params:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype) if dtype is None else dtype
+        ks = jax.random.split(key, 4)
+        p: Params = {
+            "embed": embed_init(ks[0], cfg.vocab_padded, cfg.d_model, dtype=dtype),
+            "stack": stack_init(ks[1], cfg, cfg.plan, dtype=dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab_padded,
+                                      dtype=dtype)
+        return p
+
+    # ------------------------------------------------------------------ #
+    def _embed(self, params: Params, batch: Dict[str, jax.Array],
+               dtype) -> jax.Array:
+        if self.cfg.frontend == "embeds" and "embeds" in batch:
+            return batch["embeds"].astype(dtype)
+        return params["embed"][batch["tokens"]].astype(dtype)
+
+    def _head(self, params: Params, h: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        w = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        return jnp.einsum("...d,dv->...v", h, w.astype(h.dtype))
+
+    # ------------------------------------------------------------------ #
+    def forward(self, params: Params, batch: Dict[str, jax.Array], *,
+                mode: str, caches=None, lengths=None,
+                cache_cap: Optional[int] = None,
+                remat: Optional[bool] = None):
+        cfg = self.cfg
+        remat = cfg.remat if remat is None else remat
+        dtype = jnp.dtype(cfg.dtype)
+        h = self._embed(params, batch, dtype)
+        emb0 = h  # zamba2 shared blocks re-read the initial embedding
+        h, new_caches, aux = stack_apply(
+            params["stack"], h, cfg.plan, cfg=cfg, mode=mode, caches=caches,
+            lengths=lengths, emb0=emb0, cache_cap=cache_cap, remat=remat)
+        h = norm(h, params["final_norm"], eps=cfg.norm_eps,
+                 backend=cfg.backend("rmsnorm"))
+        return h, new_caches, aux
+
+    # ------------------------------------------------------------------ #
+    def train_loss(self, params: Params, batch: Dict[str, jax.Array],
+                   *, aux_weight: float = 0.01, remat: Optional[bool] = None
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        h, _, aux = self.forward(params, batch, mode="train", remat=remat)
+        logits = self._head(params, h)
+        ce = cross_entropy(logits, batch["labels"], self.cfg)
+        loss = ce + aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------------ #
+    def prefill(self, params: Params, batch: Dict[str, jax.Array], *,
+                cache_cap: Optional[int] = None):
+        """Returns (last-position logits (B, V), caches, lengths (B,))."""
+        seq = (batch["tokens"].shape[1] if "tokens" in batch
+               else batch["embeds"].shape[1])
+        bsz = (batch["tokens"].shape[0] if "tokens" in batch
+               else batch["embeds"].shape[0])
+        h, caches, _ = self.forward(params, batch, mode="prefill",
+                                    cache_cap=cache_cap or seq)
+        logits = self._head(params, h[:, -1])
+        lengths = jnp.full((bsz,), seq, jnp.int32)
+        return mask_vocab(logits, self.cfg), caches, lengths
+
+    def decode_step(self, params: Params, tokens: jax.Array, caches,
+                    lengths: jax.Array):
+        """tokens (B,) int32 -> (logits (B, V), new_caches). The caller
+        increments lengths afterwards."""
+        batch = {"tokens": tokens[:, None]}
+        h, new_caches, _ = self.forward(params, batch, mode="decode",
+                                        caches=caches, lengths=lengths)
+        logits = self._head(params, h[:, 0])
+        return mask_vocab(logits, self.cfg), new_caches
+
+    # ------------------------------------------------------------------ #
+    def init_caches(self, batch: int, cache_cap: int, dtype=None):
+        dtype = jnp.dtype(self.cfg.dtype) if dtype is None else dtype
+        return init_stack_caches(self.cfg, self.cfg.plan, batch, cache_cap,
+                                 dtype=dtype)

@@ -1,0 +1,291 @@
+"""Block-stack machinery: init/apply for a LayerPlan (prefix + scanned
+periods + suffix).
+
+The scanned period keeps compiled HLO size O(|period|) instead of
+O(n_layers) — essential for the 81-layer zamba2 / 48-layer mamba2 dry-runs —
+while heterogeneous patterns (gemma3 5 local:1 global, zamba2 6 mamba:1
+shared-attn) fit naturally as the period.
+
+Parameters for position i of the period are stacked along axis 0
+(n_periods, ...); caches follow the same layout, so prefill produces them
+as scan outputs and decode consumes/updates them as scan xs/ys.
+
+Zamba2's *shared* attention blocks live OUTSIDE the stacking (weights are
+shared across periods — two alternating blocks selected by period index);
+their caches are per-application and therefore stacked like everything else.
+
+Train mode wraps the period body in ``jax.checkpoint`` (dots-saveable
+policy) — activation recompute keeps the backward pass' live set
+O(period) too.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Block, LayerPlan
+from repro.layers.attention import (attn_apply, attn_init, mla_apply,
+                                    mla_init, shared_attn_apply,
+                                    shared_attn_init)
+from repro.layers.common import norm
+from repro.layers.mlp import mlp_apply, mlp_init, swiglu_apply, swiglu_init
+from repro.layers.moe import moe_apply, moe_init
+from repro.layers.ssm import mamba_apply, mamba_init
+
+Params = Dict[str, Any]
+
+# Analysis mode: see repro.analysis (re-exported here for launch/dryrun).
+from repro.analysis import unroll_scans, unrolling  # noqa: E402,F401
+
+
+# --------------------------------------------------------------------------- #
+# single block
+# --------------------------------------------------------------------------- #
+
+def block_init(key: jax.Array, cfg: ArchConfig, blk: Block, *,
+               dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p: Params = {}
+    if blk.mixer in ("attn", "attn_local"):
+        p["norm1"] = jnp.ones((d,), dtype)
+        p["mixer"] = attn_init(ks[0], cfg, dtype=dtype)
+    elif blk.mixer == "mla":
+        p["norm1"] = jnp.ones((d,), dtype)
+        p["mixer"] = mla_init(ks[0], cfg, dtype=dtype)
+    elif blk.mixer == "mamba":
+        p["norm1"] = jnp.ones((d,), dtype)
+        p["mixer"] = mamba_init(ks[0], cfg, dtype=dtype)
+    elif blk.mixer == "shared_attn":
+        pass  # params live in the stack-level "shared" slot
+    else:
+        raise ValueError(f"unknown mixer {blk.mixer!r}")
+    if blk.cross:
+        p["norm_x"] = jnp.ones((d,), dtype)
+        p["cross"] = attn_init(ks[1], cfg, cross=True, dtype=dtype)
+    if blk.ffn != "none":
+        p["norm2"] = jnp.ones((d,), dtype)
+        if blk.ffn == "swiglu":
+            p["ffn"] = swiglu_init(ks[2], d, cfg.d_ff, dtype=dtype)
+        elif blk.ffn == "mlp":
+            p["ffn"] = mlp_init(ks[2], d, cfg.d_ff, dtype=dtype)
+        elif blk.ffn == "moe":
+            p["ffn"] = moe_init(ks[2], cfg, dtype=dtype)
+        else:
+            raise ValueError(f"unknown ffn {blk.ffn!r}")
+    return p
+
+
+def _empty_cache_like(blk: Block) -> bool:
+    return blk.mixer in ("attn", "attn_local", "mla", "mamba", "shared_attn") \
+        or blk.cross
+
+
+def block_apply(p: Params, h: jax.Array, blk: Block, *, cfg: ArchConfig,
+                mode: str, cache: Any = None, lengths=None, emb0=None,
+                enc_out=None, enc_lengths=None, shared_params: Params = None,
+                cache_cap: Optional[int] = None, causal: bool = True
+                ) -> Tuple[jax.Array, Any, jax.Array]:
+    """Returns (h, new_cache, aux_loss). ``cache`` is a dict with optional
+    keys 'mix' and 'cross' (block-level cache container)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = cache or {}
+    new_cache: Dict[str, Any] = {}
+    nb = cfg.backend("rmsnorm")
+    eps = cfg.norm_eps
+
+    if blk.mixer == "shared_attn":
+        h, c = shared_attn_apply(shared_params, h, emb0, cfg=cfg, mode=mode,
+                                 cache=cache.get("mix"), lengths=lengths,
+                                 cache_cap=cache_cap)
+        if c is not None:
+            new_cache["mix"] = c
+    else:
+        x = norm(h, p["norm1"], eps=eps, backend=nb)
+        if blk.mixer in ("attn", "attn_local"):
+            window = cfg.window if blk.mixer == "attn_local" else None
+            y, c = attn_apply(p["mixer"], x, cfg=cfg, mode=mode, window=window,
+                              cache=cache.get("mix"), lengths=lengths,
+                              cache_cap=cache_cap, causal=causal)
+        elif blk.mixer == "mla":
+            y, c = mla_apply(p["mixer"], x, cfg=cfg, mode=mode,
+                             cache=cache.get("mix"), lengths=lengths,
+                             cache_cap=cache_cap)
+        elif blk.mixer == "mamba":
+            y, c = mamba_apply(p["mixer"], x, cfg=cfg, mode=mode,
+                               cache=cache.get("mix"), lengths=lengths)
+        else:
+            raise ValueError(blk.mixer)
+        h = h + y
+        if c is not None:
+            new_cache["mix"] = c
+
+    if blk.cross:
+        x = norm(h, p["norm_x"], eps=eps, backend=nb)
+        y, c = attn_apply(p["cross"], x, cfg=cfg, mode=mode, cross=True,
+                          cache=cache.get("cross"), enc_out=enc_out,
+                          enc_lengths=enc_lengths)
+        h = h + y
+        if c is not None:
+            new_cache["cross"] = c
+
+    if blk.ffn != "none":
+        x = norm(h, p["norm2"], eps=eps, backend=nb)
+        if blk.ffn == "swiglu":
+            y = swiglu_apply(p["ffn"], x, cfg=cfg)
+        elif blk.ffn == "mlp":
+            y = mlp_apply(p["ffn"], x, cfg=cfg)
+        else:  # moe
+            y, aux = moe_apply(p["ffn"], x, cfg=cfg)
+        h = h + y
+
+    return h, (new_cache if new_cache else None), aux
+
+
+# --------------------------------------------------------------------------- #
+# stack = prefix + scanned periods + suffix
+# --------------------------------------------------------------------------- #
+
+def stack_init(key: jax.Array, cfg: ArchConfig, plan: LayerPlan, *,
+               dtype=jnp.float32) -> Params:
+    p: Params = {"prefix": [], "period": [], "suffix": []}
+    for i, blk in enumerate(plan.prefix):
+        p["prefix"].append(block_init(jax.random.fold_in(key, 1000 + i),
+                                      cfg, blk, dtype=dtype))
+    for pos, blk in enumerate(plan.period):
+        per = [block_init(jax.random.fold_in(key, 10_000 + pos * 100 + j),
+                          cfg, blk, dtype=dtype) for j in range(plan.n_periods)]
+        p["period"].append(jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+                           if per and per[0] else {})
+    for i, blk in enumerate(plan.suffix):
+        p["suffix"].append(block_init(jax.random.fold_in(key, 2000 + i),
+                                      cfg, blk, dtype=dtype))
+    if any(b.mixer == "shared_attn" for b in plan.all_blocks()):
+        sh = [shared_attn_init(jax.random.fold_in(key, 77 + i), cfg, dtype=dtype)
+              for i in range(2)]  # two alternating shared blocks (Zamba2)
+        p["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs), *sh)
+    return p
+
+
+def stack_apply(params: Params, h: jax.Array, plan: LayerPlan, *,
+                cfg: ArchConfig, mode: str, caches: Any = None,
+                lengths=None, emb0=None, enc_out=None, enc_lengths=None,
+                cache_cap: Optional[int] = None, causal: bool = True,
+                remat: bool = True):
+    """Returns (h, new_caches, aux_total)."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = caches or {"prefix": [None] * len(plan.prefix),
+                        "period": [None] * len(plan.period),
+                        "suffix": [None] * len(plan.suffix)}
+    new_caches = {"prefix": [], "period": None, "suffix": []}
+    shared = params.get("shared")
+
+    def pick_shared(period_idx):
+        if shared is None:
+            return None
+        return jax.tree.map(lambda a: a[period_idx % 2], shared)
+
+    common = dict(cfg=cfg, mode=mode, lengths=lengths, emb0=emb0,
+                  enc_out=enc_out, enc_lengths=enc_lengths,
+                  cache_cap=cache_cap, causal=causal)
+
+    for blk, bp, bc in zip(plan.prefix, params["prefix"], caches["prefix"]):
+        h, c, aux = block_apply(bp, h, blk, cache=bc,
+                                shared_params=pick_shared(0), **common)
+        new_caches["prefix"].append(c)
+        aux_total = aux_total + aux
+
+    if plan.n_periods > 0:
+        def period_step(carry, xs):
+            h, aux_acc = carry
+            stacked_p, stacked_c, pidx = xs
+            new_cs = []
+            for j, blk in enumerate(plan.period):
+                bc = stacked_c[j] if stacked_c is not None else None
+                h, c, aux = block_apply(stacked_p[j], h, blk, cache=bc,
+                                        shared_params=pick_shared(pidx),
+                                        **common)
+                new_cs.append(c)
+            return (h, aux_acc + aux), new_cs
+
+        body = period_step
+        if remat and mode == "train":
+            body = jax.checkpoint(
+                period_step,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+        if unrolling():
+            collected = []
+            for pidx in range(plan.n_periods):
+                xs_i = jax.tree.map(lambda a: a[pidx],
+                                    (params["period"], caches["period"]))
+                (h, aux_total), cs = body((h, aux_total),
+                                          (xs_i[0], xs_i[1], pidx))
+                collected.append(cs)
+            if mode != "train":
+                new_caches["period"] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *collected)
+        else:
+            xs = (params["period"], caches["period"],
+                  jnp.arange(plan.n_periods))
+            (h, aux_total), period_caches = jax.lax.scan(body, (h, aux_total),
+                                                         xs)
+            # drop all-None cache pytrees (train mode)
+            if mode != "train":
+                new_caches["period"] = period_caches
+    for blk, bp, bc in zip(plan.suffix, params["suffix"], caches["suffix"]):
+        h, c, aux = block_apply(bp, h, blk, cache=bc,
+                                shared_params=pick_shared(plan.n_periods),
+                                **common)
+        new_caches["suffix"].append(c)
+        aux_total = aux_total + aux
+
+    return h, (new_caches if mode != "train" else None), aux_total
+
+
+def init_stack_caches(cfg: ArchConfig, plan: LayerPlan, batch: int,
+                      cache_cap: int, *, enc_len: int = 0,
+                      dtype=jnp.bfloat16) -> Any:
+    """Zero caches for decode-from-scratch / dry-run input specs."""
+    def one(blk: Block):
+        c: Dict[str, Any] = {}
+        if blk.mixer in ("attn", "attn_local", "shared_attn"):
+            cap = min(cfg.window, cache_cap) if blk.mixer == "attn_local" else cache_cap
+            c["mix"] = {
+                "k": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, cap, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+        elif blk.mixer == "mla":
+            m = cfg.mla
+            c["mix"] = {
+                "ckv": jnp.zeros((batch, cache_cap, m.kv_lora_rank), dtype),
+                "kpe": jnp.zeros((batch, cache_cap, m.rope_dim), dtype),
+            }
+        elif blk.mixer == "mamba":
+            s = cfg.ssm
+            gn = s.n_groups * s.state
+            c["mix"] = {
+                "conv_x": jnp.zeros((batch, s.conv_kernel - 1, s.d_inner), dtype),
+                "conv_B": jnp.zeros((batch, s.conv_kernel - 1, gn), dtype),
+                "conv_C": jnp.zeros((batch, s.conv_kernel - 1, gn), dtype),
+                "ssm": jnp.zeros((batch, s.n_heads, s.head_dim, s.state),
+                                 jnp.float32),
+            }
+        if blk.cross:
+            c["cross"] = {
+                "k": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            }
+        return c if c else None
+
+    stack = lambda c: jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (plan.n_periods,) + a.shape), c)
+    return {
+        "prefix": [one(b) for b in plan.prefix],
+        "period": [stack(one(b)) for b in plan.period],
+        "suffix": [one(b) for b in plan.suffix],
+    }

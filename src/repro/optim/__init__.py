@@ -1,0 +1,6 @@
+"""Optimisation: AdamW (from scratch), schedules, gradient compression."""
+
+from repro.optim import adamw, compress, schedule  # noqa: F401
+from repro.optim.adamw import AdamWConfig
+
+__all__ = ["adamw", "compress", "schedule", "AdamWConfig"]

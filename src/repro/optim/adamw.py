@@ -1,0 +1,89 @@
+"""AdamW from scratch (no optax), with mixed-precision master params and
+ZeRO-1-style sharded moments.
+
+State layout: {"step", "m", "mu", "nu"} where "m" holds f32 master params
+(when params are bf16) and mu/nu are the f32 moments. Moment sharding comes
+from :func:`repro.sharding.specs.opt_state_specs` — each moment shards its
+largest replicated dim over the data axis, giving the ZeRO-1 memory win
+(8 bytes/param -> 8/DP bytes/param) with XLA inserting the param
+all-gather after the update.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+State = Dict[str, Any]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    master_fp32: bool = True
+    schedule: Optional[Callable[[jax.Array], jax.Array]] = None  # step -> lr
+
+
+def init(params: Params, cfg: AdamWConfig) -> State:
+    f32 = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    state: State = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(f32, params),
+        "nu": jax.tree.map(f32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(grads: Params, state: State, params: Params, cfg: AdamWConfig
+           ) -> Tuple[Params, State, Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    lr = cfg.schedule(step) if cfg.schedule is not None else cfg.lr
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.float32(1.0)
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1.0 - cfg.b2) * g * g
+        mhat = mu / b1c
+        nhat = nu / b2c
+        m32 = master.astype(jnp.float32)
+        step_v = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * m32
+        new_master = m32 - lr * step_v
+        return mu, nu, new_master, new_master.astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state["mu"], state["nu"], masters, params)
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    new_master = jax.tree.map(lambda t: t[2], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_params = jax.tree.map(lambda t: t[3], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_state: State = {"step": step, "mu": mu, "nu": nu}
+    if "master" in state:
+        new_state["master"] = new_master
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, new_state, metrics

@@ -1,0 +1,9 @@
+"""Runtime: train/serve step factories, continuous batching."""
+
+from repro.runtime.batching import ContinuousBatcher, Request
+from repro.runtime.serve import make_decode_step, make_prefill_step, serve_shardings
+from repro.runtime.train import make_train_step, train_state_shardings
+
+__all__ = ["ContinuousBatcher", "Request", "make_decode_step",
+           "make_prefill_step", "serve_shardings", "make_train_step",
+           "train_state_shardings"]

@@ -1,0 +1,94 @@
+"""Distributed serve-step factories: prefill and decode.
+
+``make_decode_step`` is what the decode_* dry-run shapes lower: one new
+token per sequence against the sharded KV cache.  Cache shardings follow
+:func:`repro.sharding.specs.cache_specs` — batch over DP axes, KV heads
+over "model"; for batch==1 long-context the cache LENGTH dim shards over
+"data" (sequence parallelism; XLA inserts the exact masked-softmax
+reductions, and the shard_map tree-decode in sharding/collectives.py is
+the hand-scheduled alternative backend).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.sharding.specs import (batch_specs, cache_specs, data_axes,
+                                  named_shardings, param_specs)
+
+__all__ = ["make_prefill_step", "make_decode_step", "serve_shardings"]
+
+
+def serve_shardings(model, cfg: ArchConfig, mesh: Mesh, batch: int,
+                    cache_cap: int, enc_len: int = 0,
+                    seq_shard_fallback: bool = True):
+    key = jax.random.PRNGKey(0)
+    p_shape = jax.eval_shape(model.init_params, key)
+    p_spec = param_specs(p_shape, cfg, mesh)
+    if enc_len:
+        c_shape = jax.eval_shape(
+            partial(model.init_caches, batch, cache_cap, enc_len))
+    else:
+        c_shape = jax.eval_shape(partial(model.init_caches, batch, cache_cap))
+    c_spec = cache_specs(c_shape, cfg, mesh, batch,
+                         seq_shard_fallback=seq_shard_fallback)
+    return named_shardings(p_spec, mesh), named_shardings(c_spec, mesh)
+
+
+def make_decode_step(model, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                     batch: int = 1, cache_cap: int = 1024,
+                     enc_len: int = 0, donate_cache: bool = True,
+                     seq_shard_fallback: bool = True) -> Callable:
+    """(params, tokens (B,), caches, lengths) -> (logits, new_caches)."""
+
+    if enc_len:
+        def step(params, tokens, caches, lengths):
+            return model.decode_step(params, tokens, caches, lengths,
+                                     jnp.full_like(lengths, enc_len))
+    else:
+        def step(params, tokens, caches, lengths):
+            return model.decode_step(params, tokens, caches, lengths)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(2,) if donate_cache else ())
+
+    p_sh, c_sh = serve_shardings(model, cfg, mesh, batch, cache_cap, enc_len,
+                                 seq_shard_fallback=seq_shard_fallback)
+    dp = data_axes(mesh)
+    tok_spec = P(dp) if batch > 1 else P()
+    tok_sh = NamedSharding(mesh, tok_spec)
+    logit_sh = NamedSharding(mesh, P(dp if batch > 1 else None, "model"))
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, tok_sh, c_sh, tok_sh),
+        out_shardings=(logit_sh, c_sh),
+        donate_argnums=(2,) if donate_cache else (),
+    )
+
+
+def make_prefill_step(model, cfg: ArchConfig, mesh: Optional[Mesh] = None,
+                      batch: int = 1, seq: int = 1024,
+                      cache_cap: Optional[int] = None) -> Callable:
+    """(params, batch_inputs) -> (last_logits, caches, lengths)."""
+    cap = cache_cap or seq
+
+    def step(params, inputs):
+        return model.prefill(params, inputs, cache_cap=cap)
+
+    if mesh is None:
+        return jax.jit(step)
+
+    p_sh, c_sh = serve_shardings(model, cfg, mesh, batch, cap,
+                                 getattr(model, "enc_len", 0) or 0)
+    dp = data_axes(mesh)
+    in_sh = None  # let XLA infer input layout from batch_specs at call site
+    return jax.jit(step, in_shardings=(p_sh, None),
+                   out_shardings=(NamedSharding(mesh, P(dp if batch > 1 else None, "model")),
+                                  c_sh,
+                                  NamedSharding(mesh, P(dp if batch > 1 else None))))

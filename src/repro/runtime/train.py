@@ -1,0 +1,88 @@
+"""Distributed train-step factory.
+
+``make_train_step`` builds a donated, sharded ``jax.jit`` step:
+
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+
+Shardings come from :mod:`repro.sharding.specs` (TP/EP on "model",
+DP over "pod"+"data", ZeRO-1 moments over "data").  The same factory serves
+the real trainer (launch/train.py), the smoke tests (1-device mesh) and the
+multi-pod dry-run (512 fake devices; ``.lower(...)`` only).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+from repro.sharding.specs import (batch_specs, named_shardings,
+                                  opt_state_specs, param_specs)
+
+__all__ = ["make_train_step", "train_state_shardings"]
+
+
+def train_state_shardings(model, cfg: ArchConfig, mesh: Mesh,
+                          batch_example: Dict[str, Any],
+                          opt_cfg: AdamWConfig):
+    """Returns (param_sharding, opt_sharding, batch_sharding) NamedSharding
+    pytrees (from eval_shape — no allocation)."""
+    key = jax.random.PRNGKey(0)
+    p_shape = jax.eval_shape(model.init_params, key)
+    p_spec = param_specs(p_shape, cfg, mesh)
+    o_shape = jax.eval_shape(partial(adamw.init, cfg=opt_cfg), p_shape)
+
+    def o_spec_fn(path, leaf):
+        # step scalar: replicated; mu/nu/master mirror param specs + ZeRO-1
+        return P()
+
+    # mu/nu/master share the param tree structure under their subtree
+    o_spec = {
+        "step": P(),
+        "mu": opt_state_specs(p_shape, p_spec, mesh),
+        "nu": opt_state_specs(p_shape, p_spec, mesh),
+    }
+    if opt_cfg.master_fp32:
+        o_spec["master"] = opt_state_specs(p_shape, p_spec, mesh)
+    b_shape = jax.eval_shape(lambda b: b, batch_example)
+    b_spec = batch_specs(b_shape, mesh)
+    return (named_shardings(p_spec, mesh), named_shardings(o_spec, mesh),
+            named_shardings(b_spec, mesh))
+
+
+def make_train_step(model, cfg: ArchConfig, opt_cfg: AdamWConfig,
+                    mesh: Optional[Mesh] = None,
+                    batch_example: Optional[Dict[str, Any]] = None,
+                    donate: bool = True) -> Callable:
+    """Build the jitted step.  Without a mesh: plain jit (CPU tests)."""
+
+    def step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.train_loss(p, batch)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_opt, opt_metrics = adamw.update(grads, opt_state,
+                                                        params, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return new_params, new_opt, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    assert batch_example is not None
+    p_sh, o_sh, b_sh = train_state_shardings(model, cfg, mesh, batch_example,
+                                             opt_cfg)
+    metric_sh = NamedSharding(mesh, P())
+    return jax.jit(
+        step,
+        in_shardings=(p_sh, o_sh, b_sh),
+        out_shardings=(p_sh, o_sh, None),
+        donate_argnums=(0, 1) if donate else (),
+    )

@@ -1,0 +1,9 @@
+"""Distribution: mesh axes, PartitionSpec rules, collective strategies."""
+
+from repro.sharding import specs  # noqa: F401
+from repro.sharding.specs import (batch_specs, cache_specs, data_axes,
+                                  named_shardings, opt_state_specs,
+                                  param_specs)
+
+__all__ = ["specs", "batch_specs", "cache_specs", "data_axes",
+           "named_shardings", "opt_state_specs", "param_specs"]

@@ -1,0 +1,3 @@
+"""Analysis tooling: roofline derivation from compiled HLO."""
+
+from repro.tools import roofline  # noqa: F401

@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf hillclimbing harness (EXPERIMENTS.md §Perf).
+
+Lowers VARIANTS of one (arch x shape) cell on the single-pod mesh —
+config tweaks (MoE dispatch mode, SSD chunk, backend choice) or sharding
+tweaks (cache seq-shard fallback) — and reports the roofline-term deltas
+vs the named baseline.  Results land in experiments/perf/<cell>/<variant>.json.
+
+    PYTHONPATH=src python -m repro.tools.hillclimb --cell stablelm-12b/decode_32k
+    PYTHONPATH=src python -m repro.tools.hillclimb --list
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models.stack import unroll_scans  # noqa: E402
+from repro.tools.roofline import analyze, model_flops_for  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "perf")
+
+
+def _ssd_chunk(cfg, q):
+    return dataclasses.replace(cfg, ssm=dataclasses.replace(cfg.ssm, chunk=q))
+
+
+def _moe_dispatch(cfg, mode):
+    return dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe,
+                                                            dispatch=mode))
+
+
+def _remat_off(cfg):
+    # no-remat variant is threaded via backends dict hack? kept explicit:
+    return cfg
+
+
+# variant -> (cfg_transform, build_cell kwargs)
+VARIANTS = {
+    "stablelm-12b/decode_32k": {
+        "baseline-replicated-kv": (None, {"seq_shard_fallback": False}),
+        "seq-shard-kv": (None, {"seq_shard_fallback": True}),
+    },
+    "pixtral-12b/decode_32k": {
+        "baseline-replicated-kv": (None, {"seq_shard_fallback": False}),
+        "seq-shard-kv": (None, {"seq_shard_fallback": True}),
+    },
+    "minitron-4b/decode_32k": {
+        "baseline-replicated-kv": (None, {"seq_shard_fallback": False}),
+        "seq-shard-kv": (None, {"seq_shard_fallback": True}),
+    },
+    "gemma3-1b/decode_32k": {
+        "baseline-replicated-kv": (None, {"seq_shard_fallback": False}),
+        "seq-shard-kv": (None, {"seq_shard_fallback": True}),
+    },
+    "deepseek-v2-lite-16b/decode_32k": {
+        "baseline-replicated-latent": (None, {"seq_shard_fallback": False}),
+        "seq-shard-latent": (None, {"seq_shard_fallback": True}),
+    },
+    "qwen2-moe-a2.7b/train_4k": {
+        "baseline-global-dispatch": (lambda c: _moe_dispatch(c, "global"), {}),
+        "local-dispatch": (lambda c: _moe_dispatch(c, "local"), {}),
+    },
+    "deepseek-v2-lite-16b/train_4k": {
+        "baseline-global-dispatch": (lambda c: _moe_dispatch(c, "global"), {}),
+        "local-dispatch": (lambda c: _moe_dispatch(c, "local"), {}),
+    },
+    "mamba2-370m/train_4k": {
+        "baseline-chunk128": (lambda c: _ssd_chunk(c, 128), {}),
+        "chunk-64": (lambda c: _ssd_chunk(c, 64), {}),
+        "chunk-32": (lambda c: _ssd_chunk(c, 32), {}),
+        "chunk-256": (lambda c: _ssd_chunk(c, 256), {}),
+        "no-remat": (lambda c: dataclasses.replace(c, remat=False), {}),
+    },
+    "zamba2-7b/train_4k": {
+        "baseline-chunk128": (lambda c: _ssd_chunk(c, 128), {}),
+        "chunk-64": (lambda c: _ssd_chunk(c, 64), {}),
+        "chunk-256": (lambda c: _ssd_chunk(c, 256), {}),
+    },
+}
+
+
+def run_variant(arch: str, shape: str, label: str, cfg_fn, kwargs,
+                out_dir: str) -> dict:
+    cfg = get_config(arch)
+    if cfg_fn is not None:
+        cfg = cfg_fn(cfg)
+    sc = cfg.shape(shape)
+    mesh = make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with mesh, unroll_scans():
+        cell = build_cell(arch, shape, mesh, cfg=cfg, **kwargs)
+        compiled = cell.step.lower(*cell.args).compile()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        mem = compiled.memory_analysis()
+    rep = analyze(cell.name, "single", mesh.size, cost, hlo,
+                  model_flops=model_flops_for(cfg, sc.kind, sc.seq_len,
+                                              sc.global_batch),
+                  bytes_per_device=(mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes))
+    rec = json.loads(rep.to_json())
+    rec.update(arch=arch, shape=shape, variant=label,
+               compile_s=round(time.time() - t0, 1))
+    d = os.path.join(out_dir, f"{arch}__{shape}")
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{label}.json"), "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+    print(f"[{label:28s}] compute={rec['compute_s']:.3e} "
+          f"memory={rec['memory_s']:.3e} collective={rec['collective_s']:.3e} "
+          f"bneck={rec['bottleneck']} GB/dev={rec['bytes_per_device']/1e9:.1f} "
+          f"({rec['compile_s']}s)")
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None, help="arch/shape")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+    if args.list:
+        for cell, vs in VARIANTS.items():
+            print(cell, "->", ", ".join(vs))
+        return 0
+    cells = [args.cell] if args.cell else list(VARIANTS)
+    for cell in cells:
+        arch, shape = cell.split("/")
+        print(f"=== {cell} ===")
+        for label, (cfg_fn, kwargs) in VARIANTS[cell].items():
+            if args.variant and label != args.variant:
+                continue
+            try:
+                run_variant(arch, shape, label, cfg_fn, kwargs, args.out)
+            except Exception as e:  # noqa: BLE001
+                print(f"[{label:28s}] FAILED {type(e).__name__}: {e}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

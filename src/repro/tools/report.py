@@ -1,0 +1,111 @@
+"""EXPERIMENTS.md §Dry-run / §Roofline table generation from
+experiments/dryrun/*.json.
+
+    PYTHONPATH=src python -m repro.tools.report [--dir experiments/dryrun]
+
+Prints markdown to stdout; the checked-in EXPERIMENTS.md embeds the output.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+__all__ = ["load_records", "roofline_table", "dryrun_table"]
+
+
+def load_records(dirpath: str) -> List[Dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "-"
+    if x >= 0.1:
+        return f"{x:.2f}s"
+    if x >= 1e-4:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
+    rows = [r for r in recs if r["mesh"] == mesh]
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "useful ratio | GB/dev | note |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - "
+                       f"| skipped: {r['reason'][:40]} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - "
+                       f"| ERROR {r.get('error','')[:40]} |")
+            continue
+        note = ""
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"**{r['bottleneck']}** | {r['useful_ratio']:.2f} | "
+            f"{r['bytes_per_device']/1e9:.1f} | {note} |")
+    return "\n".join(out)
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | status | HLO FLOPs/dev | bytes/dev | "
+           "wire B/dev | collectives | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} | - | - | - | - | - |")
+            continue
+        cols = ", ".join(f"{k}x{v}" for k, v in sorted(
+            r.get("counts", {}).items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+            f"{r['hlo_flops']:.2e} | {r['bytes_per_device']/1e9:.1f}G | "
+            f"{r['wire_bytes_per_chip']:.2e} | {cols} | "
+            f"{r.get('compile_s','-')} |")
+    return "\n".join(out)
+
+
+def summary_stats(recs: List[Dict]) -> str:
+    ok = [r for r in recs if r["status"] == "ok"]
+    skipped = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] == "error"]
+    lines = [f"- cells: {len(recs)} ({len(ok)} compiled ok, "
+             f"{len(skipped)} documented skips, {len(err)} errors)"]
+    for mesh in ("single", "multipod"):
+        ms = [r for r in ok if r["mesh"] == mesh]
+        if ms:
+            bn: Dict[str, int] = {}
+            for r in ms:
+                bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+            lines.append(f"- {mesh}: bottleneck distribution {bn}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = load_records(args.dir)
+    print("## Summary\n")
+    print(summary_stats(recs))
+    print("\n## Roofline (single-pod 16x16, per-chip seconds)\n")
+    print(roofline_table(recs, "single"))
+    print("\n## Roofline (multi-pod 2x16x16)\n")
+    print(roofline_table(recs, "multipod"))
+    print("\n## Dry-run raw\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Test config. NOTE: no XLA_FLAGS manipulation here — tests run on the
+real single CPU device; only launch/dryrun.py fakes 512 devices.
+Multi-device sharding tests spawn subprocesses with their own flags."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,166 @@
+"""Per-architecture smoke tests: REDUCED configs (same block structure,
+tiny dims) run one forward/train step on CPU asserting output shapes and
+no NaNs — one test per assigned architecture, as required.
+
+Full configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py and tests/test_dryrun_machinery.py.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_reduced, list_configs
+from repro.models.encdec import EncDec
+from repro.models.lm import LM
+
+ALL_ARCHS = list_configs()
+
+
+def _build(cfg):
+    return EncDec(cfg) if cfg.n_encoder_layers else LM(cfg)
+
+
+def _batch(cfg, key, b=2, s=16):
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.n_encoder_layers:
+        batch["src_embeds"] = jax.random.normal(key, (b, s, cfg.d_model),
+                                                jnp.float32)
+    elif cfg.frontend == "embeds":
+        batch["embeds"] = jax.random.normal(key, (b, s, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_dims_exact(arch):
+    """The assigned numbers, verbatim."""
+    cfg = get_config(arch)
+    expected = {
+        "zamba2-7b": (3584, 32, 32, 14336, 32000, 81),
+        "seamless-m4t-medium": (1024, 16, 16, 4096, 256206, 24),
+        "qwen2-moe-a2.7b": (2048, 16, 16, 1408, 151936, 24),
+        "deepseek-v2-lite-16b": (2048, 16, 16, 1408, 102400, 27),
+        "phi3-mini-3.8b": (3072, 32, 32, 8192, 32064, 32),
+        "stablelm-12b": (5120, 32, 8, 13824, 100352, 40),
+        "minitron-4b": (3072, 24, 8, 9216, 256000, 32),
+        "gemma3-1b": (1152, 4, 1, 6912, 262144, 26),
+        "pixtral-12b": (5120, 32, 8, 14336, 131072, 40),
+        "mamba2-370m": (1024, 1, 1, 0, 50280, 48),
+    }[arch]
+    got = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab,
+           cfg.n_layers)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+def test_arch_specials():
+    assert get_config("zamba2-7b").ssm.state == 64
+    assert get_config("mamba2-370m").ssm.state == 128
+    qw = get_config("qwen2-moe-a2.7b").moe
+    assert (qw.n_routed, qw.top_k, qw.n_routed_padded) == (60, 4, 64)
+    ds = get_config("deepseek-v2-lite-16b")
+    assert ds.moe.top_k == 6 and ds.mla.kv_lora_rank == 512
+    g3 = get_config("gemma3-1b")
+    assert g3.window is not None and g3.plan.period.count(
+        g3.plan.period[-1]) == 1  # 5 local : 1 global
+    # long_500k runs only for sub-quadratic archs
+    runs_long = {a for a in ALL_ARCHS
+                 if "long_500k" not in get_config(a).skip_shapes}
+    assert runs_long == {"zamba2-7b", "gemma3-1b", "mamba2-370m"}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    model = _build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init_params(key)
+    batch = _batch(cfg, key)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    # one grad step moves params and stays finite
+    grads = jax.grad(lambda p: model.train_loss(p, batch)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_prefill_decode_match_forward(arch):
+    """Teacher-forcing consistency: prefill + step-by-step decode must equal
+    the full causal forward at every position (exact for no-drop MoE)."""
+    cfg = get_reduced(arch)
+    key = jax.random.PRNGKey(1)
+    b, s, s0 = 2, 24, 16
+    if cfg.n_encoder_layers:
+        model = EncDec(cfg)
+        params = model.init_params(key)
+        src = jax.random.normal(key, (b, 8, cfg.d_model), jnp.float32)
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+        enc_out = model.encode(params, src, remat=False)
+        h, _, _ = model._decode_trunk(
+            params, params["embed"][toks].astype(jnp.float32), mode="train",
+            caches=None, lengths=None, enc_out=enc_out, enc_lengths=None,
+            cache_cap=None, remat=False)
+        full_logits = jnp.einsum("bsd,dv->bsv", h,
+                                 params["lm_head"].astype(h.dtype))
+        lg, caches, lengths = model.prefill(
+            params, {"src_embeds": src, "tokens": toks[:, :s0]}, cache_cap=s)
+        errs = [float(jnp.abs(lg - full_logits[:, s0 - 1]).max())]
+        enc_lengths = jnp.full((b,), 8, jnp.int32)
+        for t in range(s0, s):
+            lg, caches = model.decode_step(params, toks[:, t], caches,
+                                           lengths, enc_lengths)
+            lengths = lengths + 1
+            errs.append(float(jnp.abs(lg - full_logits[:, t]).max()))
+    else:
+        model = LM(cfg)
+        params = model.init_params(key)
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab)
+        batch = {"tokens": toks}
+        if cfg.frontend == "embeds":
+            batch["embeds"] = params["embed"][toks].astype(jnp.float32)
+        h, _, _ = model.forward(params, batch, mode="train", remat=False)
+        full_logits = model._head(params, h)
+        pre = {"tokens": toks[:, :s0]}
+        if cfg.frontend == "embeds":
+            pre["embeds"] = batch["embeds"][:, :s0]
+        lg, caches, lengths = model.prefill(params, pre, cache_cap=s)
+        errs = [float(jnp.abs(lg - full_logits[:, s0 - 1]).max())]
+        for t in range(s0, s):
+            lg, caches = model.decode_step(params, toks[:, t], caches, lengths)
+            lengths = lengths + 1
+            errs.append(float(jnp.abs(lg - full_logits[:, t]).max()))
+    assert max(errs) < 5e-3, f"{arch}: decode diverges ({max(errs):.2e})"
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "zamba2-7b", "mamba2-370m"])
+def test_reduced_long_context_decode_constant_state(arch):
+    """The long_500k-capable archs: cache/state size must not grow with
+    decode steps (rolling local windows, O(1) SSM state)."""
+    cfg = get_reduced(arch)
+    model = LM(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init_params(key)
+    toks = jax.random.randint(key, (1, 8), 0, cfg.vocab)
+    _, caches, lengths = model.prefill(params, {"tokens": toks}, cache_cap=64)
+    size0 = sum(x.size for x in jax.tree.leaves(caches))
+    for t in range(5):
+        lg, caches = model.decode_step(
+            params, jnp.asarray([t % cfg.vocab]), caches, lengths)
+        lengths = lengths + 1
+        assert jnp.all(jnp.isfinite(lg))
+    assert sum(x.size for x in jax.tree.leaves(caches)) == size0
+
+
+def test_param_counts_plausible():
+    """Sanity: headline param counts within 40% of the names."""
+    expect = {"zamba2-7b": 7e9, "phi3-mini-3.8b": 3.8e9, "stablelm-12b": 12e9,
+              "minitron-4b": 4e9, "pixtral-12b": 12e9, "mamba2-370m": 370e6,
+              "gemma3-1b": 1e9, "deepseek-v2-lite-16b": 16e9,
+              "qwen2-moe-a2.7b": 14e9}
+    for arch, n in expect.items():
+        total = get_config(arch).param_count()["total"]
+        assert 0.6 * n < total < 1.65 * n, f"{arch}: {total:.2e} vs {n:.2e}"

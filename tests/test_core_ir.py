@@ -1,0 +1,236 @@
+"""GraphIR, registry, passes, importer, executor, selector unit tests."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (AutotunePolicy, CostModelPolicy, Executor,
+                        FixedPolicy, Graph, GraphError, Node, TensorSpec,
+                        backends_for, eliminate_common_subexpr,
+                        eliminate_dead, fold_batchnorm, fold_constants,
+                        fuse_bias_act, get_impl, get_op, infer_shapes,
+                        load_graph, registered_ops, save_graph, simplify,
+                        topological_order)
+
+
+def tiny_graph(rng):
+    g = Graph(
+        name="tiny",
+        inputs={"x": TensorSpec((2, 8, 8, 3))},
+        outputs=["y"],
+        nodes=[
+            Node("c1", "conv2d", ["x", "w1"], ["h1"], {"stride": 1, "padding": "SAME"}),
+            Node("b1", "bias_add", ["h1", "bb"], ["h2"]),
+            Node("r1", "relu", ["h2"], ["h3"]),
+            Node("d1", "flatten", ["h3"], ["h4"]),
+            Node("fc", "dense", ["h4", "w2"], ["y"]),
+        ],
+        params={
+            "w1": rng.standard_normal((3, 3, 3, 4)).astype(np.float32),
+            "bb": rng.standard_normal((4,)).astype(np.float32),
+            "w2": rng.standard_normal((8 * 8 * 4, 10)).astype(np.float32),
+        },
+    )
+    g.validate()
+    return g
+
+
+class TestIR:
+    def test_topological_order_detects_cycle(self, rng):
+        g = tiny_graph(rng)
+        g.nodes[0].inputs[0] = "y"  # cycle
+        with pytest.raises(GraphError):
+            topological_order(g)
+
+    def test_duplicate_value_def_rejected(self, rng):
+        g = tiny_graph(rng)
+        g.nodes[1].outputs = ["h1"]
+        with pytest.raises(GraphError):
+            g.producers()
+
+    def test_undefined_input_rejected(self, rng):
+        g = tiny_graph(rng)
+        g.nodes[0].inputs[1] = "nonexistent"
+        with pytest.raises(GraphError):
+            g.validate()
+
+    def test_shape_inference(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        assert g.value_info["h1"].shape == (2, 8, 8, 4)
+        assert g.value_info["y"].shape == (2, 10)
+
+    def test_spec_repr(self):
+        assert repr(TensorSpec((1, 3), "float32")) == "f32[1,3]"
+
+
+class TestPasses:
+    def _run(self, g, x, backend="ref"):
+        return np.asarray(Executor(infer_shapes(g),
+                                   FixedPolicy(prefer=(backend,)))(x=x)[0])
+
+    def test_fuse_bias_act(self, rng):
+        g = tiny_graph(rng)
+        fused = fuse_bias_act(g)
+        ops = [n.op for n in fused.nodes]
+        assert "conv2d_fused" in ops and "bias_add" not in ops
+
+    def test_fusion_preserves_semantics(self, rng):
+        g = tiny_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        np.testing.assert_allclose(self._run(g, x),
+                                   self._run(fuse_bias_act(g), x),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_dce_removes_dead_nodes(self, rng):
+        g = tiny_graph(rng)
+        g.nodes.append(Node("dead", "relu", ["h1"], ["unused"]))
+        g2 = eliminate_dead(g)
+        assert all(n.name != "dead" for n in g2.nodes)
+
+    def test_cse_merges_duplicates(self, rng):
+        g = tiny_graph(rng)
+        g.nodes.insert(1, Node("c1b", "conv2d", ["x", "w1"], ["h1b"],
+                               {"stride": 1, "padding": "SAME"}))
+        g.nodes.append(Node("add", "add", ["h1", "h1b"], ["z"]))
+        g.outputs = ["z"]
+        g2 = eliminate_common_subexpr(g)
+        assert sum(1 for n in g2.nodes if n.op == "conv2d") == 1
+
+    def test_fold_constants(self, rng):
+        g = tiny_graph(rng)
+        g.nodes.insert(0, Node("pre", "relu", ["w1"], ["w1r"]))
+        g.nodes[1].inputs[1] = "w1r"
+        g2 = fold_constants(g)
+        assert all(n.name != "pre" for n in g2.nodes)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        np.testing.assert_allclose(self._run(g, x), self._run(g2, x),
+                                   rtol=1e-5)
+
+    def test_fold_batchnorm(self, rng):
+        g = Graph(
+            name="bn", inputs={"x": TensorSpec((1, 4, 4, 3))}, outputs=["y"],
+            nodes=[
+                Node("c", "conv2d", ["x", "w"], ["h"], {"padding": "SAME"}),
+                Node("n", "batchnorm", ["h", "s", "b", "m", "v"], ["y"]),
+            ],
+            params={
+                "w": rng.standard_normal((3, 3, 3, 4)).astype(np.float32),
+                "s": rng.standard_normal((4,)).astype(np.float32),
+                "b": rng.standard_normal((4,)).astype(np.float32),
+                "m": rng.standard_normal((4,)).astype(np.float32),
+                "v": (np.abs(rng.standard_normal((4,))) + 0.5).astype(np.float32),
+            })
+        g2 = fold_batchnorm(g)
+        assert all(n.op != "batchnorm" for n in g2.nodes)
+        x = rng.standard_normal((1, 4, 4, 3)).astype(np.float32)
+        np.testing.assert_allclose(self._run(g, x), self._run(g2, x),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_simplify_pipeline(self, rng):
+        g = tiny_graph(rng)
+        g2 = simplify(g)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        np.testing.assert_allclose(self._run(g, x), self._run(g2, x),
+                                   rtol=1e-4, atol=1e-4)
+        assert len(g2.nodes) < len(g.nodes)
+
+
+class TestRegistry:
+    def test_every_op_has_ref(self):
+        for op in registered_ops():
+            assert "ref" in backends_for(op), f"{op} missing ref backend"
+
+    def test_conv_backends_registered(self):
+        assert set(backends_for("conv2d")) >= {"ref", "xla", "winograd", "pallas"}
+
+    def test_unknown_backend_raises(self):
+        with pytest.raises(KeyError):
+            get_impl("conv2d", "nope")
+
+    def test_winograd_supports_predicate(self):
+        specs = [TensorSpec((1, 8, 8, 3)), TensorSpec((3, 3, 3, 4))]
+        assert "winograd" in backends_for("conv2d", specs, {"stride": 1})
+        assert "winograd" not in backends_for("conv2d", specs, {"stride": 2})
+
+    def test_cost_models_positive(self):
+        specs = [TensorSpec((1, 8, 8, 3)), TensorSpec((3, 3, 3, 4))]
+        cost = get_op("conv2d").cost_fn(specs, {"stride": 1, "padding": "SAME"})
+        assert cost.flops > 0 and cost.bytes > 0
+        wino = get_impl("conv2d", "winograd").cost(specs, {"stride": 1,
+                                                           "padding": "SAME"})
+        assert wino.flops < cost.flops  # fewer multiplies is the point
+
+
+class TestSelectorExecutor:
+    def test_fixed_policy_per_op(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        ex = Executor(g, FixedPolicy(per_op={"conv2d": ("winograd",)},
+                                     prefer=("ref",)))
+        assert ex.assignment["c1"] == "winograd"
+
+    def test_pinned_backend_wins(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        g.nodes[0].backend = "xla"
+        ex = Executor(g, FixedPolicy(prefer=("ref",)))
+        assert ex.assignment["c1"] == "xla"
+
+    def test_cost_model_policy_runs(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        ex = Executor(g, CostModelPolicy())
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        (y,) = ex(x=x)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_autotune_policy_picks_measured_best(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        pol = AutotunePolicy(reps=2)
+        ex = Executor(g, pol)
+        assert ex.assignment["c1"] in backends_for("conv2d")
+        assert pol._timings  # measurements cached
+
+    def test_instrumented_run_reports_all_nodes(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        ex = Executor(g, FixedPolicy(prefer=("ref",)))
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        outs, reports = ex.run_instrumented(x=x)
+        assert len(reports) == len(g.nodes)
+        assert all(r.seconds >= 0 for r in reports)
+
+    def test_executor_backend_equivalence(self, rng):
+        """The Orpheus guarantee: same graph, any backend, same numbers."""
+        g = infer_shapes(tiny_graph(rng))
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        outs = {}
+        for b in ("ref", "xla", "pallas"):
+            outs[b] = np.asarray(
+                Executor(g, FixedPolicy(prefer=(b, "ref")))(x=x)[0])
+        np.testing.assert_allclose(outs["xla"], outs["ref"], rtol=1e-4,
+                                   atol=1e-4)
+        np.testing.assert_allclose(outs["pallas"], outs["ref"], rtol=1e-4,
+                                   atol=1e-4)
+
+    def test_lower_compile_cost(self, rng):
+        g = infer_shapes(tiny_graph(rng))
+        co = Executor(g, FixedPolicy(prefer=("ref",))).lower().compile()
+        assert co.cost_analysis().get("flops", 0) > 0
+
+
+class TestImporter:
+    def test_roundtrip(self, rng, tmp_path):
+        g = simplify(tiny_graph(rng))
+        save_graph(g, str(tmp_path / "m"))
+        g2 = load_graph(str(tmp_path / "m"))
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        y1 = Executor(g, FixedPolicy(prefer=("ref",)))(x=x)[0]
+        y2 = Executor(infer_shapes(g2), FixedPolicy(prefer=("ref",)))(x=x)[0]
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_version_check(self, rng, tmp_path):
+        import json, os
+        g = tiny_graph(rng)
+        save_graph(g, str(tmp_path / "m"))
+        meta = json.load(open(tmp_path / "m" / "model.json"))
+        meta["format_version"] = 999
+        json.dump(meta, open(tmp_path / "m" / "model.json", "w"))
+        with pytest.raises(GraphError):
+            load_graph(str(tmp_path / "m"))

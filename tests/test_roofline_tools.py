@@ -1,0 +1,84 @@
+"""Unit tests for the roofline HLO-parsing and analysis tooling."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.tools.roofline import (V5E, analyze, collective_bytes,
+                                  model_flops_for)
+
+HLO = """
+HloModule test
+%ar = f32[256,128]{1,0} all-reduce(f32[256,128] %x), replica_groups=[16,16]<=[256]
+%ag = bf16[64,512]{1,0} all-gather(bf16[64,32] %y), replica_groups={{0,1,2,3}}, dimensions={1}
+%rs = f32[32]{0} reduce-scatter(f32[128] %z), replica_groups=[32,8]<=[256]
+%cp = bf16[8,8]{1,0} collective-permute(bf16[8,8] %w), source_target_pairs={{0,1}}
+%aa = s32[16]{0} all-to-all(s32[16] %v), replica_groups=[64,4]<=[256]
+%ars = f32[2,2] all-reduce-start(f32[2,2] %q), replica_groups=[128,2]<=[256]
+"""
+
+
+class TestCollectiveParse:
+    def test_counts_and_types(self):
+        wire, per_type, counts = collective_bytes(HLO, 256)
+        assert counts == {"all-reduce": 2, "all-gather": 1,
+                          "reduce-scatter": 1, "collective-permute": 1,
+                          "all-to-all": 1}
+
+    def test_ring_costs(self):
+        wire, per_type, _ = collective_bytes(HLO, 256)
+        # all-reduce: 2(n-1)/n * size; n=16, size=256*128*4
+        ar1 = 2 * 15 / 16 * 256 * 128 * 4
+        ars = 2 * 1 / 2 * 2 * 2 * 4
+        assert per_type["all-reduce"] == pytest.approx(ar1 + ars)
+        # all-gather: (n-1)/n * result size; n=4
+        assert per_type["all-gather"] == pytest.approx(3 / 4 * 64 * 512 * 2)
+        # reduce-scatter: (n-1) * result size (input = result * n); n=8
+        assert per_type["reduce-scatter"] == pytest.approx(7 / 8 * 32 * 4 * 8)
+        assert per_type["collective-permute"] == pytest.approx(8 * 8 * 2)
+        assert per_type["all-to-all"] == pytest.approx(3 / 4 * 16 * 4)
+
+    def test_empty_hlo(self):
+        wire, per_type, counts = collective_bytes("HloModule empty", 8)
+        assert wire == 0 and not counts
+
+
+class TestAnalyze:
+    def test_bottleneck_selection(self):
+        rep = analyze("c", "single", 256,
+                      {"flops": 1e12, "bytes accessed": 1e9}, HLO,
+                      model_flops=256e12)
+        assert rep.compute_s == pytest.approx(1e12 / V5E.peak_flops)
+        assert rep.memory_s == pytest.approx(1e9 / V5E.hbm_bw)
+        assert rep.bottleneck == "compute"
+        assert rep.useful_ratio == pytest.approx(1.0)
+
+    def test_extra_cost_for_pallas(self):
+        base = analyze("c", "single", 256, {"flops": 1e12}, "", 1e12)
+        with_k = analyze("c", "single", 256, {"flops": 1e12}, "", 1e12,
+                         extra_cost=(1e12, 1e9))
+        assert with_k.hlo_flops == pytest.approx(2e12)
+        assert with_k.hlo_bytes == pytest.approx(1e9)
+        assert with_k.compute_s > base.compute_s
+
+
+class TestModelFlops:
+    def test_dense_train(self):
+        cfg = get_config("phi3-mini-3.8b")
+        n_active = cfg.param_count()["active"]
+        assert model_flops_for(cfg, "train", 4096, 256) == pytest.approx(
+            6 * n_active * 4096 * 256)
+        assert model_flops_for(cfg, "decode", 32768, 128) == pytest.approx(
+            2 * n_active * 128)
+
+    def test_moe_active_smaller_than_total(self):
+        cfg = get_config("qwen2-moe-a2.7b")
+        c = cfg.param_count()
+        assert c["active"] < 0.5 * c["total"]
+
+    def test_active_params_sane(self):
+        # qwen2-moe A2.7B: ~2.7B active (+ lm_head counted by convention)
+        c = get_config("qwen2-moe-a2.7b").param_count()
+        assert 1.5e9 < c["active"] < 4.5e9, c["active"]
