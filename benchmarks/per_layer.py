@@ -1,29 +1,34 @@
 """Per-layer evaluation (paper §I contribution 6): individual-layer timing
-of a full network, per backend — the instrumented-executor infrastructure.
+of a full network, per backend — the instrumented-Program infrastructure.
 
 Prints the heaviest layers of ResNet-18 with their per-backend wall time
 and the analytic cost model's prediction, demonstrating both halves of the
 paper's evaluation story (measured + modelled, full network + single layer).
+Autotune measurements hit the persistent cache, so reruns are cheap.
 """
 
 from __future__ import annotations
 
+from typing import Optional
+
 import numpy as np
 
-from repro.core import Executor, FixedPolicy, simplify
+from repro.core import FixedPolicy, compile, default_cache_path
 from repro.core.selector import AutotunePolicy
 from repro.models.cnn import build_cnn
 
 
-def run(model: str = "resnet-18", top_k: int = 5):
+def run(model: str = "resnet-18", top_k: int = 5,
+        autotune_cache: Optional[str] = None):
     rng = np.random.default_rng(0)
-    g = simplify(build_cnn(model, batch=1))
+    prog = compile(build_cnn(model, batch=1), policy=FixedPolicy(prefer=("ref",)))
+    g = prog.graph
     x = rng.standard_normal(g.inputs["x"].shape).astype(np.float32)
-    ex = Executor(g, FixedPolicy(prefer=("ref",)))
-    _, reports = ex.run_instrumented(x=x)
+    _, reports = prog.run_instrumented(x=x)
     reports.sort(key=lambda r: r.seconds, reverse=True)
 
-    tuner = AutotunePolicy(reps=2)
+    tuner = AutotunePolicy(reps=2,
+                           cache_path=autotune_cache or default_cache_path())
     rows = []
     for r in reports[:top_k]:
         node = next(n for n in g.nodes if n.name == r.name)

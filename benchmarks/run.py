@@ -16,6 +16,15 @@ def main() -> None:
     fast = os.environ.get("ORPHEUS_BENCH_FAST", "0") == "1"
     t0 = time.time()
 
+    print("# --- pipeline: per-pass compile-time profile ---")
+    from repro.core import FixedPolicy, compile
+    from repro.models.cnn import build_cnn
+    prog = compile(build_cnn("mobilenet-v1", batch=1),
+                   policy=FixedPolicy(prefer=("ref",)))
+    for i, s in enumerate(prog.pass_stats):
+        print(f"pipeline/{i:02d}_{s.name},{s.seconds*1e6:.0f},"
+              f"nodes={s.nodes_before}->{s.nodes_after}")
+
     print("# --- table1: framework feature metrics ---")
     from benchmarks import table1_features
     table1_features.main()

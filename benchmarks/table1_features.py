@@ -16,8 +16,8 @@ import time
 
 import numpy as np
 
-from repro.core import (Executor, FixedPolicy, backends_for, registered_ops,
-                        load_graph, save_graph, simplify)
+from repro.core import (FixedPolicy, backends_for, compile, registered_ops,
+                        load_graph, save_graph)
 from repro.models.cnn import build_cnn
 
 
@@ -31,12 +31,12 @@ def run():
     rows["max_backends_per_op"] = max(len(b) for b in multi.values())
 
     # dispatch overhead: first-call trace time vs steady-state call
-    g = simplify(build_cnn("resnet-18", batch=1))
+    prog = compile(build_cnn("resnet-18", batch=1),
+                   policy=FixedPolicy(prefer=("xla", "ref")))
     x = np.random.default_rng(0).standard_normal(
-        g.inputs["x"].shape).astype(np.float32)
-    ex = Executor(g, FixedPolicy(prefer=("xla", "ref")))
+        prog.graph.inputs["x"].shape).astype(np.float32)
     t0 = time.perf_counter()
-    fn = ex.compile()
+    fn = prog.callable()
     import jax
     jax.block_until_ready(fn({"x": x}))
     rows["trace_compile_s"] = time.perf_counter() - t0

@@ -7,6 +7,10 @@ This script reruns that comparison on THIS machine's CPU via XLA and
 reports whichever backend wins where — plus the autotuned per-layer mix,
 which is the point of the framework.
 
+Each model goes through the staged ``compile()`` pipeline once; autotune
+measurements persist in the on-disk cache (see ``--autotune-cache``), so a
+second invocation of this script performs zero re-measurements.
+
 Run:  PYTHONPATH=src:. python examples/orpheus_cnn_eval.py [--fast]
 """
 
@@ -21,9 +25,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="three small models, no autotune")
+    ap.add_argument("--autotune-cache", default=None, metavar="PATH",
+                    help="autotune cache JSON (default: "
+                         "$ORPHEUS_AUTOTUNE_CACHE or ~/.cache/orpheus)")
     args = ap.parse_args()
     models = (["wrn-40-2", "mobilenet-v1", "resnet-18"] if args.fast else None)
-    rows = run(models=models, reps=2, include_autotune=not args.fast)
+    rows = run(models=models, reps=2, include_autotune=not args.fast,
+               autotune_cache=args.autotune_cache)
     cols = [c for c in rows[0] if c not in ("model", "winner")]
     print(f"\n{'model':14s} " + " ".join(f"{c:>10s}" for c in cols)
           + "  winner")

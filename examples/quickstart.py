@@ -1,10 +1,12 @@
-"""Quickstart: the Orpheus-JAX programming model in 60 lines.
+"""Quickstart: the Orpheus-JAX programming model in 70 lines.
 
 1. Build an operator graph (as an ONNX import would land it).
-2. Simplify it (BN fold, bias+act fusion, DCE).
-3. Execute the SAME graph under three backend assignments and compare.
-4. Let the autotuner pick the best backend per layer.
-5. Export/import via OXF.
+2. compile() it: the staged pipeline simplifies (BN fold, bias+act fusion,
+   elementwise-chain fusion, DCE), a policy assigns a backend per node, and
+   an immutable Program comes out — with per-pass PassStats.
+3. Compile the SAME graph under three backend assignments and compare.
+4. Let the autotuner pick the best backend per layer (persistently cached).
+5. Save the Program (graph + weights + frozen assignment) and reload it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,8 +15,8 @@ import tempfile
 
 import numpy as np
 
-from repro.core import (AutotunePolicy, Executor, FixedPolicy, Graph, Node,
-                        TensorSpec, load_graph, save_graph, simplify)
+from repro.core import (AutotunePolicy, FixedPolicy, Graph, Node, Program,
+                        TensorSpec, compile)
 
 rng = np.random.default_rng(0)
 
@@ -30,7 +32,8 @@ g = Graph(
         Node("conv2", "conv2d", ["h3", "w2"], ["h4"],
              {"stride": 2, "padding": "SAME"}),
         Node("act2", "relu", ["h4"], ["h5"]),
-        Node("pool", "global_avgpool", ["h5"], ["h6"]),
+        Node("act3", "tanh", ["h5"], ["h5t"]),
+        Node("pool", "global_avgpool", ["h5t"], ["h6"]),
         Node("fc", "dense", ["h6", "w3"], ["logits"]),
     ],
     params={
@@ -43,10 +46,14 @@ g = Graph(
 )
 g.validate()
 
-# --- 2. graph simplification ----------------------------------------------
-gs = simplify(g)
-print(f"simplify: {len(g.nodes)} nodes -> {len(gs.nodes)} "
-      f"({[n.op for n in gs.nodes]})")
+# --- 2. staged compilation: pipeline -> assignment -> Program --------------
+prog = compile(g, policy=FixedPolicy(prefer=("ref",)))
+print(f"compile: {len(g.nodes)} nodes -> {len(prog.graph.nodes)} "
+      f"({[n.op for n in prog.graph.nodes]})")
+for s in prog.pass_stats:
+    if s.changed:
+        print(f"  pass {s.name:26s} {s.nodes_before:2d} -> {s.nodes_after:2d} "
+              f"nodes  {s.seconds*1e3:6.2f}ms")
 
 # --- 3. one graph, many backends ------------------------------------------
 x = rng.standard_normal((1, 32, 32, 3)).astype(np.float32)
@@ -57,23 +64,32 @@ for label, policy in {
     "winograd": FixedPolicy(prefer=("winograd", "ref")),
     "pallas": FixedPolicy(prefer=("pallas", "ref")),
 }.items():
-    ex = Executor(gs, policy)
-    (y,) = ex(x=x)
+    p = compile(g, policy=policy)
+    (y,) = p(x=x)
     outs[label] = np.asarray(y)
-    print(f"{label:12s} assignment={set(ex.assignment.values())} "
+    print(f"{label:12s} assignment={set(p.assignment.values())} "
           f"logits[0,:3]={outs[label][0, :3].round(4)}")
 ref = outs["gemm(ref)"]
 for label, y in outs.items():
     assert np.allclose(y, ref, atol=1e-3), label
 print("all backends agree ✓")
 
-# --- 4. autotune: per-layer measured best ----------------------------------
-tuned = Executor(gs, AutotunePolicy(reps=2))
-print("autotuned assignment:", tuned.assignment)
-
-# --- 5. OXF round trip ------------------------------------------------------
+# --- 4. autotune: per-layer measured best, persisted across processes ------
 with tempfile.TemporaryDirectory() as td:
-    save_graph(gs, td)
-    g2 = load_graph(td)
-    print(f"OXF round-trip: {len(g2.nodes)} nodes, "
-          f"{len(g2.params)} params ✓")
+    pol = AutotunePolicy(reps=2, cache_path=f"{td}/tune.json")
+    tuned = compile(g, policy=pol)
+    print(f"autotuned assignment ({pol.n_measured} measured): "
+          f"{tuned.assignment}")
+    pol2 = AutotunePolicy(reps=2, cache_path=f"{td}/tune.json")
+    compile(g, policy=pol2)
+    print(f"second compile: {pol2.n_loaded} signatures from cache, "
+          f"{pol2.n_measured} re-measured ✓")
+
+    # --- 5. Program round trip: graph + weights + frozen assignment --------
+    tuned.save(f"{td}/model")
+    prog2 = Program.load(f"{td}/model")
+    assert prog2.assignment == tuned.assignment
+    np.testing.assert_allclose(np.asarray(prog2(x=x)[0]),
+                               np.asarray(tuned(x=x)[0]), atol=1e-5)
+    print(f"Program round-trip: {len(prog2.graph.nodes)} nodes, "
+          f"assignment preserved ✓")

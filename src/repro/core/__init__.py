@@ -1,29 +1,48 @@
-"""Orpheus-JAX core: GraphIR, backend registry, passes, importer, executor.
+"""Orpheus-JAX core: GraphIR, backend registry, pass pipeline, importer,
+compiled Program.
 
-Importing this package registers the standard NN ops (:mod:`repro.core.nnops`).
+Importing this package registers the standard NN ops (:mod:`repro.core.nnops`)
+and the standard simplification passes (:mod:`repro.core.passes`).
 Pallas/TPU backends are registered by importing :mod:`repro.kernels.ops`
 (done automatically by ``import repro``).
+
+The staged compilation flow is::
+
+    graph --PassManager--> simplified graph --BackendPolicy--> Program
+
+driven by the top-level :func:`compile` entrypoint; the legacy ``Executor``
+remains as a deprecated shim over it.
 """
 
 from repro.core import nnops as _nnops  # noqa: F401  (registers standard ops)
-from repro.core.executor import Executor, NodeReport
-from repro.core.importer import load_graph, save_graph
+from repro.core.executor import Executor
+from repro.core.importer import load_graph, load_program, save_graph
 from repro.core.ir import Graph, GraphError, Node, TensorSpec, topological_order
 from repro.core.passes import (eliminate_common_subexpr, eliminate_dead,
                                fold_batchnorm, fold_constants, fuse_bias_act,
-                               infer_shapes, simplify)
+                               fuse_elementwise, infer_shapes, simplify)
+from repro.core.pipeline import (DEFAULT_PASSES, PassManager, PassStats,
+                                 PipelineError, default_pipeline, get_pass,
+                                 register_pass, registered_passes)
+from repro.core.program import NodeReport, Program, compile
 from repro.core.registry import (Cost, OpDef, OpImpl, backends_for, defop,
                                  get_impl, get_op, impl, registered_ops)
 from repro.core.selector import (TPU_V5E, AutotunePolicy, BackendPolicy,
-                                 CostModelPolicy, FixedPolicy, HardwareProfile)
+                                 CostModelPolicy, FixedPolicy, HardwareProfile,
+                                 default_cache_path, hardware_fingerprint)
 
 __all__ = [
-    "Executor", "NodeReport", "load_graph", "save_graph",
+    "compile", "Program", "Executor", "NodeReport",
+    "load_graph", "load_program", "save_graph",
     "Graph", "GraphError", "Node", "TensorSpec", "topological_order",
     "eliminate_common_subexpr", "eliminate_dead", "fold_batchnorm",
-    "fold_constants", "fuse_bias_act", "infer_shapes", "simplify",
+    "fold_constants", "fuse_bias_act", "fuse_elementwise", "infer_shapes",
+    "simplify",
+    "DEFAULT_PASSES", "PassManager", "PassStats", "PipelineError",
+    "default_pipeline", "get_pass", "register_pass", "registered_passes",
     "Cost", "OpDef", "OpImpl", "backends_for", "defop", "get_impl", "get_op",
     "impl", "registered_ops",
     "TPU_V5E", "AutotunePolicy", "BackendPolicy", "CostModelPolicy",
-    "FixedPolicy", "HardwareProfile",
+    "FixedPolicy", "HardwareProfile", "default_cache_path",
+    "hardware_fingerprint",
 ]

@@ -1,135 +1,60 @@
-"""Graph executor: lowers a GraphIR + backend assignment to a jitted JAX
-callable, and provides the paper's per-layer instrumented evaluation mode.
+"""DEPRECATED thin shim over :mod:`repro.core.program`.
 
-The executor is deliberately simple (topological interpretation at trace
-time); all heavy lifting is done by XLA after ``jax.jit``.  What Orpheus
-adds on top of plain XLA is the *assignment*: every node runs the backend
-chosen by the policy, so two compiles of the same graph with different
-policies give an apples-to-apples backend comparison.
+The old monolithic ``Executor`` mixed pass running, backend assignment and
+execution in one class.  That split into the staged pipeline
+(:func:`repro.core.compile` -> immutable :class:`~repro.core.program.Program`);
+this module keeps the old construction-site API working:
+
+    Executor(graph, policy)   ==   compile(graph, policy, pipeline=())
+
+(i.e. no simplification passes are run, matching the old behaviour — callers
+were expected to ``simplify()`` first).  New code should call ``compile``.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.ir import Graph, Node, TensorSpec, topological_order
-from repro.core.passes import infer_shapes
-from repro.core.registry import Cost, get_impl
+from repro.core.ir import Graph, Node
+from repro.core.program import NodeReport, Program
+from repro.core.program import compile as _compile
+from repro.core.registry import Cost
 from repro.core.selector import BackendPolicy, FixedPolicy
 
 __all__ = ["Executor", "NodeReport"]
 
 
-@dataclass
-class NodeReport:
-    name: str
-    op: str
-    backend: str
-    seconds: float
-    cost: Cost
-    out_spec: TensorSpec
-
-
 class Executor:
-    """Compile/execute a GraphIR under a backend policy."""
+    """Deprecated: use ``repro.core.compile(graph, policy=...)``."""
 
     def __init__(self, graph: Graph, policy: Optional[BackendPolicy] = None):
-        self.graph = graph if graph.value_info else infer_shapes(graph)
+        warnings.warn(
+            "Executor is deprecated; use repro.core.compile(graph, policy=...) "
+            "which returns an immutable Program",
+            DeprecationWarning, stacklevel=2)
         self.policy = policy or FixedPolicy()
-        self._order = topological_order(self.graph)
-        self._assignment: Dict[str, str] = {}
-        for node in self._order:
-            in_specs = [self.graph.spec_of(v) for v in node.inputs]
-            self._assignment[node.name] = self.policy.resolve(node, in_specs)
-        self._jitted: Optional[Callable] = None
+        self.program = _compile(graph, policy=self.policy, pipeline=())
+        self.graph = self.program.graph
 
     # ------------------------------------------------------------------ #
     @property
     def assignment(self) -> Dict[str, str]:
-        """node name -> chosen backend."""
-        return dict(self._assignment)
+        return self.program.assignment
 
     def costs(self) -> List[Tuple[Node, str, Cost]]:
-        out = []
-        for node in self._order:
-            b = self._assignment[node.name]
-            in_specs = [self.graph.spec_of(v) for v in node.inputs]
-            out.append((node, b, get_impl(node.op, b).cost(in_specs, node.attrs)))
-        return out
-
-    # ------------------------------------------------------------------ #
-    def _trace(self, params: Dict[str, Any], inputs: Dict[str, Any]) -> Tuple[Any, ...]:
-        env: Dict[str, Any] = {}
-        env.update(params)
-        env.update(inputs)
-        for node in self._order:
-            fn = get_impl(node.op, self._assignment[node.name])
-            args = [env[v] for v in node.inputs]
-            outs = fn(args, node.attrs)
-            for v, val in zip(node.outputs, outs):
-                env[v] = val
-        return tuple(env[v] for v in self.graph.outputs)
+        return self.program.costs()
 
     def compile(self) -> Callable[..., Tuple[Any, ...]]:
-        """Returns jitted ``f(inputs: dict, params: dict|None) -> tuple``.
-
-        ``params`` defaults to the graph's stored parameters; passing them
-        explicitly supports functional weight updates (training loops)."""
-        if self._jitted is None:
-            jf = jax.jit(self._trace)
-            stored = {k: jnp.asarray(v) for k, v in self.graph.params.items()}
-
-            def call(inputs: Dict[str, Any], params: Optional[Dict[str, Any]] = None):
-                return jf(stored if params is None else params, inputs)
-
-            self._jitted = call
-        return self._jitted
+        return self.program.callable()
 
     def __call__(self, **inputs: Any) -> Tuple[Any, ...]:
-        missing = set(self.graph.inputs) - set(inputs)
-        if missing:
-            raise ValueError(f"missing graph inputs: {sorted(missing)}")
-        return self.compile()(inputs)
+        return self.program(**inputs)
 
-    # ------------------------------------------------------------------ #
     def lower(self, **input_specs: jax.ShapeDtypeStruct):
-        """``jax.jit(...).lower(...)`` for dry-run / cost analysis."""
-        stored = {k: jax.ShapeDtypeStruct(jnp.shape(v), jnp.asarray(v).dtype)
-                  for k, v in self.graph.params.items()}
-        specs = input_specs or {
-            k: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype))
-            for k, s in self.graph.inputs.items()}
-        return jax.jit(self._trace).lower(stored, specs)
+        return self.program.lower(**input_specs)
 
-    # ------------------------------------------------------------------ #
-    def run_instrumented(self, **inputs: Any) -> Tuple[Tuple[Any, ...], List[NodeReport]]:
-        """Eager per-node execution with wall-clock timing — the paper's
-        individual-layer evaluation. Each node's impl is jitted separately
-        (so we time the op, not Python overhead), warmed once, then timed."""
-        env: Dict[str, Any] = {k: jnp.asarray(v) for k, v in self.graph.params.items()}
-        env.update({k: jnp.asarray(v) for k, v in inputs.items()})
-        reports: List[NodeReport] = []
-        for node in self._order:
-            backend = self._assignment[node.name]
-            fn = get_impl(node.op, backend)
-            args = [env[v] for v in node.inputs]
-            jf = jax.jit(lambda a, _fn=fn, _at=node.attrs: _fn(a, _at))
-            outs = jf(args)
-            jax.block_until_ready(outs)  # warm
-            t0 = time.perf_counter()
-            outs = jf(args)
-            jax.block_until_ready(outs)
-            dt = time.perf_counter() - t0
-            in_specs = [self.graph.spec_of(v) for v in node.inputs]
-            reports.append(NodeReport(
-                name=node.name, op=node.op, backend=backend, seconds=dt,
-                cost=fn.cost(in_specs, node.attrs),
-                out_spec=self.graph.spec_of(node.outputs[0])))
-            for v, val in zip(node.outputs, outs):
-                env[v] = val
-        return tuple(env[v] for v in self.graph.outputs), reports
+    def run_instrumented(self, **inputs: Any):
+        return self.program.run_instrumented(**inputs)

@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.core.ir import Graph, GraphError, Node, TensorSpec
 
-__all__ = ["save_graph", "load_graph", "graph_to_dict", "graph_from_dict"]
+__all__ = ["save_graph", "load_graph", "load_program",
+           "graph_to_dict", "graph_from_dict"]
 
 _FORMAT_VERSION = 1
 
@@ -124,3 +125,14 @@ def load_graph(path: str) -> Graph:
     with np.load(os.path.join(path, "weights.npz")) as z:
         params = {k: z[k] for k in z.files}
     return graph_from_dict(d, params)
+
+
+def load_program(path: str, policy: Any = None) -> "Any":
+    """Load an OXF bundle straight into an executable
+    :class:`~repro.core.program.Program`.
+
+    Per-node ``backend`` fields pinned by :meth:`Program.save` win over
+    ``policy``, so a saved assignment is reproduced exactly — no re-tuning.
+    (Late import: program depends on this module.)"""
+    from repro.core.program import Program
+    return Program.load(path, policy=policy)

@@ -19,6 +19,7 @@ Design notes
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -203,10 +204,10 @@ def topological_order(graph: Graph) -> List[Node]:
             roots.append(node)
 
     order: List[Node] = []
-    queue = list(roots)
+    queue = deque(roots)
     seen = set()
     while queue:
-        node = queue.pop(0)
+        node = queue.popleft()
         if node.name in seen:
             continue
         seen.add(node.name)

@@ -378,6 +378,45 @@ for _name in ("relu", "relu6", "gelu", "silu", "sigmoid", "tanh", "identity"):
     impl(_name, "ref")(_mk(_name))
 
 
+# fused_elementwise: a chain of unary elementwise ops collapsed into one node
+# (created by passes.fuse_elementwise).  attrs["ops"] lists the stages in
+# application order, e.g. ("relu", "tanh").
+
+def _fused_ew_shape(specs, attrs):
+    return [specs[0]]
+
+
+def _fused_ew_cost(specs, attrs):
+    # One read + one write for the whole chain — the fusion win vs. the sum
+    # of the unfused stages (each of which round-trips the tensor).
+    x = specs[0]
+    n_stages = max(len(tuple(attrs.get("ops", ()))), 1)
+    return Cost(flops=float(n_stages * x.nelems), bytes=2.0 * x.nbytes)
+
+
+defop("fused_elementwise", _fused_ew_shape, _fused_ew_cost,
+      doc="chain of unary elementwise ops; attrs: ops (tuple of op names)")
+
+
+@impl("fused_elementwise", "ref",
+      note="composes the ref impl of each stage — the oracle chain")
+def _fused_ew_ref(inputs, attrs):
+    from repro.core.registry import get_impl as _get_impl
+    (x,) = inputs
+    for op_name in tuple(attrs.get("ops", ())):
+        (x,) = _get_impl(op_name, "ref")([x], {})
+    return [x]
+
+
+@impl("fused_elementwise", "xla",
+      note="single traced composition — XLA fuses the chain into one loop")
+def _fused_ew_xla(inputs, attrs):
+    (x,) = inputs
+    for op_name in tuple(attrs.get("ops", ())):
+        x = _act(x, "none" if op_name == "identity" else op_name)
+    return [x]
+
+
 def _softmax_shape(specs, attrs):
     return [specs[0]]
 

@@ -1,14 +1,18 @@
 """Graph simplification passes — the paper's "apply simplifications to the
 computation graph" layer (§I contribution 2).
 
-Passes are pure functions ``Graph -> Graph`` (input untouched).  The standard
-pipeline (:func:`simplify`) runs:
+Passes are pure functions ``Graph -> Graph`` (input untouched), registered by
+name in the :mod:`repro.core.pipeline` registry so a
+:class:`~repro.core.pipeline.PassManager` can compose them.  The standard
+pipeline (:func:`simplify`, also ``pipeline.default_pipeline()``) runs:
 
     infer_shapes -> fold_constants -> fold_batchnorm -> fuse_bias_act
-                 -> eliminate_common_subexpr -> eliminate_dead -> infer_shapes
+                 -> fuse_elementwise -> eliminate_common_subexpr
+                 -> eliminate_dead -> infer_shapes
 
-All passes preserve graph semantics; ``tests/test_passes.py`` property-checks
-this with hypothesis-generated random graphs.
+All passes preserve graph semantics; ``tests/test_property.py`` property-checks
+this with hypothesis-generated random graphs, and
+``tests/test_pipeline_compile.py`` covers the PassManager machinery.
 """
 
 from __future__ import annotations
@@ -18,6 +22,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.ir import Graph, GraphError, Node, TensorSpec, topological_order
+from repro.core.pipeline import PassManager, register_pass
 from repro.core.registry import get_impl, get_op
 
 __all__ = [
@@ -25,6 +30,7 @@ __all__ = [
     "fold_constants",
     "fold_batchnorm",
     "fuse_bias_act",
+    "fuse_elementwise",
     "eliminate_dead",
     "eliminate_common_subexpr",
     "simplify",
@@ -32,6 +38,7 @@ __all__ = [
 
 
 # --------------------------------------------------------------------------- #
+@register_pass("infer_shapes")
 def infer_shapes(graph: Graph) -> Graph:
     """Populate ``value_info`` for every intermediate value."""
     g = graph.clone()
@@ -60,6 +67,7 @@ def infer_shapes(graph: Graph) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
+@register_pass("fold_constants")
 def fold_constants(graph: Graph, max_bytes: int = 1 << 27) -> Graph:
     """Evaluate nodes whose inputs are all params/constants with the ``ref``
     backend and promote results to params.  ``max_bytes`` caps the size of a
@@ -84,6 +92,7 @@ def fold_constants(graph: Graph, max_bytes: int = 1 << 27) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
+@register_pass("fold_batchnorm")
 def fold_batchnorm(graph: Graph) -> Graph:
     """Fold inference batchnorm into a preceding conv2d when the conv weight
     and all BN stats are graph params:  w' = w * s,  b' = (bias - mean*s)
@@ -141,6 +150,7 @@ _FUSABLE = {"conv2d": "conv2d_fused", "conv2d_fused": "conv2d_fused",
             "dense": "dense_fused", "dense_fused": "dense_fused"}
 
 
+@register_pass("fuse_bias_act")
 def fuse_bias_act(graph: Graph) -> Graph:
     """Pattern-fuse  (conv2d|dense) [-> bias_add] [-> activation]  into the
     corresponding fused op.  Only fires when the intermediate value has a
@@ -185,6 +195,57 @@ def fuse_bias_act(graph: Graph) -> Graph:
 
 
 # --------------------------------------------------------------------------- #
+# Unary elementwise ops that can be collapsed into one fused_elementwise node.
+_EW_CHAIN = {"relu", "relu6", "gelu", "silu", "sigmoid", "tanh", "identity"}
+
+
+def _chain_ops(node: Node) -> Tuple[str, ...]:
+    if node.op == "fused_elementwise":
+        return tuple(node.attrs["ops"])
+    return (node.op,)
+
+
+@register_pass("fuse_elementwise")
+def fuse_elementwise(graph: Graph) -> Graph:
+    """Collapse chains of unary elementwise ops (relu -> tanh -> ...) into a
+    single ``fused_elementwise`` node whose ``ops`` attr lists the stages.
+
+    One fused node means one pass over the tensor instead of one per stage
+    (intermediates never round-trip through HBM) and one backend decision
+    for the whole chain.  Only fires when the intermediate value has a
+    single consumer and is not a graph output."""
+    g = graph.clone()
+    changed = True
+    while changed:
+        changed = False
+        producers = g.producers()
+        consumers = g.consumers()
+        for node in g.nodes:
+            if node.op not in _EW_CHAIN and node.op != "fused_elementwise":
+                continue
+            src = node.inputs[0]
+            prev = producers.get(src)
+            if prev is None or (prev.op not in _EW_CHAIN
+                                and prev.op != "fused_elementwise"):
+                continue
+            if len(consumers.get(src, [])) != 1 or src in g.outputs:
+                continue
+            fused = Node(name=f"{prev.name}.ew", op="fused_elementwise",
+                         inputs=list(prev.inputs), outputs=list(node.outputs),
+                         attrs={"ops": _chain_ops(prev) + _chain_ops(node)},
+                         backend=node.backend or prev.backend)
+            g.nodes = [n for n in g.nodes if n.name not in (prev.name, node.name)]
+            g.nodes.append(fused)
+            g.nodes = topological_order(g)
+            changed = True
+            break
+    if g.value_info:
+        g = infer_shapes(g)
+    return g
+
+
+# --------------------------------------------------------------------------- #
+@register_pass("eliminate_dead")
 def eliminate_dead(graph: Graph) -> Graph:
     """Drop nodes (and params) that do not contribute to graph outputs."""
     g = graph.clone()
@@ -223,6 +284,7 @@ def _node_key(node: Node) -> Tuple:
     return (node.op, tuple(node.inputs), freeze(node.attrs))
 
 
+@register_pass("eliminate_common_subexpr")
 def eliminate_common_subexpr(graph: Graph) -> Graph:
     """Merge structurally identical nodes (same op, inputs, attrs)."""
     g = graph.clone()
@@ -246,16 +308,25 @@ def eliminate_common_subexpr(graph: Graph) -> Graph:
 
 # --------------------------------------------------------------------------- #
 def simplify(graph: Graph, *, fold_bn: bool = True, fuse: bool = True,
-             fold_const: bool = True, cse: bool = True) -> Graph:
-    """The standard import-time simplification pipeline."""
-    g = infer_shapes(graph)
+             fold_const: bool = True, cse: bool = True,
+             fuse_ew: bool = True) -> Graph:
+    """The standard import-time simplification pipeline.
+
+    This is now sugar over a :class:`~repro.core.pipeline.PassManager` built
+    from the registered passes; drop a flag to skip the corresponding pass,
+    or construct a PassManager directly for full control (custom order,
+    per-pass stats, validation, fixpoint iteration).
+    """
+    names = ["infer_shapes"]
     if fold_const:
-        g = fold_constants(g)
+        names.append("fold_constants")
     if fold_bn:
-        g = fold_batchnorm(g)
+        names.append("fold_batchnorm")
     if fuse:
-        g = fuse_bias_act(g)
+        names.append("fuse_bias_act")
+    if fuse_ew:
+        names.append("fuse_elementwise")
     if cse:
-        g = eliminate_common_subexpr(g)
-    g = eliminate_dead(g)
-    return infer_shapes(g)
+        names.append("eliminate_common_subexpr")
+    names += ["eliminate_dead", "infer_shapes"]
+    return PassManager(names, name="simplify").run(graph)

@@ -1,0 +1,249 @@
+"""Staged compilation pipeline: a named pass registry + PassManager.
+
+This is the configurable half of the paper's "apply simplifications to the
+computation graph" layer.  Individual passes stay pure ``Graph -> Graph``
+functions (declared in :mod:`repro.core.passes` and registered here via
+:func:`register_pass`); the :class:`PassManager` decides *which* passes run,
+*in what order*, whether the graph is re-validated between passes, and
+whether the list is iterated to a fixpoint.  Every pass execution is timed
+and summarised in a :class:`PassStats` record, so a pipeline run doubles as
+a pass-level profile — the same philosophy as the per-layer executor
+instrumentation, applied to compile time.
+
+Typical use::
+
+    from repro.core import PassManager, default_pipeline, compile
+
+    pm = default_pipeline()                  # the standard simplify pipeline
+    pm = PassManager(["infer_shapes", "fuse_bias_act"], validate=True)
+    g2 = pm.run(g)
+    for s in pm.stats:
+        print(s.name, s.nodes_before, "->", s.nodes_after, f"{s.seconds*1e3:.2f}ms")
+
+``compile(graph, pipeline=pm)`` (see :mod:`repro.core.program`) threads the
+manager through the full graph -> Program lowering.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.ir import Graph, GraphError
+
+__all__ = [
+    "PassStats",
+    "PassManager",
+    "PipelineError",
+    "register_pass",
+    "get_pass",
+    "registered_passes",
+    "default_pipeline",
+    "DEFAULT_PASSES",
+]
+
+PassFn = Callable[[Graph], Graph]
+
+
+class PipelineError(RuntimeError):
+    """Raised for unknown pass names or passes that corrupt the graph."""
+
+
+@dataclass(frozen=True)
+class PassStats:
+    """One pass execution: node delta + wall time (the compile-time profile)."""
+
+    name: str
+    nodes_before: int
+    nodes_after: int
+    seconds: float
+    iteration: int = 0
+    changed: bool = False
+
+    def __repr__(self) -> str:
+        delta = self.nodes_after - self.nodes_before
+        return (f"PassStats({self.name}: {self.nodes_before}->{self.nodes_after} "
+                f"nodes ({delta:+d}), {self.seconds*1e3:.2f}ms, it={self.iteration})")
+
+
+# --------------------------------------------------------------------------- #
+# Named pass registry — mirrors the op registry: declare once, select by name.
+# --------------------------------------------------------------------------- #
+
+_PASSES: Dict[str, PassFn] = {}
+
+
+def register_pass(name: str, fn: Optional[PassFn] = None):
+    """Register ``fn`` under ``name``.  Usable as a decorator::
+
+        @register_pass("my_pass")
+        def my_pass(graph): ...
+
+    Re-registration replaces the previous pass (same override semantics as
+    :func:`repro.core.registry.impl` — third-party modules can swap in their
+    own version of a stock pass).
+    """
+    if fn is None:
+        def deco(f: PassFn) -> PassFn:
+            _PASSES[name] = f
+            return f
+        return deco
+    _PASSES[name] = fn
+    return fn
+
+
+def get_pass(name: str) -> PassFn:
+    try:
+        return _PASSES[name]
+    except KeyError:
+        raise PipelineError(
+            f"unknown pass {name!r}; registered: {sorted(_PASSES)}") from None
+
+
+def registered_passes() -> List[str]:
+    return sorted(_PASSES)
+
+
+# --------------------------------------------------------------------------- #
+# PassManager
+# --------------------------------------------------------------------------- #
+
+def _freeze(x):
+    if isinstance(x, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in x.items()))
+    if isinstance(x, (list, tuple)):
+        return tuple(_freeze(v) for v in x)
+    if hasattr(x, "tobytes"):  # ndarray-valued attr
+        return ("nd", getattr(x, "shape", None), x.tobytes())
+    return x
+
+
+def _structure(graph: Graph) -> Tuple:
+    """Structural signature used for change detection / fixpoint convergence:
+    node identity, wiring, attrs and backend pins.  Deliberately ignores
+    value_info (shape inference is not a 'change')."""
+    return tuple((n.name, n.op, tuple(n.inputs), tuple(n.outputs),
+                  _freeze(n.attrs), n.backend)
+                 for n in graph.nodes)
+
+
+class PassManager:
+    """Runs a configurable list of passes over a graph, recording PassStats.
+
+    Parameters
+    ----------
+    passes:
+        Sequence of pass names (looked up in the registry at ``run`` time,
+        so registration order does not matter) and/or raw callables.
+    validate:
+        Re-run ``Graph.validate()`` after every pass; a pass that breaks
+        well-formedness is reported by name instead of failing downstream.
+    fixpoint:
+        Iterate the whole pass list until the graph structure stops changing
+        (or ``max_iters`` is hit).  Useful when passes enable each other,
+        e.g. constant folding exposing new fusion opportunities.
+    max_iters:
+        Iteration cap for ``fixpoint=True`` (one pass over the list counts
+        as one iteration).
+    """
+
+    def __init__(self, passes: Sequence[Union[str, PassFn]], *,
+                 validate: bool = False, fixpoint: bool = False,
+                 max_iters: int = 10, name: str = "pipeline"):
+        self.name = name
+        self.validate = validate
+        self.fixpoint = fixpoint
+        self.max_iters = max_iters
+        self._passes: List[Union[str, PassFn]] = list(passes)
+        self.stats: List[PassStats] = []
+
+    # ------------------------------------------------------------------ #
+    def pass_names(self) -> List[str]:
+        return [p if isinstance(p, str) else getattr(p, "__name__", repr(p))
+                for p in self._passes]
+
+    def _resolved(self) -> List[Tuple[str, PassFn]]:
+        out = []
+        for p in self._passes:
+            if isinstance(p, str):
+                out.append((p, get_pass(p)))
+            else:
+                out.append((getattr(p, "__name__", repr(p)), p))
+        return out
+
+    # ------------------------------------------------------------------ #
+    def run(self, graph: Graph) -> Graph:
+        """Apply the pipeline; ``graph`` is left untouched.  Stats from the
+        run replace ``self.stats``."""
+        passes = self._resolved()
+        self.stats = []
+        g = graph
+        n_iters = self.max_iters if self.fixpoint else 1
+        for it in range(n_iters):
+            sig_before_iter = _structure(g)
+            for pname, fn in passes:
+                before = len(g.nodes)
+                sig_before = _structure(g)
+                t0 = time.perf_counter()
+                try:
+                    g2 = fn(g)
+                except GraphError as e:
+                    raise PipelineError(f"pass {pname!r} failed: {e}") from e
+                dt = time.perf_counter() - t0
+                if not isinstance(g2, Graph):
+                    raise PipelineError(
+                        f"pass {pname!r} returned {type(g2).__name__}, not Graph")
+                if self.validate:
+                    try:
+                        g2.validate()
+                    except GraphError as e:
+                        raise PipelineError(
+                            f"pass {pname!r} produced a malformed graph: {e}") from e
+                self.stats.append(PassStats(
+                    name=pname, nodes_before=before, nodes_after=len(g2.nodes),
+                    seconds=dt, iteration=it,
+                    changed=_structure(g2) != sig_before))
+                g = g2
+            if not self.fixpoint or _structure(g) == sig_before_iter:
+                break
+        return g
+
+    # ------------------------------------------------------------------ #
+    def total_seconds(self) -> float:
+        return sum(s.seconds for s in self.stats)
+
+    def summary(self) -> str:
+        """Human-readable per-pass table of the last ``run``."""
+        lines = [f"{'pass':28s} {'nodes':>12s} {'time':>9s}  it"]
+        for s in self.stats:
+            lines.append(f"{s.name:28s} {s.nodes_before:5d} ->{s.nodes_after:4d} "
+                         f"{s.seconds*1e3:7.2f}ms  {s.iteration}")
+        lines.append(f"{'total':28s} {'':12s} {self.total_seconds()*1e3:7.2f}ms")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return (f"PassManager({self.name!r}, passes={self.pass_names()}, "
+                f"validate={self.validate}, fixpoint={self.fixpoint})")
+
+
+# The standard import-time simplification pipeline, by name.  Shape inference
+# brackets the rewrite passes so every consumer sees fresh value_info.
+DEFAULT_PASSES: Tuple[str, ...] = (
+    "infer_shapes",
+    "fold_constants",
+    "fold_batchnorm",
+    "fuse_bias_act",
+    "fuse_elementwise",
+    "eliminate_common_subexpr",
+    "eliminate_dead",
+    "infer_shapes",
+)
+
+
+def default_pipeline(*, validate: bool = False, fixpoint: bool = False) -> PassManager:
+    """The standard simplify pipeline as a PassManager (what ``compile()``
+    uses when no pipeline is given)."""
+    from repro.core import passes as _passes  # noqa: F401  (registers passes)
+    return PassManager(list(DEFAULT_PASSES), validate=validate,
+                       fixpoint=fixpoint, name="default")

@@ -1,0 +1,247 @@
+"""Immutable compiled Program artifact + the top-level ``compile`` entrypoint.
+
+This splits the old monolithic ``Executor`` into its two real halves:
+
+* :func:`compile` — the staged front half: run a pass pipeline
+  (:class:`~repro.core.pipeline.PassManager`), resolve a backend per node
+  under a :class:`~repro.core.selector.BackendPolicy`, freeze the result.
+* :class:`Program` — the back half: an immutable artifact holding the
+  simplified graph, the frozen backend assignment, the analytic cost table,
+  and the jitted callable.  Programs can be saved to / loaded from an OXF
+  bundle (the assignment is pinned into each node's ``backend`` field), so a
+  tuned deployment survives process restarts without re-tuning.
+
+Typical use::
+
+    from repro.core import compile, AutotunePolicy
+
+    prog = compile(graph, policy=AutotunePolicy(cache_path="tune.json"))
+    (y,) = prog(x=x)
+    prog.save("model_dir")           # graph + weights + frozen assignment
+    prog2 = Program.load("model_dir")  # no re-measurement, same assignment
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from types import MappingProxyType
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.importer import load_graph, save_graph
+from repro.core.ir import Graph, Node, TensorSpec, topological_order
+from repro.core.pipeline import PassManager, PassStats, default_pipeline
+from repro.core.registry import Cost, get_impl
+from repro.core.selector import BackendPolicy, FixedPolicy
+
+__all__ = ["Program", "NodeReport", "compile"]
+
+
+@dataclass
+class NodeReport:
+    name: str
+    op: str
+    backend: str
+    seconds: float
+    cost: Cost
+    out_spec: TensorSpec
+
+
+class Program:
+    """A compiled inference program: graph + frozen backend assignment.
+
+    Instances are immutable by convention (the assignment mapping is
+    read-only; the graph must not be mutated after construction) — compile a
+    new Program instead of editing one.  The jitted callable is built lazily
+    on first call and cached.
+    """
+
+    def __init__(self, graph: Graph, assignment: Mapping[str, str],
+                 pass_stats: Sequence[PassStats] = ()):
+        from repro.core.passes import infer_shapes
+        self._graph = graph if graph.value_info else infer_shapes(graph)
+        self._order = topological_order(self._graph)
+        missing = [n.name for n in self._order if n.name not in assignment]
+        if missing:
+            raise ValueError(f"assignment missing nodes: {missing[:5]}")
+        self._assignment: Mapping[str, str] = MappingProxyType(dict(assignment))
+        self._pass_stats: Tuple[PassStats, ...] = tuple(pass_stats)
+        # Frozen analytic cost table: node name -> (backend, Cost).
+        table: Dict[str, Tuple[str, Cost]] = {}
+        for node in self._order:
+            b = self._assignment[node.name]
+            in_specs = [self._graph.spec_of(v) for v in node.inputs]
+            table[node.name] = (b, get_impl(node.op, b).cost(in_specs, node.attrs))
+        self._cost_table: Mapping[str, Tuple[str, Cost]] = MappingProxyType(table)
+        self._jitted: Optional[Callable] = None
+
+    # ------------------------------------------------------------------ #
+    @property
+    def graph(self) -> Graph:
+        return self._graph
+
+    @property
+    def assignment(self) -> Dict[str, str]:
+        """node name -> chosen backend (copy; the Program's own is frozen)."""
+        return dict(self._assignment)
+
+    @property
+    def pass_stats(self) -> Tuple[PassStats, ...]:
+        """Per-pass compile-time profile from the pipeline that built this."""
+        return self._pass_stats
+
+    @property
+    def cost_table(self) -> Mapping[str, Tuple[str, Cost]]:
+        return self._cost_table
+
+    def costs(self) -> List[Tuple[Node, str, Cost]]:
+        return [(node, *self._cost_table[node.name]) for node in self._order]
+
+    def total_cost(self) -> Cost:
+        total = Cost()
+        for _, cost in self._cost_table.values():
+            total = total + cost
+        return total
+
+    # ------------------------------------------------------------------ #
+    def _trace(self, params: Dict[str, Any], inputs: Dict[str, Any]) -> Tuple[Any, ...]:
+        env: Dict[str, Any] = {}
+        env.update(params)
+        env.update(inputs)
+        for node in self._order:
+            fn = get_impl(node.op, self._assignment[node.name])
+            args = [env[v] for v in node.inputs]
+            outs = fn(args, node.attrs)
+            for v, val in zip(node.outputs, outs):
+                env[v] = val
+        return tuple(env[v] for v in self._graph.outputs)
+
+    def callable(self) -> Callable[..., Tuple[Any, ...]]:
+        """Returns jitted ``f(inputs: dict, params: dict|None) -> tuple``.
+
+        ``params`` defaults to the graph's stored parameters; passing them
+        explicitly supports functional weight updates (training loops)."""
+        if self._jitted is None:
+            jf = jax.jit(self._trace)
+            stored = {k: jnp.asarray(v) for k, v in self._graph.params.items()}
+
+            def call(inputs: Dict[str, Any], params: Optional[Dict[str, Any]] = None):
+                return jf(stored if params is None else params, inputs)
+
+            self._jitted = call
+        return self._jitted
+
+    def __call__(self, **inputs: Any) -> Tuple[Any, ...]:
+        missing = set(self._graph.inputs) - set(inputs)
+        if missing:
+            raise ValueError(f"missing graph inputs: {sorted(missing)}")
+        return self.callable()(inputs)
+
+    # ------------------------------------------------------------------ #
+    def lower(self, **input_specs: jax.ShapeDtypeStruct):
+        """``jax.jit(...).lower(...)`` for dry-run / cost analysis."""
+        stored = {k: jax.ShapeDtypeStruct(jnp.shape(v), jnp.asarray(v).dtype)
+                  for k, v in self._graph.params.items()}
+        specs = input_specs or {
+            k: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype))
+            for k, s in self._graph.inputs.items()}
+        return jax.jit(self._trace).lower(stored, specs)
+
+    # ------------------------------------------------------------------ #
+    def run_instrumented(self, **inputs: Any) -> Tuple[Tuple[Any, ...], List[NodeReport]]:
+        """Eager per-node execution with wall-clock timing — the paper's
+        individual-layer evaluation. Each node's impl is jitted separately
+        (so we time the op, not Python overhead), warmed once, then timed."""
+        env: Dict[str, Any] = {k: jnp.asarray(v) for k, v in self._graph.params.items()}
+        env.update({k: jnp.asarray(v) for k, v in inputs.items()})
+        reports: List[NodeReport] = []
+        for node in self._order:
+            backend = self._assignment[node.name]
+            fn = get_impl(node.op, backend)
+            args = [env[v] for v in node.inputs]
+            jf = jax.jit(lambda a, _fn=fn, _at=node.attrs: _fn(a, _at))
+            outs = jf(args)
+            jax.block_until_ready(outs)  # warm
+            t0 = time.perf_counter()
+            outs = jf(args)
+            jax.block_until_ready(outs)
+            dt = time.perf_counter() - t0
+            reports.append(NodeReport(
+                name=node.name, op=node.op, backend=backend, seconds=dt,
+                cost=self._cost_table[node.name][1],
+                out_spec=self._graph.spec_of(node.outputs[0])))
+            for v, val in zip(node.outputs, outs):
+                env[v] = val
+        return tuple(env[v] for v in self._graph.outputs), reports
+
+    # ------------------------------------------------------------------ #
+    # Persistence (OXF bundle: model.json + weights.npz + program.json)
+    # ------------------------------------------------------------------ #
+    def save(self, path: str) -> None:
+        """Serialize graph, weights AND the frozen backend assignment.
+
+        The assignment rides inside the OXF model.json (each node's
+        ``backend`` field is pinned), so any OXF loader reconstructs the
+        same per-node backends; ``program.json`` additionally records the
+        assignment and cost table for human inspection."""
+        pinned = self._graph.clone()
+        for node in pinned.nodes:
+            node.backend = self._assignment[node.name]
+        save_graph(pinned, path)
+        meta = {
+            "assignment": dict(self._assignment),
+            "cost_table": {name: {"backend": b, "flops": c.flops, "bytes": c.bytes}
+                           for name, (b, c) in self._cost_table.items()},
+        }
+        with open(os.path.join(path, "program.json"), "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str, policy: Optional[BackendPolicy] = None) -> "Program":
+        """Rebuild a Program from :meth:`save` output.  The pinned per-node
+        backends win over ``policy`` (which only fills gaps, e.g. for
+        bundles written by a plain ``save_graph``), so no re-tuning or
+        re-measurement happens here."""
+        g = load_graph(path)
+        return compile(g, policy=policy, pipeline=())
+
+
+def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
+            pipeline: Optional[Union[PassManager, Sequence]] = None,
+            *, validate: bool = False) -> Program:
+    """Graph -> Program: the staged compilation entrypoint.
+
+    Parameters
+    ----------
+    graph:
+        The input GraphIR (left untouched).
+    policy:
+        Backend selection policy; defaults to :class:`FixedPolicy`
+        (xla-then-ref).  Per-node ``Node.backend`` pins always win.
+    pipeline:
+        ``None`` (default) runs the standard simplify pipeline; a
+        :class:`PassManager` runs as given; a sequence of pass
+        names/callables is wrapped in a PassManager; an empty sequence
+        skips rewriting entirely (shape inference still happens).
+    validate:
+        Forwarded to the default pipeline's inter-pass validation.
+    """
+    from repro.core.passes import infer_shapes
+    if pipeline is None:
+        pipeline = default_pipeline(validate=validate)
+    elif not isinstance(pipeline, PassManager):
+        pipeline = PassManager(list(pipeline), validate=validate, name="custom")
+    g = pipeline.run(graph)
+    if not g.value_info:
+        g = infer_shapes(g)
+    policy = policy or FixedPolicy()
+    assignment: Dict[str, str] = {}
+    for node in topological_order(g):
+        in_specs = [g.spec_of(v) for v in node.inputs]
+        assignment[node.name] = policy.resolve(node, in_specs)
+    return Program(g, assignment, pass_stats=tuple(pipeline.stats))

@@ -16,7 +16,13 @@ Three policies, in increasing sophistication:
 
 from __future__ import annotations
 
+import hashlib
+import json
+import os
+import platform
+import tempfile
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -35,6 +41,8 @@ __all__ = [
     "HardwareProfile",
     "TPU_V5E",
     "HOST_CPU",
+    "hardware_fingerprint",
+    "default_cache_path",
 ]
 
 
@@ -152,19 +160,119 @@ def _spec_sig(specs: Sequence[TensorSpec], attrs: Dict[str, Any]) -> Tuple:
     return (tuple((s.shape, s.dtype) for s in specs), freeze(attrs))
 
 
+def _sig_key(op: str, specs: Sequence[TensorSpec], attrs: Dict[str, Any]) -> str:
+    """Stable string key for (op, shapes, attrs) — JSON-dict friendly."""
+    return json.dumps([op, _spec_sig(specs, attrs)], sort_keys=True, default=str)
+
+
+def hardware_fingerprint() -> str:
+    """Identifies the machine a measurement is valid on.  Timings cached
+    under one fingerprint are never reused on different hardware."""
+    try:
+        dev = jax.devices()[0]
+        dev_sig = f"{dev.platform}/{getattr(dev, 'device_kind', '?')}"
+    except Exception:
+        dev_sig = "none"
+    raw = "|".join([platform.machine(), platform.system(), dev_sig,
+                    str(os.cpu_count()), jax.__version__])
+    return hashlib.sha1(raw.encode()).hexdigest()[:16]
+
+
+def default_cache_path() -> str:
+    """Where benchmarks/examples persist autotune results by default
+    (override with ORPHEUS_AUTOTUNE_CACHE)."""
+    env = os.environ.get("ORPHEUS_AUTOTUNE_CACHE")
+    if env:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache", "orpheus",
+                        "autotune.json")
+
+
+_CACHE_VERSION = 1
+
+
 @dataclass
 class AutotunePolicy(BackendPolicy):
     """Measure-and-pick (the paper's consistent-environment comparison).
 
     Each candidate impl is jitted on random inputs matching the node's
     specs, warmed once, then timed ``reps`` times; min is recorded.  The
-    cache makes repeated compiles of the same network free.
+    in-memory cache makes repeated compiles of the same network free; with
+    ``cache_path`` set, measurements persist as JSON across processes
+    (keyed by op/backend/shape-signature under a hardware fingerprint), so
+    a second compile of the same model on the same machine performs zero
+    re-measurements.
     """
 
     reps: int = 5
     candidates: Optional[Sequence[str]] = None  # None = all supported
-    _cache: Dict[Tuple, str] = field(default_factory=dict)
-    _timings: Dict[Tuple, Dict[str, float]] = field(default_factory=dict)
+    cache_path: Optional[str] = None
+    _cache: Dict[str, str] = field(default_factory=dict)
+    _timings: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    n_measured: int = 0   # signatures actually benchmarked by this instance
+    n_loaded: int = 0     # signatures preloaded from the on-disk cache
+    # (mtime, size) of the cache file after our last write + its content,
+    # so repeated saves skip re-parsing a file nobody else touched
+    _disk_state: Optional[Tuple[Tuple[float, int], Dict[str, Any]]] = None
+
+    def __post_init__(self) -> None:
+        if self.cache_path:
+            self._load_cache()
+
+    # -------------------------- persistence --------------------------- #
+    def _load_cache(self) -> None:
+        try:
+            with open(self.cache_path) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            return
+        if data.get("version") != _CACHE_VERSION:
+            return
+        entries = data.get("fingerprints", {}).get(hardware_fingerprint(), {})
+        for key, times in entries.items():
+            if key not in self._timings:
+                self._timings[key] = {b: float(t) for b, t in times.items()}
+                self.n_loaded += 1
+
+    def _save_cache(self) -> None:
+        """Best-effort persist: an unwritable cache location degrades to
+        in-memory-only tuning instead of failing the compile."""
+        path = self.cache_path
+        # merge with whatever is on disk (other processes / fingerprints),
+        # skipping the re-read when nobody else has written since our last
+        # save — measure() saves once per new signature, so this keeps a
+        # cold-cache compile from re-parsing the file N times
+        data: Dict[str, Any] = {"version": _CACHE_VERSION, "fingerprints": {}}
+        try:
+            stamp = (os.path.getmtime(path), os.path.getsize(path))
+        except OSError:
+            stamp = None
+        if self._disk_state is not None and stamp == self._disk_state[0]:
+            data = self._disk_state[1]
+        elif stamp is not None:
+            try:
+                with open(path) as f:
+                    prev = json.load(f)
+                if prev.get("version") == _CACHE_VERSION:
+                    data = prev
+            except (OSError, ValueError):
+                pass
+        fp = hardware_fingerprint()
+        data.setdefault("fingerprints", {}).setdefault(fp, {}).update(self._timings)
+        tmp = None
+        try:
+            os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(os.path.abspath(path)), suffix=".tmp")
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+            self._disk_state = ((os.path.getmtime(path), os.path.getsize(path)),
+                                data)
+        except OSError as e:
+            if tmp is not None and os.path.exists(tmp):
+                os.unlink(tmp)
+            warnings.warn(f"autotune cache not persisted to {path!r}: {e}")
 
     def _random_inputs(self, specs: Sequence[TensorSpec]) -> List[jax.Array]:
         rng = np.random.default_rng(0)
@@ -179,33 +287,47 @@ class AutotunePolicy(BackendPolicy):
 
     def measure(self, op: str, in_specs: Sequence[TensorSpec],
                 attrs: Dict[str, Any]) -> Dict[str, float]:
-        key = (op, _spec_sig(in_specs, attrs))
-        if key in self._timings:
-            return self._timings[key]
-        inputs = self._random_inputs(in_specs)
+        """Timings for every candidate backend of (op, shapes, attrs).
+
+        Incremental against the (possibly preloaded) cache: only backends
+        with no cached timing are benchmarked, so a cache written under a
+        different ``candidates`` restriction is topped up rather than
+        trusted blindly.  Unrunnable backends are recorded as ``inf`` so
+        they are not retried every compile.  The returned dict is filtered
+        to the current candidate set."""
+        key = _sig_key(op, in_specs, attrs)
         avail = backends_for(op, in_specs, attrs)
         if self.candidates is not None:
             avail = [b for b in avail if b in self.candidates]
-        times: Dict[str, float] = {}
-        for b in avail:
-            fn = get_impl(op, b)
-            jf = jax.jit(lambda args: fn(args, attrs))
-            try:
-                res = jf(inputs)
-                jax.block_until_ready(res)
-            except Exception:
-                continue  # backend cannot execute on this platform; skip
-            best = float("inf")
-            for _ in range(self.reps):
-                t0 = time.perf_counter()
-                jax.block_until_ready(jf(inputs))
-                best = min(best, time.perf_counter() - t0)
-            times[b] = best
-        self._timings[key] = times
-        return times
+        times = dict(self._timings.get(key, {}))
+        missing = [b for b in avail if b not in times]
+        if missing:
+            inputs = self._random_inputs(in_specs)
+            for b in missing:
+                fn = get_impl(op, b)
+                jf = jax.jit(lambda args: fn(args, attrs))
+                try:
+                    res = jf(inputs)
+                    jax.block_until_ready(res)
+                except Exception:
+                    # backend cannot execute on this platform; remember that
+                    times[b] = float("inf")
+                    continue
+                best = float("inf")
+                for _ in range(self.reps):
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(jf(inputs))
+                    best = min(best, time.perf_counter() - t0)
+                times[b] = best
+            self._timings[key] = times
+            self.n_measured += 1
+            if self.cache_path:
+                self._save_cache()
+        return {b: t for b, t in times.items()
+                if b in avail and t != float("inf")}
 
     def choose(self, node: Node, in_specs: Sequence[TensorSpec]) -> str:
-        key = (node.op, _spec_sig(in_specs, node.attrs))
+        key = _sig_key(node.op, in_specs, node.attrs)
         if key in self._cache:
             return self._cache[key]
         times = self.measure(node.op, in_specs, node.attrs)

@@ -11,8 +11,9 @@ correctness against a no-batching reference.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +45,8 @@ class ContinuousBatcher:
         self.n_slots = n_slots
         self.cache_cap = cache_cap
         self.eos_id = eos_id
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
+        self.submitted: List[Request] = []
         self.active: List[Optional[Request]] = [None] * n_slots
         self.caches = model.init_caches(n_slots, cache_cap)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
@@ -59,6 +61,7 @@ class ContinuousBatcher:
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         self.queue.append(req)
+        self.submitted.append(req)
 
     def _splice_cache(self, slot: int, cache1: Any) -> None:
         """Write a single-sequence prefill cache into batch slot ``slot``."""
@@ -69,7 +72,7 @@ class ContinuousBatcher:
     def _admit(self) -> None:
         for slot in range(self.n_slots):
             if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
                 logits, cache1, lengths1 = self._prefill(self.params, toks)
                 self._splice_cache(slot, cache1)
@@ -102,11 +105,18 @@ class ContinuousBatcher:
                 self.active[slot] = None
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
-        finished: List[Request] = []
-        pending = list(self.queue)
-        while (self.queue or any(self.active)) and self.steps < max_steps:
+        """Drive until queue and slots drain (or ``max_steps``); returns
+        every submitted request that finished — including ones already
+        admitted to slots before ``run()`` was called (a queue snapshot
+        would drop those).  Finished requests are handed out exactly once:
+        they leave ``submitted``, so a long-lived server neither re-delivers
+        nor accumulates them."""
+        while (self.queue or any(r is not None for r in self.active)) \
+                and self.steps < max_steps:
             self.step()
-        return [r for r in pending if r.done]
+        finished = [r for r in self.submitted if r.done]
+        self.submitted = [r for r in self.submitted if not r.done]
+        return finished
 
     @property
     def utilisation(self) -> float:

@@ -1,0 +1,370 @@
+"""Staged compilation pipeline tests: PassManager ordering/stats, the
+elementwise-chain fusion pass, Program save/load, autotune-cache persistence
+(including across processes), and the ContinuousBatcher.run() regression."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AutotunePolicy, DEFAULT_PASSES, FixedPolicy, Graph,
+                        Node, PassManager, PipelineError, Program, TensorSpec,
+                        compile, default_pipeline, fuse_elementwise, get_pass,
+                        infer_shapes, load_program, register_pass,
+                        registered_passes)
+from repro.core.selector import hardware_fingerprint
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "src")
+
+
+def chain_graph(rng):
+    """dense -> relu -> tanh -> sigmoid (a fusable elementwise chain)."""
+    g = Graph(
+        name="chain",
+        inputs={"x": TensorSpec((2, 8))},
+        outputs=["y"],
+        nodes=[
+            Node("d", "dense", ["x", "w"], ["h"]),
+            Node("a1", "relu", ["h"], ["h1"]),
+            Node("a2", "tanh", ["h1"], ["h2"]),
+            Node("a3", "sigmoid", ["h2"], ["y"]),
+        ],
+        params={"w": rng.standard_normal((8, 8)).astype(np.float32)},
+    )
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+class TestPassManager:
+    def test_runs_passes_in_order_with_stats(self, rng):
+        calls = []
+
+        def first(g):
+            calls.append("first")
+            return g.clone()
+
+        def second(g):
+            calls.append("second")
+            g2 = g.clone()
+            g2.nodes = [n for n in g2.nodes if n.name != "a2"]  # break chain
+            g2.nodes[-1].inputs[0] = "h1"
+            return g2
+
+        pm = PassManager([first, second])
+        g2 = pm.run(chain_graph(rng))
+        assert calls == ["first", "second"]
+        assert [s.name for s in pm.stats] == ["first", "second"]
+        assert pm.stats[0].nodes_before == 4 and pm.stats[0].nodes_after == 4
+        assert not pm.stats[0].changed
+        assert pm.stats[1].nodes_after == 3 and pm.stats[1].changed
+        assert all(s.seconds >= 0 for s in pm.stats)
+        assert len(g2.nodes) == 3
+
+    def test_named_passes_resolve_from_registry(self, rng):
+        pm = PassManager(["infer_shapes", "eliminate_dead"])
+        g = chain_graph(rng)
+        g.nodes.append(Node("dead", "relu", ["h"], ["unused"]))
+        g2 = pm.run(g)
+        assert all(n.name != "dead" for n in g2.nodes)
+        assert pm.pass_names() == ["infer_shapes", "eliminate_dead"]
+
+    def test_unknown_pass_raises(self, rng):
+        with pytest.raises(PipelineError, match="unknown pass"):
+            PassManager(["no_such_pass"]).run(chain_graph(rng))
+
+    def test_register_pass_decorator(self):
+        @register_pass("_test_noop")
+        def _noop(g):
+            return g
+
+        assert get_pass("_test_noop") is _noop
+        assert "_test_noop" in registered_passes()
+
+    def test_validate_catches_corrupting_pass(self, rng):
+        def bad(g):
+            g2 = g.clone()
+            g2.nodes = g2.nodes[1:]  # drop the producer of "h"
+            return g2
+
+        with pytest.raises(PipelineError, match="malformed"):
+            PassManager([bad], validate=True).run(chain_graph(rng))
+        # without validation the bad graph passes through silently
+        PassManager([bad], validate=False).run(chain_graph(rng))
+
+    def test_fixpoint_iterates_until_stable(self, rng):
+        def peel(g):
+            """Remove one trailing unary node per application."""
+            g2 = g.clone()
+            if len(g2.nodes) > 1 and g2.nodes[-1].op in ("relu", "tanh", "sigmoid"):
+                last = g2.nodes.pop()
+                g2.outputs = [last.inputs[0]]
+            return g2
+
+        pm = PassManager([peel], fixpoint=True, max_iters=10)
+        g2 = pm.run(chain_graph(rng))
+        assert [n.op for n in g2.nodes] == ["dense"]
+        iters = {s.iteration for s in pm.stats}
+        assert len(iters) == 4  # 3 peels + 1 converged iteration
+
+    def test_default_pipeline_matches_declared_passes(self):
+        pm = default_pipeline()
+        assert tuple(pm.pass_names()) == DEFAULT_PASSES
+
+    def test_input_graph_untouched(self, rng):
+        g = chain_graph(rng)
+        ops_before = [n.op for n in g.nodes]
+        default_pipeline().run(g)
+        assert [n.op for n in g.nodes] == ops_before
+
+
+# --------------------------------------------------------------------------- #
+class TestFuseElementwise:
+    def test_chain_collapses_to_single_node(self, rng):
+        g2 = fuse_elementwise(chain_graph(rng))
+        ops = [n.op for n in g2.nodes]
+        assert ops == ["dense", "fused_elementwise"]
+        fused = g2.nodes[-1]
+        assert tuple(fused.attrs["ops"]) == ("relu", "tanh", "sigmoid")
+        assert fused.outputs == ["y"]
+
+    def test_numerics_match_unfused_ref(self, rng):
+        g = chain_graph(rng)
+        x = rng.standard_normal((2, 8)).astype(np.float32)
+        y_ref = np.asarray(
+            compile(g, FixedPolicy(prefer=("ref",)), pipeline=())(x=x)[0])
+        y_fused = np.asarray(
+            compile(fuse_elementwise(g), FixedPolicy(prefer=("ref",)),
+                    pipeline=())(x=x)[0])
+        np.testing.assert_allclose(y_fused, y_ref, rtol=1e-6, atol=1e-6)
+
+    def test_ref_and_xla_backends_agree(self, rng):
+        g = fuse_elementwise(chain_graph(rng))
+        x = rng.standard_normal((2, 8)).astype(np.float32)
+        y_ref = np.asarray(
+            compile(g, FixedPolicy(prefer=("ref",)), pipeline=())(x=x)[0])
+        y_xla = np.asarray(
+            compile(g, FixedPolicy(prefer=("xla", "ref")), pipeline=())(x=x)[0])
+        np.testing.assert_allclose(y_xla, y_ref, rtol=1e-5, atol=1e-6)
+
+    def test_multi_consumer_intermediate_not_fused(self, rng):
+        g = chain_graph(rng)
+        # h1 gets a second consumer -> the relu must survive
+        g.nodes.append(Node("extra", "add", ["h1", "h1"], ["z"]))
+        g.outputs = ["y", "z"]
+        g2 = fuse_elementwise(g)
+        ops = [n.op for n in g2.nodes]
+        assert "relu" in ops
+        fused = [n for n in g2.nodes if n.op == "fused_elementwise"]
+        assert len(fused) == 1
+        assert tuple(fused[0].attrs["ops"]) == ("tanh", "sigmoid")
+
+    def test_graph_output_boundary_respected(self, rng):
+        g = chain_graph(rng)
+        g.outputs = ["h1", "y"]  # h1 is externally visible
+        g2 = fuse_elementwise(g)
+        assert "relu" in [n.op for n in g2.nodes]
+
+
+# --------------------------------------------------------------------------- #
+class TestProgramCompile:
+    def test_compile_reports_pass_stats(self, rng):
+        prog = compile(chain_graph(rng), FixedPolicy(prefer=("ref",)))
+        names = [s.name for s in prog.pass_stats]
+        assert tuple(names) == DEFAULT_PASSES
+        assert any(s.changed for s in prog.pass_stats)  # the chain fused
+        assert all(s.seconds >= 0 for s in prog.pass_stats)
+
+    def test_compile_executes(self, rng):
+        g = chain_graph(rng)
+        x = rng.standard_normal((2, 8)).astype(np.float32)
+        prog = compile(g, FixedPolicy(prefer=("ref",)))
+        (y,) = prog(x=x)
+        assert np.asarray(y).shape == (2, 8)
+        assert np.isfinite(np.asarray(y)).all()
+
+    def test_assignment_is_frozen(self, rng):
+        prog = compile(chain_graph(rng), FixedPolicy(prefer=("ref",)))
+        a = prog.assignment
+        a["d"] = "tampered"
+        assert prog.assignment["d"] == "ref"
+        with pytest.raises(TypeError):
+            prog.cost_table["d"] = None
+
+    def test_cost_table_frozen_at_compile(self, rng):
+        prog = compile(chain_graph(rng), FixedPolicy(prefer=("ref",)))
+        assert set(prog.cost_table) == {n.name for n in prog.graph.nodes}
+        total = prog.total_cost()
+        assert total.flops > 0 and total.bytes > 0
+
+    def test_save_load_roundtrip_assignment(self, rng, tmp_path):
+        g = chain_graph(rng)
+        x = rng.standard_normal((2, 8)).astype(np.float32)
+        prog = compile(g, FixedPolicy(per_op={"dense": ("xla",)},
+                                      prefer=("ref",)))
+        prog.save(str(tmp_path / "m"))
+        # assignment rides in the OXF model.json (node backend pins)
+        meta = json.load(open(tmp_path / "m" / "model.json"))
+        assert all(nd.get("backend") for nd in meta["nodes"])
+        pj = json.load(open(tmp_path / "m" / "program.json"))
+        assert pj["assignment"] == prog.assignment
+
+        prog2 = Program.load(str(tmp_path / "m"))
+        assert prog2.assignment == prog.assignment
+        np.testing.assert_allclose(np.asarray(prog2(x=x)[0]),
+                                   np.asarray(prog(x=x)[0]),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_load_program_via_importer(self, rng, tmp_path):
+        g = chain_graph(rng)
+        prog = compile(g, FixedPolicy(prefer=("ref",)))
+        prog.save(str(tmp_path / "m"))
+        prog2 = load_program(str(tmp_path / "m"))
+        assert prog2.assignment == prog.assignment
+
+    def test_executor_shim_is_deprecated_and_equivalent(self, rng):
+        from repro.core import Executor
+        g = infer_shapes(chain_graph(rng))
+        x = rng.standard_normal((2, 8)).astype(np.float32)
+        with pytest.warns(DeprecationWarning):
+            ex = Executor(g, FixedPolicy(prefer=("ref",)))
+        prog = compile(g, FixedPolicy(prefer=("ref",)), pipeline=())
+        assert ex.assignment == prog.assignment
+        np.testing.assert_array_equal(np.asarray(ex(x=x)[0]),
+                                      np.asarray(prog(x=x)[0]))
+
+
+# --------------------------------------------------------------------------- #
+class TestAutotuneCachePersistence:
+    def test_second_instance_loads_not_rebuilds(self, rng, tmp_path):
+        g = chain_graph(rng)
+        cache = str(tmp_path / "tune.json")
+        pol1 = AutotunePolicy(reps=1, cache_path=cache)
+        prog1 = compile(g, policy=pol1)
+        assert pol1.n_measured > 0 and pol1.n_loaded == 0
+        assert os.path.exists(cache)
+
+        pol2 = AutotunePolicy(reps=1, cache_path=cache)
+        # the timings dict is loaded at construction, before any compile
+        assert pol2.n_loaded == len(pol2._timings) > 0
+        prog2 = compile(g, policy=pol2)
+        assert pol2.n_measured == 0  # zero re-measurements
+        assert prog2.assignment == prog1.assignment
+
+    def test_cached_timings_respect_candidates(self, rng, tmp_path):
+        """A cache written by an unrestricted run must not let a
+        candidates-restricted policy pick an excluded backend."""
+        g = chain_graph(rng)
+        cache = str(tmp_path / "tune.json")
+        compile(g, policy=AutotunePolicy(reps=1, cache_path=cache))
+        pol = AutotunePolicy(reps=1, cache_path=cache, candidates=("ref",))
+        prog = compile(g, policy=pol)
+        assert set(prog.assignment.values()) == {"ref"}
+        assert pol.n_measured == 0  # ref timings were in the cache
+
+    def test_restricted_cache_topped_up_for_wider_candidates(self, rng, tmp_path):
+        """A cache written under candidates=('ref',) is incrementally
+        extended — not trusted blindly — by an unrestricted policy."""
+        g = chain_graph(rng)
+        cache = str(tmp_path / "tune.json")
+        compile(g, policy=AutotunePolicy(reps=1, cache_path=cache,
+                                         candidates=("ref",)))
+        pol = AutotunePolicy(reps=1, cache_path=cache)
+        compile(g, policy=pol)
+        assert pol.n_measured > 0  # the missing backends got benchmarked
+        times = next(iter(pol._timings.values()))
+        assert len(times) > 1
+
+    def test_cache_keyed_by_hardware_fingerprint(self, rng, tmp_path):
+        cache = tmp_path / "tune.json"
+        pol1 = AutotunePolicy(reps=1, cache_path=str(cache))
+        compile(chain_graph(rng), policy=pol1)
+        data = json.load(open(cache))
+        assert list(data["fingerprints"]) == [hardware_fingerprint()]
+        # remount the timings under a foreign fingerprint -> ignored
+        data["fingerprints"] = {"deadbeefdeadbeef":
+                                data["fingerprints"][hardware_fingerprint()]}
+        json.dump(data, open(cache, "w"))
+        pol2 = AutotunePolicy(reps=1, cache_path=str(cache))
+        assert pol2.n_loaded == 0 and not pol2._timings
+
+    def test_corrupt_cache_file_ignored(self, rng, tmp_path):
+        cache = tmp_path / "tune.json"
+        cache.write_text("not json{{{")
+        pol = AutotunePolicy(reps=1, cache_path=str(cache))
+        assert pol.n_loaded == 0
+        compile(chain_graph(rng), policy=pol)  # measures + rewrites cleanly
+        assert json.load(open(cache))["version"] == 1
+
+    def test_zero_remeasurement_across_processes(self, tmp_path):
+        """The acceptance check: two separate processes, one cache file —
+        the second performs zero measurements."""
+        script = (
+            "import sys, numpy as np\n"
+            "from repro.core import compile, AutotunePolicy, Graph, Node, TensorSpec\n"
+            "g = Graph(name='t', inputs={'x': TensorSpec((2, 4))}, outputs=['y'],\n"
+            "          nodes=[Node('d', 'dense', ['x', 'w'], ['y'])],\n"
+            "          params={'w': np.eye(4, dtype=np.float32)})\n"
+            "pol = AutotunePolicy(reps=1, cache_path=sys.argv[1])\n"
+            "compile(g, policy=pol)\n"
+            "print(f'MEASURED={pol.n_measured} LOADED={pol.n_loaded}')\n"
+        )
+        cache = str(tmp_path / "tune.json")
+        env = dict(os.environ, PYTHONPATH=SRC)
+        outs = []
+        for _ in range(2):
+            res = subprocess.run([sys.executable, "-c", script, cache],
+                                 capture_output=True, text=True, env=env,
+                                 timeout=240)
+            assert res.returncode == 0, res.stderr
+            outs.append(res.stdout)
+        assert "MEASURED=1 LOADED=0" in outs[0]
+        assert "MEASURED=0 LOADED=1" in outs[1]
+
+
+# --------------------------------------------------------------------------- #
+class _StubLM:
+    """Minimal model for the batcher: prefill emits token 3, decode emits
+    EOS (1) immediately, so every request finishes one step after admission."""
+
+    vocab = 8
+
+    def init_caches(self, n_slots, cap):
+        return {"c": jnp.zeros((n_slots, 1), jnp.float32)}
+
+    def prefill(self, params, batch, cache_cap):
+        logits = jnp.zeros((1, self.vocab)).at[0, 3].set(1.0)
+        n = batch["tokens"].shape[1]
+        return logits, {"c": jnp.zeros((1, 1), jnp.float32)}, \
+            jnp.asarray([n], jnp.int32)
+
+    def decode_step(self, params, tokens, caches, lengths):
+        b = tokens.shape[0]
+        logits = jnp.zeros((b, self.vocab)).at[:, 1].set(1.0)
+        return logits, caches
+
+
+class TestBatcherRunRegression:
+    def test_run_returns_requests_admitted_before_run(self):
+        from repro.runtime.batching import ContinuousBatcher, Request
+        batcher = ContinuousBatcher(_StubLM(), params={}, n_slots=2,
+                                    cache_cap=8, eos_id=1)
+        reqs = [Request(uid=i, prompt=np.asarray([2, 3], np.int64),
+                        max_new_tokens=4) for i in range(3)]
+        for r in reqs:
+            batcher.submit(r)
+        # one manual step admits the first two requests into slots BEFORE
+        # run() is called — the old queue-snapshot run() lost them
+        batcher.step()
+        finished = batcher.run(max_steps=50)
+        assert {r.uid for r in finished} == {0, 1, 2}
+        assert all(r.done for r in reqs)
+        # exactly-once delivery: a second run() neither re-returns old
+        # requests nor leaks them in `submitted`
+        assert batcher.run(max_steps=50) == []
+        assert batcher.submitted == []
