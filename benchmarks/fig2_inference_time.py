@@ -17,6 +17,10 @@ entrypoint.  Autotune measurements persist in the on-disk cache
 
 Reports median-of-k wall seconds per model per assignment (batch 1, this
 container's single CPU core — the same regime as the paper's Cortex-A73).
+
+``--quant`` (or :func:`run_quant`) instead compares fp32 vs post-training
+int8 builds of each model: wall time, weight-bytes footprint (the ~4x
+memory win), and max output deviation on the calibration input.
 """
 
 from __future__ import annotations
@@ -75,7 +79,54 @@ def run(models: Optional[List[str]] = None, reps: int = 3,
     return rows
 
 
+def run_quant(models: Optional[List[str]] = None, reps: int = 3) -> List[Dict]:
+    """fp32-vs-int8 comparison (the quantization-scenario axis): for each
+    model, compile the same simplified graph twice — once fp32, once through
+    ``compile(..., quantize="int8", calib_data=...)`` — and report wall time
+    plus the weight-bytes footprint of each Program."""
+    from repro.tools.report import weight_bytes
+    rng = np.random.default_rng(0)
+    pipeline = default_pipeline()
+    policy = FixedPolicy(prefer=("xla", "ref"))
+    rows = []
+    for name in (models or list(CNN_MODELS)):
+        g = pipeline.run(build_cnn(name, batch=1))
+        x = rng.standard_normal(g.inputs["x"].shape).astype(np.float32)
+        prog_fp = compile(g, policy=policy, pipeline=())
+        prog_q = compile(g, policy=policy, pipeline=(), quantize="int8",
+                         calib_data=x)
+        fp_s = time_program(prog_fp, x, reps)
+        q_s = time_program(prog_q, x, reps)
+        fp_b, q_b = weight_bytes(prog_fp), weight_bytes(prog_q)
+        y_fp = np.asarray(prog_fp(x=x)[0])
+        y_q = np.asarray(prog_q(x=x)[0])
+        rows.append({
+            "model": name, "fp32_s": fp_s, "int8_s": q_s,
+            "fp32_weight_bytes": fp_b, "int8_weight_bytes": q_b,
+            "bytes_ratio": fp_b / max(q_b, 1),
+            "max_abs_err": float(np.abs(y_q - y_fp).max()),
+        })
+    return rows
+
+
+def main_quant(models: Optional[List[str]] = None, reps: int = 3) -> None:
+    rows = run_quant(models=models, reps=reps)
+    print(f"{'model':14s} {'fp32':>10s} {'int8':>10s} {'fp32 wB':>10s} "
+          f"{'int8 wB':>10s} {'ratio':>6s} {'max err':>8s}")
+    for r in rows:
+        print(f"{r['model']:14s} {r['fp32_s']*1e3:8.1f}ms {r['int8_s']*1e3:8.1f}ms "
+              f"{r['fp32_weight_bytes']:10d} {r['int8_weight_bytes']:10d} "
+              f"{r['bytes_ratio']:5.2f}x {r['max_abs_err']:8.4f}")
+    for r in rows:
+        print(f"fig2q/{r['model']}/int8,{r['int8_s']*1e6:.0f},"
+              f"bytes_ratio={r['bytes_ratio']:.2f}")
+
+
 def main() -> None:
+    import sys
+    if "--quant" in sys.argv:
+        main_quant()
+        return
     rows = run()
     cols = [c for c in rows[0] if c not in ("model", "winner")]
     print(f"{'model':14s} " + " ".join(f"{c:>10s}" for c in cols) + "  winner")

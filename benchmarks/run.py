@@ -39,6 +39,13 @@ def main() -> None:
         for c in cols:
             print(f"fig2/{r['model']}/{c},{r[c]*1e6:.0f},winner={r['winner']}")
 
+    print("# --- fig2q: fp32 vs int8 (time + weight bytes) ---")
+    qmodels = ["wrn-40-2"] if fast else ["wrn-40-2", "mobilenet-v1", "resnet-18"]
+    for r in fig2_inference_time.run_quant(models=qmodels, reps=2):
+        print(f"fig2q/{r['model']}/int8,{r['int8_s']*1e6:.0f},"
+              f"fp32_us={r['fp32_s']*1e6:.0f};bytes_ratio={r['bytes_ratio']:.2f};"
+              f"max_err={r['max_abs_err']:.4f}")
+
     print("# --- per-layer evaluation ---")
     from benchmarks import per_layer
     for r in per_layer.run(top_k=3 if fast else 5):

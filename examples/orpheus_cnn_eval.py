@@ -18,18 +18,24 @@ import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.fig2_inference_time import run  # noqa: E402
+from benchmarks.fig2_inference_time import main_quant, run  # noqa: E402
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="three small models, no autotune")
+    ap.add_argument("--int8", action="store_true",
+                    help="compare fp32 vs post-training int8 builds "
+                         "(time, weight bytes, output deviation)")
     ap.add_argument("--autotune-cache", default=None, metavar="PATH",
                     help="autotune cache JSON (default: "
                          "$ORPHEUS_AUTOTUNE_CACHE or ~/.cache/orpheus)")
     args = ap.parse_args()
     models = (["wrn-40-2", "mobilenet-v1", "resnet-18"] if args.fast else None)
+    if args.int8:
+        main_quant(models=models, reps=2)
+        return
     rows = run(models=models, reps=2, include_autotune=not args.fast,
                autotune_cache=args.autotune_cache)
     cols = [c for c in rows[0] if c not in ("model", "winner")]

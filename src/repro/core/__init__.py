@@ -25,6 +25,8 @@ from repro.core.pipeline import (DEFAULT_PASSES, PassManager, PassStats,
                                  PipelineError, default_pipeline, get_pass,
                                  register_pass, registered_passes)
 from repro.core.program import NodeReport, Program, compile
+from repro.core.quant import (QUANTIZABLE_OPS, calibrate, is_quantized,
+                              quantize_graph, quantize_weight)
 from repro.core.registry import (Cost, OpDef, OpImpl, backends_for, defop,
                                  get_impl, get_op, impl, registered_ops)
 from repro.core.selector import (TPU_V5E, AutotunePolicy, BackendPolicy,
@@ -42,6 +44,8 @@ __all__ = [
     "default_pipeline", "get_pass", "register_pass", "registered_passes",
     "Cost", "OpDef", "OpImpl", "backends_for", "defop", "get_impl", "get_op",
     "impl", "registered_ops",
+    "QUANTIZABLE_OPS", "calibrate", "is_quantized", "quantize_graph",
+    "quantize_weight",
     "TPU_V5E", "AutotunePolicy", "BackendPolicy", "CostModelPolicy",
     "FixedPolicy", "HardwareProfile", "default_cache_path",
     "hardware_fingerprint",

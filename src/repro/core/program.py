@@ -193,10 +193,12 @@ class Program:
         for node in pinned.nodes:
             node.backend = self._assignment[node.name]
         save_graph(pinned, path)
+        from repro.core.quant import is_quantized
         meta = {
             "assignment": dict(self._assignment),
             "cost_table": {name: {"backend": b, "flops": c.flops, "bytes": c.bytes}
                            for name, (b, c) in self._cost_table.items()},
+            "quantized": is_quantized(self._graph),
         }
         with open(os.path.join(path, "program.json"), "w") as f:
             json.dump(meta, f, indent=1, sort_keys=True)
@@ -213,7 +215,8 @@ class Program:
 
 def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
             pipeline: Optional[Union[PassManager, Sequence]] = None,
-            *, validate: bool = False) -> Program:
+            *, validate: bool = False, quantize: Optional[str] = None,
+            calib_data: Any = None) -> Program:
     """Graph -> Program: the staged compilation entrypoint.
 
     Parameters
@@ -230,6 +233,18 @@ def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
         skips rewriting entirely (shape inference still happens).
     validate:
         Forwarded to the default pipeline's inter-pass validation.
+    quantize:
+        ``"int8"`` runs post-training quantization as an extra compile
+        stage after the simplify pipeline: calibration (when
+        ``calib_data`` is given) followed by the
+        :func:`repro.core.quant.quantize_graph` rewrite.  Weights become
+        per-channel int8 params; activation scales are frozen from the
+        calibration ranges.
+    calib_data:
+        Representative inputs for the calibration observer — a dict of
+        input arrays, a sequence of dicts, or (single-input graphs) a bare
+        array.  Without it, quantization is weight-only and the ``ref``
+        int8 backend falls back to dynamic per-batch activation scales.
     """
     from repro.core.passes import infer_shapes
     if pipeline is None:
@@ -237,6 +252,13 @@ def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
     elif not isinstance(pipeline, PassManager):
         pipeline = PassManager(list(pipeline), validate=validate, name="custom")
     g = pipeline.run(graph)
+    if quantize is not None:
+        from repro.core import quant
+        if quantize != "int8":
+            raise ValueError(f"unsupported quantize mode {quantize!r} (only 'int8')")
+        ranges = (quant.calibrate(g, calib_data)
+                  if calib_data is not None else None)
+        g = quant.quantize_graph(g, ranges)
     if not g.value_info:
         g = infer_shapes(g)
     policy = policy or FixedPolicy()

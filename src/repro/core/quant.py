@@ -1,0 +1,500 @@
+"""Post-training INT8 quantization — a first-class compile stage.
+
+The paper's whole pitch is cheap evaluation of edge-inference optimisations
+across targets like inference time and memory footprint; reduced-precision
+execution is the single most common such optimisation on constrained
+devices.  This module makes it expressible inside the staged compilation
+pipeline (:mod:`repro.core.pipeline` / :mod:`repro.core.program`):
+
+* :func:`calibrate` — the observer pass: run representative inputs through
+  the graph eagerly (``ref`` backends) and record per-value min/max
+  activation ranges.
+* :func:`quantize_graph` — the graph rewrite: ``dense`` / ``conv2d`` (and
+  their fused variants) become ``*_q`` nodes whose weight param is an int8
+  array and whose attrs carry the per-output-channel weight scales plus the
+  calibrated activation scale / zero-point.  Registered in the pass
+  registry as ``"quantize"`` (weight-only / dynamic-activation form, so it
+  composes in a plain :class:`~repro.core.pipeline.PassManager`).
+* Quantized operator declarations + two backends each:
+
+  - ``ref`` — true int8 × int8 → int32-accumulate arithmetic
+    (``preferred_element_type=int32``), then dequantize.  The oracle for
+    what an integer-only edge target would compute.
+  - ``xla`` — dequantize-fused: weights stay int8 in memory (the footprint
+    win) and are expanded to fp32 *inside* the jitted computation, where
+    XLA fuses the dequant into the GEMM/conv.  Activations stay fp32, so
+    this is the highest-accuracy deployment path on float-capable hosts.
+
+Scheme
+------
+Symmetric, per-output-channel for weights::
+
+    scale[c] = max(|W[..., c]|) / 127        W_q = round(W / scale)  in [-127, 127]
+
+Symmetric per-tensor for activations (zero_point always 0, recorded anyway
+so the OXF attrs are self-describing)::
+
+    x_scale  = max(|lo|, |hi|) / 127         from calibration min/max
+
+Symmetric quantization keeps zero exactly representable, which makes SAME
+padding and ReLU behave identically to fp32.
+
+End to end::
+
+    from repro.core import compile
+    prog = compile(graph, quantize="int8", calib_data={"x": batch})
+    prog.save("model_int8")          # int8 weights + scales ride in the OXF
+    Program.load("model_int8")       # runs without re-calibration
+
+Cost models report the *reduced* byte traffic (int8 weight specs are 4x
+smaller), so :class:`~repro.core.selector.CostModelPolicy`,
+:class:`~repro.core.selector.AutotunePolicy` and the roofline tools all see
+the footprint win without special-casing.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.ir import Graph, Node, TensorSpec, topological_order
+from repro.core.pipeline import register_pass
+from repro.core.registry import Cost, defop, get_impl, impl
+
+__all__ = [
+    "QMAX",
+    "QUANTIZABLE_OPS",
+    "weight_scales",
+    "quantize_weight",
+    "activation_scale",
+    "calibrate",
+    "quantize_graph",
+    "is_quantized",
+]
+
+Attrs = Dict[str, Any]
+
+QMAX = 127  # symmetric int8: values live in [-127, 127] (-128 unused)
+
+# fp op -> (quantized op, out-channel axis of the weight array)
+QUANTIZABLE_OPS: Dict[str, Tuple[str, int]] = {
+    "dense": ("dense_q", 1),          # w: (in, out)
+    "dense_fused": ("dense_fused_q", 1),
+    "conv2d": ("conv2d_q", 3),        # w: HWIO
+    "conv2d_fused": ("conv2d_fused_q", 3),
+}
+
+
+# --------------------------------------------------------------------------- #
+# Weight quantization (per-output-channel, symmetric)
+# --------------------------------------------------------------------------- #
+
+def weight_scales(w: np.ndarray, channel_axis: int) -> np.ndarray:
+    """Per-output-channel symmetric scales: ``max|W|`` over all other axes,
+    divided by ``QMAX``.  All-zero channels get scale 1 (quantize to 0)."""
+    w = np.asarray(w, dtype=np.float32)
+    reduce_axes = tuple(a for a in range(w.ndim) if a != channel_axis % w.ndim)
+    amax = np.max(np.abs(w), axis=reduce_axes)
+    amax = np.where(amax > 0, amax, 1.0)
+    return (amax / QMAX).astype(np.float32)
+
+
+def quantize_weight(w: np.ndarray, channel_axis: int) -> Tuple[np.ndarray, np.ndarray]:
+    """``(W_q int8, scales f32)`` such that ``W ~= W_q * scales`` broadcast
+    along ``channel_axis``."""
+    w = np.asarray(w, dtype=np.float32)
+    scales = weight_scales(w, channel_axis)
+    shape = [1] * w.ndim
+    shape[channel_axis % w.ndim] = -1
+    q = np.clip(np.round(w / scales.reshape(shape)), -QMAX, QMAX)
+    return q.astype(np.int8), scales
+
+
+def activation_scale(lo: float, hi: float) -> float:
+    """Symmetric per-tensor scale from a calibrated (min, max) range."""
+    amax = max(abs(float(lo)), abs(float(hi)), 1e-12)
+    return amax / QMAX
+
+
+# --------------------------------------------------------------------------- #
+# Calibration — the observer pass
+# --------------------------------------------------------------------------- #
+
+def _as_batches(graph: Graph, calib_data: Any) -> List[Dict[str, Any]]:
+    """Normalise calibration data to a list of input dicts.  Accepts a dict
+    of arrays, a sequence of such dicts, or — for single-input graphs — a
+    bare array / sequence of arrays."""
+    if isinstance(calib_data, (str, bytes)):
+        raise TypeError(f"calib_data must be arrays, not {type(calib_data).__name__} "
+                        f"({calib_data[:40]!r}); load the file first")
+    if isinstance(calib_data, Mapping):
+        return [dict(calib_data)]
+    if isinstance(calib_data, (np.ndarray, jax.Array)):
+        if len(graph.inputs) != 1:
+            raise ValueError(
+                f"bare-array calib_data needs a single-input graph; "
+                f"{graph.name!r} has inputs {sorted(graph.inputs)}")
+        (name,) = graph.inputs
+        return [{name: calib_data}]
+    if isinstance(calib_data, Iterable):
+        batches = []
+        for item in calib_data:
+            batches.extend(_as_batches(graph, item))
+        if not batches:
+            raise ValueError("empty calibration data")
+        return batches
+    raise TypeError(f"cannot interpret calib_data of type {type(calib_data).__name__}")
+
+
+class ValueRange(tuple):
+    """Observed statistics for one graph value.
+
+    Behaves as the ``(lo, hi)`` tuple the activation-scale computation
+    needs, and additionally carries ``channel_mean`` — the calibration mean
+    over every axis but the last (channels) — which
+    :func:`quantize_graph` uses for bias correction."""
+
+    channel_mean: Optional[np.ndarray]
+
+    def __new__(cls, lo: float, hi: float,
+                channel_mean: Optional[np.ndarray] = None) -> "ValueRange":
+        self = super().__new__(cls, (float(lo), float(hi)))
+        self.channel_mean = channel_mean
+        return self
+
+    @property
+    def lo(self) -> float:
+        return self[0]
+
+    @property
+    def hi(self) -> float:
+        return self[1]
+
+    def __repr__(self) -> str:
+        return f"ValueRange({self[0]:.4g}, {self[1]:.4g})"
+
+
+def calibrate(graph: Graph, calib_data: Any, *,
+              backend: str = "ref") -> Dict[str, "ValueRange"]:
+    """Run representative inputs through ``graph`` and record the observed
+    (min, max) of every value — graph inputs, params and intermediates —
+    plus the per-channel mean used for bias correction.
+
+    This is the observer pass of post-training quantization: the returned
+    ranges feed :func:`quantize_graph`, which turns them into static
+    activation scales.  Execution is eager, node by node, on the ``ref``
+    implementations (the oracle), so observed ranges are backend-independent.
+    """
+    batches = _as_batches(graph, calib_data)
+    stats: Dict[str, List] = {}  # name -> [lo, hi, mean_sum, n_batches]
+
+    def observe(name: str, val: Any) -> None:
+        arr = np.asarray(val)
+        lo, hi = float(arr.min()), float(arr.max())
+        axes = tuple(range(arr.ndim - 1)) if arr.ndim > 1 else ()
+        mean = np.mean(arr, axis=axes, dtype=np.float64)
+        if name in stats:
+            s = stats[name]
+            s[0] = min(s[0], lo)
+            s[1] = max(s[1], hi)
+            s[2] = s[2] + mean
+            s[3] += 1
+        else:
+            stats[name] = [lo, hi, mean, 1]
+
+    order = topological_order(graph)
+    for batch in batches:
+        missing = set(graph.inputs) - set(batch)
+        if missing:
+            raise ValueError(f"calibration batch missing inputs {sorted(missing)}")
+        env: Dict[str, Any] = {k: jnp.asarray(v) for k, v in graph.params.items()}
+        env.update({k: jnp.asarray(batch[k]) for k in graph.inputs})
+        for name in (*graph.inputs, *graph.params):
+            observe(name, env[name])
+        for node in order:
+            fn = get_impl(node.op, backend)
+            outs = fn([env[v] for v in node.inputs], node.attrs)
+            for v, val in zip(node.outputs, outs):
+                env[v] = val
+                observe(v, val)
+    return {name: ValueRange(lo, hi, np.asarray(m / n, dtype=np.float32))
+            for name, (lo, hi, m, n) in stats.items()}
+
+
+# --------------------------------------------------------------------------- #
+# The quantize graph rewrite
+# --------------------------------------------------------------------------- #
+
+def _bias_correction(w: np.ndarray, w_q: np.ndarray, scales: np.ndarray,
+                     ch_axis: int, mu: np.ndarray, op: str,
+                     attrs: Attrs) -> Optional[np.ndarray]:
+    """Expected output shift ``E[x @ W] - E[x @ (W_q * s)]`` from the
+    calibrated per-channel input mean ``mu`` — folded into the bias so the
+    quantized layer is unbiased on the calibration distribution.  (For conv
+    this assumes the input mean is spatially uniform, the standard PTQ
+    approximation.)  Returns None when ``mu`` doesn't match the layout."""
+    shape = [1] * w.ndim
+    shape[ch_axis % w.ndim] = -1
+    dw = (w - w_q.astype(np.float32) * scales.reshape(shape)).astype(np.float64)
+    mu = np.asarray(mu, dtype=np.float64)
+    if op.startswith("dense"):
+        if mu.ndim != 1 or mu.shape[0] != dw.shape[0]:
+            return None
+        return (mu @ dw).astype(np.float32)
+    kh, kw, ci_g, co = dw.shape
+    groups = int(attrs.get("groups", 1))
+    if mu.ndim != 1 or mu.shape[0] != ci_g * groups or co % groups:
+        return None
+    if groups == 1:
+        return np.einsum("hwio,i->o", dw, mu).astype(np.float32)
+    # grouped conv: output channels are group-major, input block g feeds them
+    dwg = dw.reshape(kh, kw, ci_g, groups, co // groups)
+    mug = mu.reshape(groups, ci_g)
+    return np.einsum("hwigo,gi->go", dwg, mug).reshape(co).astype(np.float32)
+
+def quantize_graph(graph: Graph,
+                   ranges: Optional[Mapping[str, Tuple[float, float]]] = None,
+                   *, dtype: str = "int8",
+                   ops: Optional[Sequence[str]] = None) -> Graph:
+    """Rewrite quantizable nodes into their ``*_q`` forms.
+
+    Weights must be graph params (true for every importer/builder path);
+    each gets a per-output-channel int8 twin stored as ``<name>.q8`` plus a
+    ``w_scale`` attr on the node.  With calibration ``ranges`` the input
+    activation's symmetric scale is frozen into ``x_scale`` (static
+    quantization); without, ``x_scale`` is omitted and the ``ref`` backend
+    quantizes dynamically per batch.  ``zero_point`` is always recorded (0 —
+    the scheme is symmetric) so saved attrs are self-describing.
+
+    ``ops`` restricts which fp ops are rewritten (default: all of
+    :data:`QUANTIZABLE_OPS`).  The input graph is left untouched.
+    """
+    if dtype != "int8":
+        raise ValueError(f"unsupported quantization dtype {dtype!r} (only 'int8')")
+    targets = set(ops if ops is not None else QUANTIZABLE_OPS)
+    unknown = targets - set(QUANTIZABLE_OPS)
+    if unknown:
+        raise ValueError(f"not quantizable: {sorted(unknown)}")
+    g = graph.clone()
+    new_nodes: List[Node] = []
+    for node in g.nodes:
+        if node.op not in targets:
+            new_nodes.append(node)
+            continue
+        qop, ch_axis = QUANTIZABLE_OPS[node.op]
+        wname = node.inputs[1]
+        if wname not in g.params:
+            new_nodes.append(node)  # weight is a computed value: leave fp32
+            continue
+        w = np.asarray(g.params[wname])
+        w_q, scales = quantize_weight(w, ch_axis)
+        qname = f"{wname}.q8"
+        g.params[qname] = w_q
+        attrs = dict(node.attrs)
+        attrs["w_scale"] = scales
+        attrs["zero_point"] = 0
+        inputs = [node.inputs[0], qname, *node.inputs[2:]]
+        if ranges is not None and node.inputs[0] in ranges:
+            vr = ranges[node.inputs[0]]
+            attrs["x_scale"] = activation_scale(vr[0], vr[1])
+            mu = getattr(vr, "channel_mean", None)
+            if mu is not None and len(inputs) > 2 and inputs[2] in g.params:
+                db = _bias_correction(w.astype(np.float32), w_q, scales,
+                                      ch_axis, mu, node.op, node.attrs)
+                if db is not None:
+                    b = np.asarray(g.params[inputs[2]])
+                    bname = f"{node.name}.qbias"
+                    g.params[bname] = (b.astype(np.float32) + db).astype(b.dtype)
+                    inputs[2] = bname
+        new_nodes.append(node.clone(op=qop, inputs=inputs, attrs=attrs))
+    g.nodes = new_nodes
+    from repro.core.passes import eliminate_dead, infer_shapes
+    return infer_shapes(eliminate_dead(g))
+
+
+@register_pass("quantize")
+def quantize_pass(graph: Graph) -> Graph:
+    """Weight-only int8 quantization as a plain registered pass (dynamic
+    activation scales).  ``compile(graph, quantize="int8", calib_data=...)``
+    additionally threads calibrated static ranges through
+    :func:`quantize_graph`."""
+    return quantize_graph(graph)
+
+
+def is_quantized(graph: Graph) -> bool:
+    """True if any node runs a quantized op."""
+    qops = {q for q, _ in QUANTIZABLE_OPS.values()}
+    return any(n.op in qops for n in graph.nodes)
+
+
+# --------------------------------------------------------------------------- #
+# Quantized operator declarations
+# --------------------------------------------------------------------------- #
+#
+# Shapes mirror the fp ops but the output is always float32 (values are
+# dequantized on the way out); the weight spec is int8, which is what makes
+# the cost models report the 4x-smaller weight traffic automatically.
+
+def _q_out_dtype(specs: Sequence[TensorSpec]) -> str:
+    return specs[0].dtype if specs[0].dtype != "int8" else "float32"
+
+
+def _dense_q_shape(specs: Sequence[TensorSpec], attrs: Attrs) -> List[TensorSpec]:
+    x, w = specs[0], specs[1]
+    if x.shape[-1] != w.shape[0]:
+        raise ValueError(f"dense_q mismatch {x.shape} x {w.shape}")
+    return [TensorSpec(x.shape[:-1] + (w.shape[1],), _q_out_dtype(specs))]
+
+
+def _bytes_of(specs: Sequence[TensorSpec]) -> float:
+    return float(sum(s.nbytes for s in specs))
+
+
+def _dense_q_cost(specs: Sequence[TensorSpec], attrs: Attrs) -> Cost:
+    x, w = specs[0], specs[1]
+    batch = x.nelems // x.shape[-1]
+    flops = 2.0 * batch * w.shape[0] * w.shape[1]
+    out = _dense_q_shape(specs[:2], attrs)[0]
+    # quantize-in + dequantize-out are elementwise; weight bytes come from
+    # the int8 spec, which is the whole point.
+    extra = float(x.nelems + out.nelems)
+    return Cost(flops=flops + extra, bytes=_bytes_of(specs) + out.nbytes)
+
+
+def _conv2d_q_geometry(specs, attrs):
+    from repro.core.nnops import _conv_geometry
+    return _conv_geometry(specs, attrs)
+
+
+def _conv2d_q_shape(specs: Sequence[TensorSpec], attrs: Attrs) -> List[TensorSpec]:
+    n, _, _, ci, co, groups, _, _, _, (oh, ow) = _conv2d_q_geometry(specs[:2], attrs)
+    kh, kw, ci_g, _ = specs[1].shape
+    if ci_g * groups != ci:
+        raise ValueError(f"conv2d_q channel mismatch: x has {ci}, w expects {ci_g}*{groups}")
+    return [TensorSpec((n, oh, ow, co), _q_out_dtype(specs))]
+
+
+def _conv2d_q_cost(specs: Sequence[TensorSpec], attrs: Attrs) -> Cost:
+    n, _, (kh, kw), ci, co, groups, _, _, _, (oh, ow) = _conv2d_q_geometry(specs[:2], attrs)
+    flops = 2.0 * n * oh * ow * co * kh * kw * (ci // groups)
+    out = _conv2d_q_shape(specs[:2], attrs)[0]
+    extra = float(specs[0].nelems + out.nelems)
+    return Cost(flops=flops + extra, bytes=_bytes_of(specs) + out.nbytes)
+
+
+def _fused_q_cost(base_cost):
+    def fn(specs, attrs):
+        base = base_cost(specs[:2], attrs)
+        bias = specs[2].nbytes if len(specs) > 2 else 0.0
+        return Cost(base.flops, base.bytes + bias)
+    return fn
+
+
+defop("dense_q", _dense_q_shape, _dense_q_cost,
+      doc="int8-weight dense: x @ dequant(w_q). attrs: w_scale, x_scale?, zero_point")
+defop("dense_fused_q", lambda s, a: _dense_q_shape(s[:2], a),
+      _fused_q_cost(_dense_q_cost),
+      doc="int8-weight dense + bias + activation; inputs (x, w_q, b)")
+defop("conv2d_q", _conv2d_q_shape, _conv2d_q_cost,
+      doc="int8-weight conv2d, NHWC x HWIO(int8). attrs of conv2d + w_scale, x_scale?, zero_point")
+defop("conv2d_fused_q", lambda s, a: _conv2d_q_shape(s[:2], a),
+      _fused_q_cost(_conv2d_q_cost),
+      doc="int8-weight conv2d + bias + activation; inputs (x, w_q, b)")
+
+
+# --------------------------------------------------------------------------- #
+# Implementations
+# --------------------------------------------------------------------------- #
+
+def _quantize_act(x: jax.Array, attrs: Attrs) -> Tuple[jax.Array, jax.Array]:
+    """int8 activation + its scale.  Static when calibration froze
+    ``x_scale`` into the attrs, dynamic (per-batch amax) otherwise."""
+    scale = attrs.get("x_scale")
+    if scale is None:
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / QMAX
+    q = jnp.clip(jnp.round(x / scale), -QMAX, QMAX).astype(jnp.int8)
+    return q, jnp.asarray(scale, jnp.float32)
+
+
+def _wscale(attrs: Attrs) -> jax.Array:
+    return jnp.asarray(np.asarray(attrs["w_scale"], dtype=np.float32))
+
+
+def _finish(y: jax.Array, inputs: Sequence[Any], attrs: Attrs, fused: bool) -> List[Any]:
+    from repro.core.nnops import _act
+    if fused:
+        y = y + inputs[2]
+        y = _act(y, attrs.get("act", "none"))
+    return [y]
+
+
+def _dense_q_int8(inputs, attrs, fused):
+    x, w_q = inputs[0], inputs[1]
+    x_q, x_scale = _quantize_act(x, attrs)
+    acc = lax.dot_general(x_q, w_q, (((x_q.ndim - 1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (x_scale * _wscale(attrs))
+    return _finish(y.astype(x.dtype), inputs, attrs, fused)
+
+
+def _dense_q_dequant(inputs, attrs, fused):
+    x, w_q = inputs[0], inputs[1]
+    w = w_q.astype(x.dtype) * _wscale(attrs)[None, :].astype(x.dtype)
+    y = lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    return _finish(y, inputs, attrs, fused)
+
+
+def _conv_q_call(x_q, w_q, attrs, out_dtype):
+    from repro.core.nnops import _conv_pads, _pair
+    kh, kw = int(w_q.shape[0]), int(w_q.shape[1])
+    stride = _pair(attrs.get("stride", 1))
+    dilation = _pair(attrs.get("dilation", 1))
+    groups = int(attrs.get("groups", 1))
+    pads = _conv_pads(attrs.get("padding", "SAME"), x_q.shape[1:3], (kh, kw),
+                      stride, dilation)
+    return lax.conv_general_dilated(
+        x_q, w_q, window_strides=stride, padding=pads, rhs_dilation=dilation,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups, preferred_element_type=out_dtype)
+
+
+def _conv2d_q_int8(inputs, attrs, fused):
+    x, w_q = inputs[0], inputs[1]
+    x_q, x_scale = _quantize_act(x, attrs)
+    # symmetric scheme: zero_point == 0, so SAME zero-padding is exact
+    acc = _conv_q_call(x_q, w_q, attrs, jnp.int32)
+    y = acc.astype(jnp.float32) * (x_scale * _wscale(attrs)[None, None, None, :])
+    return _finish(y.astype(x.dtype), inputs, attrs, fused)
+
+
+def _conv2d_q_dequant(inputs, attrs, fused):
+    x, w_q = inputs[0], inputs[1]
+    w = w_q.astype(x.dtype) * _wscale(attrs)[None, None, None, :].astype(x.dtype)
+    y = _conv_q_call(x, w, attrs, jnp.float32).astype(x.dtype)
+    return _finish(y, inputs, attrs, fused)
+
+
+_INT8_NOTE = "true int8 x int8 -> int32 accumulation, then dequantize (integer-edge oracle)"
+_DEQ_NOTE = "dequant-fused: int8 weights expanded to fp inside the jit (XLA fuses into the GEMM)"
+
+impl("dense_q", "ref", note=_INT8_NOTE)(
+    lambda inputs, attrs: _dense_q_int8(inputs, attrs, fused=False))
+impl("dense_q", "xla", note=_DEQ_NOTE)(
+    lambda inputs, attrs: _dense_q_dequant(inputs, attrs, fused=False))
+impl("dense_fused_q", "ref", note=_INT8_NOTE)(
+    lambda inputs, attrs: _dense_q_int8(inputs, attrs, fused=True))
+impl("dense_fused_q", "xla", note=_DEQ_NOTE)(
+    lambda inputs, attrs: _dense_q_dequant(inputs, attrs, fused=True))
+impl("conv2d_q", "ref", note=_INT8_NOTE)(
+    lambda inputs, attrs: _conv2d_q_int8(inputs, attrs, fused=False))
+impl("conv2d_q", "xla", note=_DEQ_NOTE)(
+    lambda inputs, attrs: _conv2d_q_dequant(inputs, attrs, fused=False))
+impl("conv2d_fused_q", "ref", note=_INT8_NOTE)(
+    lambda inputs, attrs: _conv2d_q_int8(inputs, attrs, fused=True))
+impl("conv2d_fused_q", "xla", note=_DEQ_NOTE)(
+    lambda inputs, attrs: _conv2d_q_dequant(inputs, attrs, fused=True))

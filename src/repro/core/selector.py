@@ -221,18 +221,28 @@ class AutotunePolicy(BackendPolicy):
 
     # -------------------------- persistence --------------------------- #
     def _load_cache(self) -> None:
+        """Best-effort preload: any corrupted, truncated or wrong-shaped
+        cache file degrades to in-memory tuning instead of crashing the
+        compile (the file is rewritten cleanly on the next measurement)."""
         try:
             with open(self.cache_path) as f:
                 data = json.load(f)
         except (OSError, ValueError):
             return
-        if data.get("version") != _CACHE_VERSION:
+        if not isinstance(data, dict) or data.get("version") != _CACHE_VERSION:
             return
-        entries = data.get("fingerprints", {}).get(hardware_fingerprint(), {})
+        fps = data.get("fingerprints")
+        entries = fps.get(hardware_fingerprint()) if isinstance(fps, dict) else None
+        if not isinstance(entries, dict):
+            return
         for key, times in entries.items():
-            if key not in self._timings:
+            if key in self._timings or not isinstance(times, dict):
+                continue
+            try:
                 self._timings[key] = {b: float(t) for b, t in times.items()}
-                self.n_loaded += 1
+            except (TypeError, ValueError):
+                continue
+            self.n_loaded += 1
 
     def _save_cache(self) -> None:
         """Best-effort persist: an unwritable cache location degrades to
@@ -253,12 +263,16 @@ class AutotunePolicy(BackendPolicy):
             try:
                 with open(path) as f:
                     prev = json.load(f)
-                if prev.get("version") == _CACHE_VERSION:
+                if isinstance(prev, dict) and prev.get("version") == _CACHE_VERSION:
                     data = prev
             except (OSError, ValueError):
                 pass
         fp = hardware_fingerprint()
-        data.setdefault("fingerprints", {}).setdefault(fp, {}).update(self._timings)
+        if not isinstance(data.get("fingerprints"), dict):
+            data["fingerprints"] = {}
+        if not isinstance(data["fingerprints"].get(fp), dict):
+            data["fingerprints"][fp] = {}
+        data["fingerprints"][fp].update(self._timings)
         tmp = None
         try:
             os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)

@@ -1,0 +1,107 @@
+"""Docs symbol checker — fail CI when docs reference dead code.
+
+Scans markdown files for backtick-quoted dotted references into the
+``repro`` package (```repro.core.quant.calibrate`` and friends) and
+verifies each one resolves against the live package: the longest importable
+module prefix is imported, the remaining parts are attribute-chained.  A
+reference to a module, class, function or attribute that no longer exists
+makes the check fail with the offending file/line.
+
+Usage::
+
+    python -m repro.tools.doccheck                 # docs/*.md + README.md
+    python -m repro.tools.doccheck docs/foo.md ... # explicit files
+
+This is the drift guard for hand-written prose (``docs/architecture.md``,
+``docs/oxf-format.md``); the generated registry tables in README.md are
+covered separately by :mod:`repro.tools.docgen` ``--check``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import importlib
+import os
+import re
+import sys
+from typing import List, Tuple
+
+__all__ = ["find_refs", "resolves", "check_files", "main"]
+
+# `repro.x.y` inside backticks, optionally with a trailing call-ish suffix
+# like `repro.core.compile(...)` which we strip before resolving.
+_REF_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)(?:\(\S*?\))?`")
+
+
+def find_refs(text: str) -> List[Tuple[int, str]]:
+    """All (line_number, dotted_ref) pairs in ``text``."""
+    out = []
+    for i, line in enumerate(text.splitlines(), 1):
+        for m in _REF_RE.finditer(line):
+            out.append((i, m.group(1)))
+    return out
+
+
+def resolves(ref: str) -> bool:
+    """True when ``ref`` names an importable module, or an attribute chain
+    hanging off one (longest importable prefix wins)."""
+    parts = ref.split(".")
+    obj = None
+    rest: List[str] = []
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            rest = parts[i:]
+            break
+        except ImportError:
+            continue
+    if obj is None:
+        return False
+    for p in rest:
+        if not hasattr(obj, p):
+            return False
+        obj = getattr(obj, p)
+    return True
+
+
+def check_files(paths: List[str]) -> List[str]:
+    """Returns a list of 'file:line: bad ref' error strings."""
+    errors = []
+    for path in paths:
+        with open(path) as f:
+            text = f.read()
+        for line_no, ref in find_refs(text):
+            if not resolves(ref):
+                errors.append(f"{path}:{line_no}: unresolvable reference `{ref}`")
+    return errors
+
+
+def _default_paths() -> List[str]:
+    root = os.getcwd()
+    paths = sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    readme = os.path.join(root, "README.md")
+    if os.path.exists(readme):
+        paths.append(readme)
+    return paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", help="markdown files (default: docs/*.md README.md)")
+    args = ap.parse_args(argv)
+    paths = args.files or _default_paths()
+    if not paths:
+        print("no markdown files to check", file=sys.stderr)
+        return 1
+    errors = check_files(paths)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_refs = sum(len(find_refs(open(p).read())) for p in paths)
+    print(f"doccheck: {len(paths)} files, {n_refs} repro.* references, "
+          f"{len(errors)} unresolvable")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,115 @@
+"""Registry-derived documentation tables — docs that cannot drift.
+
+Generates markdown tables of every registered op (with its backends) and
+every registered pass straight from the live registries
+(:func:`repro.core.registered_ops` / :func:`repro.core.registered_passes`),
+and splices them into README.md between marker comments:
+
+    <!-- BEGIN GENERATED: registry-tables -->
+    ...regenerated content...
+    <!-- END GENERATED: registry-tables -->
+
+Usage::
+
+    python -m repro.tools.docgen                    # print tables
+    python -m repro.tools.docgen --update README.md # rewrite marker block
+    python -m repro.tools.docgen --check README.md  # exit 1 when stale
+
+CI runs ``--check`` so a new op/pass/backend that isn't re-generated into
+the README fails the build.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+BEGIN = "<!-- BEGIN GENERATED: registry-tables -->"
+END = "<!-- END GENERATED: registry-tables -->"
+
+__all__ = ["ops_table", "passes_table", "generated_block", "splice", "main"]
+
+
+def _first_line(text: str) -> str:
+    for line in (text or "").strip().splitlines():
+        line = line.strip()
+        if line:
+            return line.replace("|", "\\|")  # keep markdown table cells intact
+    return ""
+
+
+def ops_table() -> str:
+    """Markdown table of every registered op: backends + one-line doc."""
+    from repro.core import get_op, registered_ops
+    rows = ["| op | backends | doc |", "|---|---|---|"]
+    for name in registered_ops():
+        op = get_op(name)
+        backends = ", ".join(
+            f"`{b}`" for b in sorted(op.impls, key=lambda b: (b != "ref", b)))
+        rows.append(f"| `{name}` | {backends} | {_first_line(op.doc)} |")
+    return "\n".join(rows)
+
+
+def passes_table() -> str:
+    """Markdown table of every registered pass + first docstring line."""
+    from repro.core import get_pass, registered_passes
+    rows = ["| pass | summary |", "|---|---|"]
+    for name in registered_passes():
+        if name.startswith("_"):
+            continue  # test-registered scratch passes
+        rows.append(f"| `{name}` | {_first_line(get_pass(name).__doc__)} |")
+    return "\n".join(rows)
+
+
+def generated_block() -> str:
+    import repro  # noqa: F401  (registers all ops, passes and backends)
+    return (f"{BEGIN}\n"
+            f"### Registered passes\n\n{passes_table()}\n\n"
+            f"### Registered ops\n\n{ops_table()}\n"
+            f"{END}")
+
+
+def splice(text: str) -> str:
+    """Replace the marker block inside ``text`` with fresh content."""
+    try:
+        head, rest = text.split(BEGIN, 1)
+        _, tail = rest.split(END, 1)
+    except ValueError:
+        raise SystemExit(
+            f"marker block not found; add\n{BEGIN}\n{END}\nto the file first")
+    return head + generated_block() + tail
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update", metavar="FILE", help="rewrite marker block in FILE")
+    ap.add_argument("--check", metavar="FILE",
+                    help="exit 1 when FILE's marker block is stale")
+    args = ap.parse_args(argv)
+    if args.update:
+        with open(args.update) as f:
+            text = f.read()
+        new = splice(text)
+        if new != text:
+            with open(args.update, "w") as f:
+                f.write(new)
+            print(f"updated {args.update}")
+        else:
+            print(f"{args.update} already up to date")
+        return 0
+    if args.check:
+        with open(args.check) as f:
+            text = f.read()
+        if splice(text) != text:
+            print(f"{args.check} is stale: run "
+                  f"`python -m repro.tools.docgen --update {args.check}`",
+                  file=sys.stderr)
+            return 1
+        print(f"{args.check} registry tables up to date")
+        return 0
+    print(generated_block())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

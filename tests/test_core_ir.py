@@ -212,7 +212,10 @@ class TestSelectorExecutor:
     def test_lower_compile_cost(self, rng):
         g = infer_shapes(tiny_graph(rng))
         co = Executor(g, FixedPolicy(prefer=("ref",))).lower().compile()
-        assert co.cost_analysis().get("flops", 0) > 0
+        ca = co.cost_analysis()
+        if isinstance(ca, list):  # older jaxlib returns one dict per device
+            ca = ca[0]
+        assert ca.get("flops", 0) > 0
 
 
 class TestImporter:

@@ -301,6 +301,39 @@ class TestAutotuneCachePersistence:
         compile(chain_graph(rng), policy=pol)  # measures + rewrites cleanly
         assert json.load(open(cache))["version"] == 1
 
+    def test_truncated_cache_degrades_to_in_memory(self, rng, tmp_path):
+        """A half-written cache (e.g. process killed mid-write outside the
+        atomic-rename path) must not crash compile(); tuning degrades to
+        in-memory and the file is rewritten whole."""
+        g = chain_graph(rng)
+        cache = tmp_path / "tune.json"
+        compile(g, policy=AutotunePolicy(reps=1, cache_path=str(cache)))
+        full = cache.read_text()
+        cache.write_text(full[:len(full) // 2])
+        pol = AutotunePolicy(reps=1, cache_path=str(cache))
+        assert pol.n_loaded == 0
+        prog = compile(g, policy=pol)  # re-measures, does not raise
+        assert pol.n_measured > 0
+        assert prog.assignment
+        data = json.load(open(cache))  # rewritten as valid JSON
+        assert data["version"] == 1
+
+    @pytest.mark.parametrize("payload", [
+        "[1, 2, 3]",                                      # JSON, not an object
+        '{"version": 1, "fingerprints": [1, 2]}',          # wrong-shaped section
+        '{"version": 1, "fingerprints": {"%s": ["x"]}}',   # wrong-shaped entries
+        '{"version": 99, "fingerprints": {}}',             # future version
+    ])
+    def test_wrong_shaped_cache_degrades(self, rng, tmp_path, payload):
+        cache = tmp_path / "tune.json"
+        cache.write_text(payload.replace("%s", hardware_fingerprint()))
+        pol = AutotunePolicy(reps=1, cache_path=str(cache))
+        assert pol.n_loaded == 0 and not pol._timings
+        compile(chain_graph(rng), policy=pol)
+        assert pol.n_measured > 0
+        data = json.load(open(cache))
+        assert hardware_fingerprint() in data["fingerprints"]
+
     def test_zero_remeasurement_across_processes(self, tmp_path):
         """The acceptance check: two separate processes, one cache file —
         the second performs zero measurements."""

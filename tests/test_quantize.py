@@ -1,0 +1,257 @@
+"""Post-training INT8 quantization tests: weight quantization math, the
+calibration observer, the quantize graph rewrite, int8-accumulate vs
+dequant-fused backends, the example-CNN acceptance criteria (accuracy
+within atol 0.1, >=3x smaller weight bytes, re-calibration-free reload),
+and the footprint report."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (FixedPolicy, Graph, Node, PassManager, Program,
+                        TensorSpec, calibrate, compile, get_impl,
+                        is_quantized, quantize_graph, quantize_weight)
+from repro.core.quant import QMAX, activation_scale, weight_scales
+from repro.tools.report import activation_bytes, footprint_table, weight_bytes
+
+
+def conv_graph(rng):
+    """conv2d -> bias_add -> relu -> flatten -> dense (exercises both
+    quantizable op families after the fuse pipeline)."""
+    g = Graph(
+        name="qconv",
+        inputs={"x": TensorSpec((2, 8, 8, 3))},
+        outputs=["y"],
+        nodes=[
+            Node("c", "conv2d", ["x", "w"], ["h"], {"padding": "SAME"}),
+            Node("b", "bias_add", ["h", "bias"], ["hb"]),
+            Node("r", "relu", ["hb"], ["hr"]),
+            Node("f", "flatten", ["hr"], ["hf"]),
+            Node("d", "dense", ["hf", "w2"], ["y"]),
+        ],
+        params={
+            "w": (rng.standard_normal((3, 3, 3, 8)) * 0.2).astype(np.float32),
+            "bias": (rng.standard_normal((8,)) * 0.1).astype(np.float32),
+            "w2": (rng.standard_normal((8 * 8 * 8, 5)) * 0.05).astype(np.float32),
+        },
+    )
+    g.validate()
+    return g
+
+
+# --------------------------------------------------------------------------- #
+class TestWeightQuantization:
+    def test_per_channel_scales_shapes(self, rng):
+        w_conv = rng.standard_normal((3, 3, 8, 16)).astype(np.float32)
+        assert weight_scales(w_conv, 3).shape == (16,)
+        w_dense = rng.standard_normal((8, 4)).astype(np.float32)
+        assert weight_scales(w_dense, 1).shape == (4,)
+
+    def test_roundtrip_error_bounded_by_half_scale(self, rng):
+        w = rng.standard_normal((5, 7)).astype(np.float32)
+        w_q, s = quantize_weight(w, 1)
+        assert w_q.dtype == np.int8
+        assert np.abs(w_q).max() <= QMAX
+        err = np.abs(w - w_q.astype(np.float32) * s[None, :])
+        assert (err <= s[None, :] / 2 + 1e-7).all()
+
+    def test_channel_with_largest_magnitude_hits_qmax(self, rng):
+        w = rng.standard_normal((16, 3)).astype(np.float32)
+        w_q, _ = quantize_weight(w, 1)
+        # per-channel symmetric: every channel's amax maps to +-QMAX
+        assert (np.abs(w_q).max(axis=0) == QMAX).all()
+
+    def test_all_zero_channel_is_safe(self):
+        w = np.zeros((4, 2), np.float32)
+        w_q, s = quantize_weight(w, 1)
+        assert (w_q == 0).all() and (s == 1.0 / QMAX).all()
+
+    def test_activation_scale_symmetric(self):
+        assert activation_scale(-2.0, 1.0) == pytest.approx(2.0 / QMAX)
+        assert activation_scale(0.0, 3.0) == pytest.approx(3.0 / QMAX)
+
+
+# --------------------------------------------------------------------------- #
+class TestCalibrate:
+    def test_observes_every_value(self, rng):
+        g = conv_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        ranges = calibrate(g, {"x": x})
+        expected = set(g.inputs) | set(g.params) | {
+            v for n in g.nodes for v in n.outputs}
+        assert expected <= set(ranges)
+        for lo, hi in ranges.values():
+            assert lo <= hi
+        # relu output range is clipped at zero from below
+        assert ranges["hr"][0] >= 0.0
+
+    def test_multiple_batches_widen_ranges(self, rng):
+        g = conv_graph(rng)
+        small = (rng.standard_normal((2, 8, 8, 3)) * 0.1).astype(np.float32)
+        large = (rng.standard_normal((2, 8, 8, 3)) * 10).astype(np.float32)
+        r_small = calibrate(g, small)  # bare array: single-input graph
+        r_both = calibrate(g, [{"x": small}, {"x": large}])
+        assert r_both["x"][1] > r_small["x"][1]
+        assert r_both["x"][0] < r_small["x"][0]
+
+    def test_channel_mean_recorded(self, rng):
+        g = conv_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        ranges = calibrate(g, x)
+        mu = ranges["x"].channel_mean
+        np.testing.assert_allclose(mu, x.mean(axis=(0, 1, 2)), rtol=1e-5)
+
+    def test_missing_input_raises(self, rng):
+        with pytest.raises(ValueError, match="missing inputs"):
+            calibrate(conv_graph(rng), {"not_x": np.zeros((2, 8, 8, 3))})
+
+
+# --------------------------------------------------------------------------- #
+class TestQuantizeGraphRewrite:
+    def test_rewrites_ops_and_params(self, rng):
+        g = conv_graph(rng)
+        gq = quantize_graph(g)
+        ops = {n.op for n in gq.nodes}
+        assert "conv2d_q" in ops and "dense_q" in ops
+        assert "conv2d" not in ops and "dense" not in ops
+        assert gq.params["w.q8"].dtype == np.int8
+        # fp32 originals are dead and dropped -> that's the footprint win
+        assert "w" not in gq.params and "w2" not in gq.params
+        qnode = next(n for n in gq.nodes if n.op == "conv2d_q")
+        assert qnode.attrs["zero_point"] == 0
+        assert qnode.attrs["w_scale"].shape == (8,)
+        assert "x_scale" not in qnode.attrs  # weight-only without ranges
+        gq.validate()
+
+    def test_calibrated_rewrite_freezes_x_scale(self, rng):
+        g = conv_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        gq = quantize_graph(g, calibrate(g, x))
+        qnode = next(n for n in gq.nodes if n.op == "conv2d_q")
+        assert qnode.attrs["x_scale"] == pytest.approx(
+            np.abs(x).max() / QMAX, rel=1e-5)
+
+    def test_registered_as_pass(self, rng):
+        gq = PassManager(["infer_shapes", "quantize"]).run(conv_graph(rng))
+        assert is_quantized(gq)
+
+    def test_input_graph_untouched(self, rng):
+        g = conv_graph(rng)
+        quantize_graph(g)
+        assert {n.op for n in g.nodes} == {"conv2d", "bias_add", "relu",
+                                           "flatten", "dense"}
+        assert "w.q8" not in g.params
+
+    def test_computed_weight_left_in_fp32(self, rng):
+        g = Graph(
+            name="computed_w",
+            inputs={"x": TensorSpec((2, 4)), "wdyn": TensorSpec((4, 4))},
+            outputs=["y"],
+            nodes=[Node("d", "dense", ["x", "wdyn"], ["y"])],
+        )
+        g.validate()
+        gq = quantize_graph(g)
+        assert [n.op for n in gq.nodes] == ["dense"]
+
+    def test_unknown_dtype_rejected(self, rng):
+        with pytest.raises(ValueError, match="int8"):
+            quantize_graph(conv_graph(rng), dtype="int4")
+
+
+# --------------------------------------------------------------------------- #
+class TestQuantizedExecution:
+    def test_ref_is_true_int8_accumulation(self, rng):
+        """The ref backend must match an integer-arithmetic oracle exactly."""
+        x = rng.standard_normal((3, 6)).astype(np.float32)
+        w = (rng.standard_normal((6, 4)) * 0.3).astype(np.float32)
+        w_q, w_s = quantize_weight(w, 1)
+        x_scale = float(np.abs(x).max() / QMAX)
+        attrs = {"w_scale": w_s, "x_scale": x_scale, "zero_point": 0}
+        (y,) = get_impl("dense_q", "ref")([x, w_q], attrs)
+        x_q = np.clip(np.round(x / x_scale), -QMAX, QMAX).astype(np.int32)
+        acc = x_q @ w_q.astype(np.int32)
+        expect = acc.astype(np.float32) * (x_scale * w_s[None, :])
+        np.testing.assert_allclose(np.asarray(y), expect, rtol=1e-6, atol=1e-6)
+
+    def test_backends_close_to_fp32(self, rng):
+        g = conv_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        y_fp = np.asarray(compile(g, FixedPolicy(prefer=("ref",)))(x=x)[0])
+        for prefer in (("xla", "ref"), ("ref",)):
+            prog = compile(g, FixedPolicy(prefer=prefer), quantize="int8",
+                           calib_data=x)
+            y_q = np.asarray(prog(x=x)[0])
+            np.testing.assert_allclose(y_q, y_fp, atol=0.05)
+
+    def test_dynamic_weight_only_still_runs(self, rng):
+        g = conv_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        prog = compile(g, FixedPolicy(prefer=("ref",)), quantize="int8")
+        y_fp = np.asarray(compile(g, FixedPolicy(prefer=("ref",)))(x=x)[0])
+        np.testing.assert_allclose(np.asarray(prog(x=x)[0]), y_fp, atol=0.1)
+
+    def test_bad_mode_rejected(self, rng):
+        with pytest.raises(ValueError, match="quantize mode"):
+            compile(conv_graph(rng), quantize="fp8")
+
+
+# --------------------------------------------------------------------------- #
+class TestExampleCNNAcceptance:
+    """The ISSUE acceptance criteria on a CNN from ``examples/``."""
+
+    @pytest.fixture(scope="class")
+    def built(self):
+        from repro.models.cnn import build_cnn
+        rng = np.random.default_rng(7)
+        g = build_cnn("wrn-40-2", batch=1)
+        x = rng.standard_normal(g.inputs["x"].shape).astype(np.float32)
+        prog_fp = compile(g)
+        prog_q = compile(g, quantize="int8", calib_data=x)
+        return g, x, prog_fp, prog_q
+
+    def test_matches_fp32_within_atol(self, built):
+        _, x, prog_fp, prog_q = built
+        y_fp = np.asarray(prog_fp(x=x)[0])
+        y_q = np.asarray(prog_q(x=x)[0])
+        np.testing.assert_allclose(y_q, y_fp, atol=0.1)
+
+    def test_weight_bytes_at_least_3x_smaller(self, built):
+        _, _, prog_fp, prog_q = built
+        assert weight_bytes(prog_fp) >= 3 * weight_bytes(prog_q)
+        assert is_quantized(prog_q.graph) and not is_quantized(prog_fp.graph)
+
+    def test_saved_program_reloads_without_recalibration(self, built, tmp_path):
+        _, x, _, prog_q = built
+        prog_q.save(str(tmp_path / "m"))
+        meta = json.load(open(tmp_path / "m" / "program.json"))
+        assert meta["quantized"] is True
+        z = np.load(os.path.join(tmp_path, "m", "weights.npz"))
+        assert any(str(z[k].dtype) == "int8" for k in z.files)
+        prog2 = Program.load(str(tmp_path / "m"))  # no calib_data anywhere
+        np.testing.assert_array_equal(np.asarray(prog2(x=x)[0]),
+                                      np.asarray(prog_q(x=x)[0]))
+        assert prog2.assignment == prog_q.assignment
+
+
+# --------------------------------------------------------------------------- #
+class TestFootprintReport:
+    def test_weight_and_activation_bytes(self, rng):
+        g = conv_graph(rng)
+        x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+        prog_fp = compile(g, FixedPolicy(prefer=("ref",)))
+        prog_q = compile(g, FixedPolicy(prefer=("ref",)), quantize="int8",
+                         calib_data=x)
+        assert weight_bytes(prog_fp) > 3 * weight_bytes(prog_q)
+        assert activation_bytes(prog_fp) > 0
+
+    def test_footprint_table_markdown(self, rng):
+        g = conv_graph(rng)
+        prog = compile(g, FixedPolicy(prefer=("ref",)))
+        progq = compile(g, FixedPolicy(prefer=("ref",)), quantize="int8")
+        table = footprint_table([("fp32", prog), ("int8", progq)])
+        lines = table.splitlines()
+        assert lines[0].startswith("| program | nodes | weight bytes |")
+        assert len(lines) == 4  # header + rule + two rows
+        assert "| fp32 |" in table and "| int8 |" in table
