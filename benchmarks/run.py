@@ -60,6 +60,25 @@ def main() -> None:
         else:
             print(f"kernels/{k},{v*1e6:.0f},wall")
 
+    print("# --- serving engine (Program-backed, continuous batching) ---")
+    from benchmarks import serve_bench
+    rec = serve_bench.run(smoke=fast)
+    eng = rec["engine"]
+    gap = rec["prefill_gap"]
+    print(f"serve/engine_tok_s,{eng['tokens_per_s']:.0f},"
+          f"busy={eng['busy_slot_fraction']:.2f}")
+    print(f"serve/unbatched_tok_s,{rec['unbatched']['tokens_per_s']:.0f},"
+          f"speedup={rec['speedup']:.2f}x")
+    print(f"serve/latency_p50,{eng['latency_s']['p50']*1e6:.0f},"
+          f"p95={eng['latency_s']['p95']*1e6:.0f}us")
+    print(f"serve/ttft_p50,{eng['ttft_s']['p50']*1e6:.0f},"
+          f"p95={eng['ttft_s']['p95']*1e6:.0f}us")
+    print(f"serve/prefill_gap_chunked,{gap['max_gap_chunked_s']*1e6:.0f},"
+          f"full_prefill={gap['full_prefill_s']*1e6:.0f}us;"
+          f"bounded={gap['gap_bounded']}")
+    print(f"serve/dispatch_bind,{rec['dispatch']['bind_us']:.0f},"
+          f"call={rec['dispatch']['call_us']:.0f}us")
+
     print(f"# total {time.time()-t0:.1f}s")
 
 

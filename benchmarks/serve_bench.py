@@ -1,0 +1,241 @@
+"""Serving benchmark: the Program-backed engine under sustained traffic.
+
+Measures, on the example graph LM:
+
+* batched engine throughput vs. the unbatched reference loop (the
+  continuous-batching win — tokens/s at n_slots should be well above the
+  one-request-at-a-time loop);
+* chunked-prefill latency isolation: the max inter-token gap of an
+  in-flight decode while a long prompt is admitted, for chunked vs.
+  one-shot prefill, against the wall time of one full-prompt prefill;
+* per-step dispatch overhead of ``Program.__call__`` (kwargs + validation)
+  vs. the ``Program.bind`` fast path;
+* token-exactness of the engine against the unbatched reference.
+
+Emits a JSON record (p50/p95 latency, TTFT, busy-slot fraction, tokens/s,
+gaps, dispatch) to stdout or ``--json``; ``--smoke`` is the fast CI
+configuration (tiny model, n_slots=2).
+
+Run:  PYTHONPATH=src python benchmarks/serve_bench.py [--smoke] [--int8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.models.graph_lm import GraphLMConfig
+from repro.runtime.engine import EngineRequest, build_lm_serving, padded_len
+
+SMOKE_CFG = GraphLMConfig(vocab=61, d_model=32, n_layers=1, n_heads=4,
+                          n_kv_heads=2, d_ff=64)
+FULL_CFG = GraphLMConfig(vocab=128, d_model=64, n_layers=2, n_heads=4,
+                         n_kv_heads=2, d_ff=128)
+
+
+def _workload(cfg: GraphLMConfig, n_requests: int, max_new: int, seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_requests):
+        plen = int(rng.integers(2, 16))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        out.append((prompt, max_new))
+    return out
+
+
+def _throughput(cfg, workload, *, n_slots, chunk, cache_cap, quantize,
+                check_exact: bool) -> Dict[str, Any]:
+    engine, ref = build_lm_serving(cfg, n_slots=n_slots, chunk=chunk,
+                                   cache_cap=cache_cap, quantize=quantize)
+    reqs = [EngineRequest(uid=i, prompt=p, max_new_tokens=m)
+            for i, (p, m) in enumerate(workload)]
+    # warm both Programs (compile outside the timed region)
+    warm = EngineRequest(uid=-1, prompt=workload[0][0], max_new_tokens=2)
+    engine.submit(warm)
+    engine.run()
+    engine.reset_metrics()                     # measure past the warmup
+
+    for r in reqs:
+        assert engine.submit(r)
+    engine.run(max_ticks=100_000)
+    eng_summary = engine.metrics.summary()
+
+    # unbatched baseline: same requests, one at a time, one-shot prefill.
+    # One fixed prefill shape (every prompt padded to the workload max) so
+    # the timed loop measures execution, not per-length recompiles.
+    ref_chunk = max(padded_len(len(p), chunk) for p, _ in workload)
+    ref.generate(workload[0][0], 2, chunk=ref_chunk)       # warm
+    t0 = time.perf_counter()
+    ref_tokens = [ref.generate(p, m, chunk=ref_chunk) for p, m in workload]
+    ref_wall = time.perf_counter() - t0
+    ref_n = sum(len(t) for t in ref_tokens)
+
+    if check_exact:
+        for r, want in zip(reqs, ref_tokens):
+            assert r.out_tokens == want, (
+                f"engine diverged from reference on request {r.uid}: "
+                f"{r.out_tokens} vs {want}")
+
+    unbatched = {"tokens_out": ref_n, "wall_s": ref_wall,
+                 "tokens_per_s": ref_n / ref_wall if ref_wall > 0 else 0.0}
+    speedup = (eng_summary["tokens_per_s"] / unbatched["tokens_per_s"]
+               if unbatched["tokens_per_s"] else 0.0)
+    return {"engine": eng_summary, "unbatched": unbatched,
+            "speedup": speedup, "token_exact": bool(check_exact)}
+
+
+def _gap_experiment(cfg, *, n_slots, chunk, cache_cap, long_prompt_len,
+                    quantize, seed: int) -> Dict[str, Any]:
+    """Max inter-token gap of an in-flight decode while a long prompt is
+    admitted: chunked vs one-shot prefill, vs one full-prompt prefill."""
+    rng = np.random.default_rng(seed)
+    long_prompt = rng.integers(0, cfg.vocab, size=long_prompt_len).astype(np.int32)
+    short_prompt = rng.integers(0, cfg.vocab, size=4).astype(np.int32)
+    oneshot_chunk = padded_len(long_prompt_len, chunk)
+    cap = max(cache_cap, oneshot_chunk + 40)
+
+    def run_mode(mode_chunk: int):
+        engine, _ = build_lm_serving(cfg, n_slots=n_slots, chunk=mode_chunk,
+                                     cache_cap=cap, quantize=quantize)
+        warm = EngineRequest(uid=-1, prompt=short_prompt, max_new_tokens=2)
+        engine.submit(warm)
+        engine.run()
+        victim = EngineRequest(uid=0, prompt=short_prompt, max_new_tokens=24)
+        engine.submit(victim)
+        while victim.t_first is None:
+            engine.step()
+        for _ in range(2):          # victim is mid-decode
+            engine.step()
+        engine.submit(EngineRequest(uid=1, prompt=long_prompt,
+                                    max_new_tokens=4))
+        engine.run(max_ticks=10_000)
+        return victim.max_gap_s, engine
+
+    gap_chunked, _ = run_mode(chunk)
+    gap_oneshot, eng1 = run_mode(oneshot_chunk)
+
+    # one full-prompt prefill on the serving path: a single engine-shaped
+    # prefill Program call covering the whole long prompt (already warm —
+    # the one-shot engine above jitted exactly this shape)
+    st = eng1.stepper
+    tokens = np.zeros((n_slots, oneshot_chunk), np.int32)
+    tokens[0, :long_prompt_len] = long_prompt
+    start = np.zeros((n_slots,), np.int32)
+    n_new = np.zeros((n_slots,), np.int32)
+    n_new[0] = long_prompt_len
+    st.prefill(tokens, start, n_new)           # warm cache-threading path
+    t0 = time.perf_counter()
+    st.prefill(tokens, start, n_new)
+    full_prefill_s = time.perf_counter() - t0
+    return {"chunk": chunk, "long_prompt_len": long_prompt_len,
+            "max_gap_chunked_s": gap_chunked,
+            "max_gap_oneshot_s": gap_oneshot,
+            "full_prefill_s": full_prefill_s,
+            "gap_bounded": bool(gap_chunked < full_prefill_s)}
+
+
+def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
+                       ) -> Dict[str, float]:
+    """µs/call of the kwargs Program path vs the bind() fast path on the
+    decode step (same computation; the delta is pure dispatch)."""
+    import jax
+    engine, _ = build_lm_serving(cfg, n_slots=n_slots, chunk=chunk,
+                                 cache_cap=cache_cap)
+    st = engine.stepper
+    toks = np.zeros((n_slots, 1), np.int32)
+    start = np.zeros((n_slots,), np.int32)
+    n_new = np.ones((n_slots,), np.int32)
+    caches = {k: st.caches[k] for k in sorted(st.caches)}
+    kwargs = {"tokens": toks, "start": start, "n_new": n_new, **caches}
+    bound = st.decode_program.bind("tokens", "start", "n_new", *sorted(caches))
+    args = (toks, start, n_new, *[caches[k] for k in sorted(caches)])
+
+    def timed(fn) -> float:
+        jax.block_until_ready(fn())      # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    call_us = timed(lambda: st.decode_program(**kwargs))
+    bind_us = timed(lambda: bound(*args))
+    return {"call_us": call_us, "bind_us": bind_us,
+            "saved_us": call_us - bind_us}
+
+
+def run(*, smoke: bool = False, quantize: Optional[str] = None,
+        n_slots: Optional[int] = None, chunk: int = 8,
+        seed: int = 0) -> Dict[str, Any]:
+    cfg = SMOKE_CFG if smoke else FULL_CFG
+    slots = n_slots or (2 if smoke else 4)
+    cache_cap = 64 if smoke else 128
+    n_requests = 6 if smoke else 16
+    max_new = 6 if smoke else 24
+    long_prompt = 64 if smoke else 384
+
+    workload = _workload(cfg, n_requests, max_new, seed)
+    result: Dict[str, Any] = {
+        "config": {"smoke": smoke, "quantize": quantize, "n_slots": slots,
+                   "chunk": chunk, "cache_cap": cache_cap,
+                   "n_requests": n_requests, "max_new_tokens": max_new,
+                   "model": {"vocab": cfg.vocab, "d_model": cfg.d_model,
+                             "n_layers": cfg.n_layers}},
+    }
+    result.update(_throughput(cfg, workload, n_slots=slots, chunk=chunk,
+                              cache_cap=cache_cap, quantize=quantize,
+                              check_exact=True))
+    result["prefill_gap"] = _gap_experiment(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        long_prompt_len=long_prompt, quantize=quantize, seed=seed)
+    result["dispatch"] = _dispatch_overhead(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        reps=50 if smoke else 200)
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI configuration (tiny model, n_slots=2)")
+    ap.add_argument("--int8", action="store_true",
+                    help="serve int8-quantized Programs")
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--json", metavar="PATH",
+                    help="write the JSON record here instead of stdout")
+    args = ap.parse_args(argv)
+
+    rec = run(smoke=args.smoke, quantize="int8" if args.int8 else None,
+              n_slots=args.slots, chunk=args.chunk)
+    eng, unb = rec["engine"], rec["unbatched"]
+    gap = rec["prefill_gap"]
+    print(f"# engine  : {eng['tokens_per_s']:,.0f} tok/s "
+          f"(busy {eng['busy_slot_fraction']:.0%}, "
+          f"p50 {eng['latency_s']['p50']*1e3:.0f}ms, "
+          f"p95 {eng['latency_s']['p95']*1e3:.0f}ms, "
+          f"ttft p50 {eng['ttft_s']['p50']*1e3:.0f}ms)")
+    print(f"# unbatched: {unb['tokens_per_s']:,.0f} tok/s -> "
+          f"speedup {rec['speedup']:.2f}x")
+    print(f"# prefill gap: chunked {gap['max_gap_chunked_s']*1e3:.1f}ms vs "
+          f"one-shot {gap['max_gap_oneshot_s']*1e3:.1f}ms "
+          f"(full prefill {gap['full_prefill_s']*1e3:.1f}ms, "
+          f"bounded={gap['gap_bounded']})")
+    print(f"# dispatch: call {rec['dispatch']['call_us']:.0f}us vs "
+          f"bind {rec['dispatch']['bind_us']:.0f}us per step")
+    payload = json.dumps(rec, indent=1, sort_keys=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            f.write(payload)
+        print(f"# wrote {args.json}")
+    else:
+        print(payload)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

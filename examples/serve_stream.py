@@ -1,0 +1,66 @@
+"""Streaming serving example: the Program-backed engine with an asyncio
+front-end.
+
+Three concurrent clients stream tokens from one engine whose prefill and
+decode steps are compiled Programs (int8-quantized Programs are a
+one-flag switch — see --int8).  A long-prompt request arrives while the
+others are decoding; chunked prefill keeps their token streams flowing
+(the printed per-token timeline shows the interleaving).
+
+Run:  PYTHONPATH=src python examples/serve_stream.py [--int8]
+"""
+
+import argparse
+import asyncio
+import time
+
+import numpy as np
+
+from repro.models.graph_lm import GraphLMConfig
+from repro.runtime.engine import AsyncEngine, build_lm_serving
+
+
+async def client(name: str, aeng: AsyncEngine, prompt, max_new: int, t0: float):
+    toks = []
+    async for tok in aeng.generate(prompt, max_new):
+        toks.append(tok)
+        print(f"  {time.perf_counter() - t0:7.3f}s  {name} -> {tok}")
+    print(f"  {time.perf_counter() - t0:7.3f}s  {name} done: {toks}")
+    return toks
+
+
+async def amain(quantize):
+    cfg = GraphLMConfig()
+    engine, ref = build_lm_serving(cfg, n_slots=4, chunk=8, cache_cap=96,
+                                   quantize=quantize)
+    aeng = AsyncEngine(engine)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 40)]   # two short, one long (chunked) prompt
+    t0 = time.perf_counter()
+    results = await asyncio.gather(
+        client("A(short)", aeng, prompts[0], 8, t0),
+        client("B(short)", aeng, prompts[1], 8, t0),
+        client("C(long) ", aeng, prompts[2], 4, t0),
+        aeng.run())
+    # verify every stream against the unbatched greedy reference
+    for toks, prompt, n in zip(results[:3], prompts, (8, 8, 4)):
+        want = ref.generate(prompt, n)
+        assert toks == want, (toks, want)
+    print("all streams match the unbatched greedy reference ✓")
+    m = engine.metrics.summary()
+    print(f"{m['tokens_out']} tokens, {m['tokens_per_s']:,.0f} tok/s, "
+          f"busy {m['busy_slot_fraction']:.0%}, "
+          f"prefill/decode ticks {m['prefill_ticks']}/{m['decode_ticks']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--int8", action="store_true",
+                    help="serve int8-quantized Programs")
+    args = ap.parse_args()
+    asyncio.run(amain("int8" if args.int8 else None))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,7 +8,9 @@ from repro import core  # noqa: F401  (registers standard ops)
 
 try:  # Pallas backends are optional at import time (e.g. minimal installs)
     from repro.kernels import ops as _kernel_ops  # noqa: F401
+    from repro.kernels import serving_ops as _serving_ops  # noqa: F401
 except ImportError:  # pragma: no cover
     _kernel_ops = None
+    _serving_ops = None
 
 __version__ = "1.0.0"

@@ -79,6 +79,7 @@ class Program:
             table[node.name] = (b, get_impl(node.op, b).cost(in_specs, node.attrs))
         self._cost_table: Mapping[str, Tuple[str, Cost]] = MappingProxyType(table)
         self._jitted: Optional[Callable] = None
+        self._stored: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -128,7 +129,7 @@ class Program:
         explicitly supports functional weight updates (training loops)."""
         if self._jitted is None:
             jf = jax.jit(self._trace)
-            stored = {k: jnp.asarray(v) for k, v in self._graph.params.items()}
+            stored = self._stored_params()
 
             def call(inputs: Dict[str, Any], params: Optional[Dict[str, Any]] = None):
                 return jf(stored if params is None else params, inputs)
@@ -136,11 +137,63 @@ class Program:
             self._jitted = call
         return self._jitted
 
+    def _stored_params(self) -> Dict[str, Any]:
+        """Device copies of the graph params, built once and shared by
+        every entry point (``__call__`` and each ``bind()``) so N bound
+        callables don't hold N copies of the weights."""
+        if self._stored is None:
+            self._stored = {k: jnp.asarray(v)
+                            for k, v in self._graph.params.items()}
+        return self._stored
+
     def __call__(self, **inputs: Any) -> Tuple[Any, ...]:
         missing = set(self._graph.inputs) - set(inputs)
         if missing:
             raise ValueError(f"missing graph inputs: {sorted(missing)}")
         return self.callable()(inputs)
+
+    def bind(self, *names: str,
+             donate: Sequence[str] = ()) -> Callable[..., Tuple[Any, ...]]:
+        """Positional fast-call path: ``bind("x", "y")`` returns
+        ``f(x_arr, y_arr) -> outputs`` with stored params closed over and
+        input names validated once, here, instead of per call.  This is
+        the serving engine's per-step dispatch: on a hot loop the kwargs
+        packing and missing-input check of :meth:`__call__` are measurable
+        overhead (``benchmarks/serve_bench.py`` reports both paths).
+
+        ``donate`` names inputs whose buffers the caller will not reuse —
+        functional state threaded through the call, like the serving
+        engine's KV caches — letting XLA alias them into same-shaped
+        outputs instead of copying (a no-op on backends without donation
+        support, e.g. CPU).  A donated buffer is consumed: pass the
+        previous call's output, never the same array twice.
+
+        With no arguments, inputs bind in the graph's declared order.
+        Each ``bind()`` builds its own jitted entry point — bind once and
+        reuse the returned callable."""
+        order: Tuple[str, ...] = names or tuple(self._graph.inputs)
+        unknown = set(order) - set(self._graph.inputs)
+        if unknown:
+            raise ValueError(f"not graph inputs: {sorted(unknown)}")
+        if set(order) != set(self._graph.inputs):
+            missing = set(self._graph.inputs) - set(order)
+            raise ValueError(f"bind() must cover every input; missing {sorted(missing)}")
+        bad_donate = set(donate) - set(order)
+        if bad_donate:
+            raise ValueError(f"donate names not inputs: {sorted(bad_donate)}")
+        stored = self._stored_params()
+        donate_argnums = tuple(1 + i for i, n in enumerate(order)
+                               if n in set(donate))
+
+        def positional(params: Dict[str, Any], *args: Any) -> Tuple[Any, ...]:
+            return self._trace(params, dict(zip(order, args)))
+
+        jf = jax.jit(positional, donate_argnums=donate_argnums)
+
+        def fast(*args: Any) -> Tuple[Any, ...]:
+            return jf(stored, *args)
+
+        return fast
 
     # ------------------------------------------------------------------ #
     def lower(self, **input_specs: jax.ShapeDtypeStruct):
@@ -216,7 +269,8 @@ class Program:
 def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
             pipeline: Optional[Union[PassManager, Sequence]] = None,
             *, validate: bool = False, quantize: Optional[str] = None,
-            calib_data: Any = None) -> Program:
+            calib_data: Any = None,
+            calib_ranges: Optional[Mapping[str, Any]] = None) -> Program:
     """Graph -> Program: the staged compilation entrypoint.
 
     Parameters
@@ -245,6 +299,14 @@ def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
         input arrays, a sequence of dicts, or (single-input graphs) a bare
         array.  Without it, quantization is weight-only and the ``ref``
         int8 backend falls back to dynamic per-batch activation scales.
+    calib_ranges:
+        Precomputed value ranges (``repro.core.quant.calibrate`` output),
+        used instead of running calibration here.  This is how several
+        shape variants of one model (the serving engine's batched decode /
+        prefill Programs and the unbatched reference — same value names,
+        different batch/chunk) share one set of activation scales and stay
+        numerically identical per sequence.  Mutually exclusive with
+        ``calib_data``.
     """
     from repro.core.passes import infer_shapes
     if pipeline is None:
@@ -256,8 +318,13 @@ def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
         from repro.core import quant
         if quantize != "int8":
             raise ValueError(f"unsupported quantize mode {quantize!r} (only 'int8')")
-        ranges = (quant.calibrate(g, calib_data)
-                  if calib_data is not None else None)
+        if calib_data is not None and calib_ranges is not None:
+            raise ValueError("pass calib_data or calib_ranges, not both")
+        if calib_ranges is not None:
+            ranges: Any = calib_ranges
+        else:
+            ranges = (quant.calibrate(g, calib_data)
+                      if calib_data is not None else None)
         g = quant.quantize_graph(g, ranges)
     if not g.value_info:
         g = infer_shapes(g)

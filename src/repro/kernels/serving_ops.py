@@ -1,0 +1,162 @@
+"""Serving graph ops — the pieces that let a decoder LM's prefill and
+decode steps be expressed as GraphIR and compiled into
+:class:`~repro.core.program.Program` artifacts (the serving engine's step
+functions in :mod:`repro.runtime.engine`).
+
+Three ops, each with an explicit functional-state contract (caches are
+graph inputs AND outputs, so a Program stays a pure function):
+
+* ``embedding``       — token id -> row lookup.
+* ``cache_update``    — length-aware scatter of new K/V rows into a
+  fixed-capacity cache at per-sequence offsets.  ``n_new`` rows are
+  written starting at ``start``; slots with ``n_new == 0`` are untouched,
+  which is how one fixed-batch Program serves a mix of active and idle
+  slots.
+* ``chunk_attention`` — chunked-prefill attention: a chunk of T queries
+  at absolute positions ``start .. start+T-1`` attends to cache keys at
+  positions ``<= start + t`` (offset-causal).  With T=1 this degenerates
+  to single-token decode; the decode graph instead uses the existing
+  ``decode_attention`` op so the flash-decode Pallas backend stays
+  selectable on the hot path.
+
+All shapes are static (fixed batch = engine slots, fixed chunk size,
+fixed cache capacity), so each serving step jits exactly once.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ir import TensorSpec
+from repro.core.registry import Cost, defop, get_impl, impl
+from repro.kernels import ref as R
+
+__all__ = ["embedding", "cache_update", "chunk_attention"]
+
+Attrs = Dict[str, Any]
+
+
+def _bytes(specs: Sequence[TensorSpec]) -> float:
+    return float(sum(s.nbytes for s in specs))
+
+
+# --------------------------------------------------------------------------- #
+# embedding — inputs (ids (B,T) int32, table (V,D))
+# --------------------------------------------------------------------------- #
+
+def _embedding_shape(specs, attrs):
+    ids, table = specs
+    return [TensorSpec(tuple(ids.shape) + (table.shape[1],), table.dtype)]
+
+
+def _embedding_cost(specs, attrs):
+    out = _embedding_shape(specs, attrs)[0]
+    # gather: reads one table row per token + writes the output
+    return Cost(flops=0.0, bytes=2.0 * out.nbytes + specs[0].nbytes)
+
+
+defop("embedding", _embedding_shape, _embedding_cost,
+      doc="token embedding lookup; inputs (ids (B,T) int32, table (V,D))")
+
+
+@impl("embedding", "ref")
+def _embedding_ref(inputs, attrs):
+    ids, table = inputs
+    return [jnp.take(table, ids, axis=0)]
+
+
+def embedding(ids, table, *, backend: str = "ref", **kw):
+    return get_impl("embedding", backend)([ids, table], kw)[0]
+
+
+# --------------------------------------------------------------------------- #
+# cache_update — inputs (cache (B,S,H,D), new (B,T,H,D), start (B,), n_new (B,))
+# --------------------------------------------------------------------------- #
+
+def _cache_update_shape(specs, attrs):
+    cache, new = specs[0], specs[1]
+    if cache.shape[0] != new.shape[0] or cache.shape[2:] != new.shape[2:]:
+        raise ValueError(f"cache_update mismatch: {cache.shape} vs {new.shape}")
+    if new.shape[1] > cache.shape[1]:
+        raise ValueError(f"chunk {new.shape[1]} exceeds cache cap {cache.shape[1]}")
+    return [cache]
+
+
+def _cache_update_cost(specs, attrs):
+    new = specs[1]
+    # read-modify-write of T rows per sequence; the rest of the cache is
+    # untouched (aliasing is XLA's job under jit)
+    return Cost(flops=0.0, bytes=3.0 * new.nbytes + _bytes(specs[2:]))
+
+
+defop("cache_update", _cache_update_shape, _cache_update_cost,
+      doc="scatter n_new K/V rows into a cache at per-sequence offsets; "
+          "inputs (cache (B,S,H,D), new (B,T,H,D), start (B,), n_new (B,))")
+
+
+@impl("cache_update", "ref",
+      note="vmap'd masked gather/scatter; n_new==0 slots are exact no-ops")
+def _cache_update_ref(inputs, attrs):
+    cache, new, start, n_new = inputs
+    t = new.shape[1]
+    cap = cache.shape[1]
+
+    def one(c, x, s, n):
+        idx = jnp.clip(s + jnp.arange(t), 0, cap - 1)
+        rows = c[idx]
+        mask = (jnp.arange(t) < n).reshape((t,) + (1,) * (x.ndim - 1))
+        return c.at[idx].set(jnp.where(mask, x, rows))
+
+    return [jax.vmap(one)(cache, new, start, n_new)]
+
+
+def cache_update(cache, new, start, n_new, *, backend: str = "ref", **kw):
+    return get_impl("cache_update", backend)([cache, new, start, n_new], kw)[0]
+
+
+# --------------------------------------------------------------------------- #
+# chunk_attention — inputs (q (B,T,Hq,D), k (B,S,Hk,D), v (B,S,Hk,D), start (B,))
+# --------------------------------------------------------------------------- #
+
+def _chunk_attn_shape(specs, attrs):
+    return [specs[0]]
+
+
+def _chunk_attn_cost(specs, attrs):
+    q, k = specs[0], specs[1]
+    b, t, hq, d = q.shape
+    s = k.shape[1]
+    return Cost(flops=4.0 * b * hq * t * s * d, bytes=_bytes(specs) + q.nbytes)
+
+
+defop("chunk_attention", _chunk_attn_shape, _chunk_attn_cost,
+      doc="chunked-prefill attention: query t (absolute position start+t) "
+          "attends cache keys at positions <= start+t; "
+          "inputs (q (B,T,Hq,D), k (B,S,Hk,D), v, start (B,)); attrs: scale")
+
+
+@impl("chunk_attention", "ref",
+      note="dense offset-causal masked attention in fp32 (the oracle)")
+def _chunk_attention_ref(inputs, attrs):
+    q, k, v, start = inputs
+    b, t, hq, d = q.shape
+    s = k.shape[1]
+    scale = attrs.get("scale") or (1.0 / math.sqrt(d))
+    kf = R._repeat_kv(k, hq).astype(jnp.float32)
+    vf = R._repeat_kv(v, hq).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kf)
+    qpos = start[:, None] + jnp.arange(t)[None, :]            # (B, T)
+    allowed = jnp.arange(s)[None, None, :] <= qpos[:, :, None]  # (B, T, S)
+    logits = jnp.where(allowed[:, None, :, :], logits, R._NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+    return [o.astype(q.dtype)]
+
+
+def chunk_attention(q, k, v, start, *, scale=None, backend: str = "ref", **kw):
+    return get_impl("chunk_attention", backend)(
+        [q, k, v, start], {"scale": scale, **kw})[0]

@@ -1,17 +1,25 @@
-"""Serving driver: continuous batching over a reduced-config model.
+"""Serving driver: continuous batching over a reduced-config model, or the
+Program-backed engine over the graph LM.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b \
         --requests 16 --slots 4
 
-Submits a stream of random-prompt requests, runs the slot-based continuous
-batcher (prefill-on-admit, batched decode), reports throughput and slot
-utilisation.  On a real pod the same batcher drives the sharded decode
-step from runtime/serve.py.
+    PYTHONPATH=src python -m repro.launch.serve --engine [--int8] \
+        --requests 16 --slots 4 --chunk 8
+
+Default mode submits a stream of random-prompt requests and runs the
+slot-based continuous batcher (prefill-on-admit, batched decode) over an
+:class:`repro.models.lm.LM`; on a real pod the same batcher drives the
+sharded decode step from runtime/serve.py.  ``--engine`` instead serves
+compiled Programs (``repro.runtime.engine``): chunked prefill, deadlines,
+per-token streaming, EngineMetrics — and with ``--int8`` the decode and
+prefill steps are post-training-quantized Programs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -22,16 +30,54 @@ from repro.models.lm import LM
 from repro.runtime.batching import ContinuousBatcher, Request
 
 
+def run_engine(args) -> None:
+    from repro.models.graph_lm import GraphLMConfig
+    from repro.runtime.engine import EngineRequest, build_lm_serving
+
+    cfg = GraphLMConfig()
+    cache_cap = max(args.cache_cap, args.chunk + args.max_new + 16)
+    engine, _ = build_lm_serving(
+        cfg, n_slots=args.slots, chunk=args.chunk, cache_cap=cache_cap,
+        quantize="int8" if args.int8 else None)
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab,
+                              size=int(rng.integers(2, 14))).astype(np.int32)
+        reqs.append(EngineRequest(uid=i, prompt=prompt,
+                                  max_new_tokens=args.max_new))
+    for r in reqs:
+        engine.submit(r)
+    engine.run(max_ticks=100_000)
+    m = engine.metrics.summary()
+    print(f"engine: slots={args.slots} chunk={args.chunk} "
+          f"int8={args.int8} requests={len(reqs)}")
+    print(json.dumps(m, indent=1, sort_keys=True))
+    for r in reqs[:3]:
+        print(f"  req{r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
+              f"-> out[:6]={r.out_tokens[:6]}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--full", action="store_true",
                     help="full config (needs a real pod)")
+    ap.add_argument("--engine", action="store_true",
+                    help="serve compiled Programs via the serving engine")
+    ap.add_argument("--int8", action="store_true",
+                    help="with --engine: serve int8-quantized Programs")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="with --engine: prefill chunk size")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-cap", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=12)
     args = ap.parse_args()
+
+    if args.engine:
+        run_engine(args)
+        return
 
     cfg = get_config(args.arch) if args.full else get_reduced(args.arch)
     if cfg.n_encoder_layers or cfg.frontend == "embeds":

@@ -1,9 +1,15 @@
-"""Runtime: train/serve step factories, continuous batching."""
+"""Runtime: train/serve step factories, continuous batching, and the
+Program-backed serving engine."""
 
-from repro.runtime.batching import ContinuousBatcher, Request
+from repro.runtime.batching import ContinuousBatcher, Request, SlotScheduler
+from repro.runtime.engine import (AsyncEngine, Engine, EngineMetrics,
+                                  EngineRequest, ProgramStepper,
+                                  UnbatchedReference, build_lm_serving)
 from repro.runtime.serve import make_decode_step, make_prefill_step, serve_shardings
 from repro.runtime.train import make_train_step, train_state_shardings
 
-__all__ = ["ContinuousBatcher", "Request", "make_decode_step",
-           "make_prefill_step", "serve_shardings", "make_train_step",
-           "train_state_shardings"]
+__all__ = ["ContinuousBatcher", "Request", "SlotScheduler",
+           "AsyncEngine", "Engine", "EngineMetrics", "EngineRequest",
+           "ProgramStepper", "UnbatchedReference", "build_lm_serving",
+           "make_decode_step", "make_prefill_step", "serve_shardings",
+           "make_train_step", "train_state_shardings"]

@@ -7,19 +7,25 @@ queue via a single-sequence prefill whose cache is spliced into the slot.
 Throughput = busy-slot fraction x decode rate, so the scheduler's job is
 keeping slots busy — the test asserts slot reuse and per-request output
 correctness against a no-batching reference.
+
+The queue/slot bookkeeping lives in :class:`SlotScheduler`, shared with
+the Program-backed serving engine (:mod:`repro.runtime.engine`): priority
+FIFO admission, bounded-queue admission control, and conservation
+accounting (every submitted request reaches exactly one terminal state —
+finished, rejected, or dropped — and is handed out exactly once).
 """
 
 from __future__ import annotations
 
-from collections import deque
+import heapq
 from dataclasses import dataclass, field
-from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "ContinuousBatcher"]
+__all__ = ["Request", "ContinuousBatcher", "SlotScheduler"]
 
 
 @dataclass
@@ -29,6 +35,118 @@ class Request:
     max_new_tokens: int
     out_tokens: List[int] = field(default_factory=list)
     done: bool = False
+
+
+class SlotScheduler:
+    """Queue + slot bookkeeping for fixed-batch serving.
+
+    Requests are admitted to free slots in (priority desc, submit order)
+    — FIFO among equal priorities (``priority`` is read via ``getattr``,
+    default 0, so plain :class:`Request` objects work unchanged).  With
+    ``max_queue`` set, :meth:`submit` applies admission control: a full
+    queue rejects instead of growing without bound.
+
+    Invariants (property-tested in ``tests/test_serving_engine.py``):
+
+    * conservation — ``n_submitted == n_rejected + n_finished + n_dropped
+      + len(queue) + busy_slots`` at every step;
+    * each request is admitted at most once and finalised at most once;
+    * ``len(active slots) <= n_slots`` always.
+    """
+
+    def __init__(self, n_slots: int, max_queue: Optional[int] = None):
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.n_slots = n_slots
+        self.max_queue = max_queue
+        self.active: List[Optional[Any]] = [None] * n_slots
+        self._heap: List[Tuple[int, int, Any]] = []   # (-priority, seq, req)
+        self._seq = 0
+        self.n_submitted = 0
+        self.n_rejected = 0
+        self.n_finished = 0
+        self.n_dropped = 0
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Any) -> bool:
+        """Queue ``req``; False when admission control rejects it."""
+        self.n_submitted += 1
+        if self.max_queue is not None and len(self._heap) >= self.max_queue:
+            self.n_rejected += 1
+            return False
+        heapq.heappush(self._heap, (-getattr(req, "priority", 0), self._seq, req))
+        self._seq += 1
+        return True
+
+    def reject(self, req: Any) -> None:
+        """Count a request the caller refused before queueing (invalid
+        prompt, cannot fit the cache, ...) so conservation still holds —
+        the accounting stays in one place instead of callers poking
+        counters."""
+        self.n_submitted += 1
+        self.n_rejected += 1
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._heap)
+
+    @property
+    def busy_slots(self) -> int:
+        return sum(1 for s in self.active if s is not None)
+
+    def has_work(self) -> bool:
+        return bool(self._heap) or any(s is not None for s in self.active)
+
+    def admit(self) -> List[Tuple[int, Any]]:
+        """Fill free slots from the queue; returns newly (slot, request)
+        pairs in admission order."""
+        out: List[Tuple[int, Any]] = []
+        for slot in range(self.n_slots):
+            if self.active[slot] is None and self._heap:
+                _, _, req = heapq.heappop(self._heap)
+                self.active[slot] = req
+                out.append((slot, req))
+        return out
+
+    def finish(self, slot: int) -> Any:
+        """Release ``slot``, counting its request as finished."""
+        req = self._release(slot)
+        self.n_finished += 1
+        return req
+
+    def drop(self, slot: int) -> Any:
+        """Release ``slot``, counting its request as dropped (deadline,
+        cancellation, ...)."""
+        req = self._release(slot)
+        self.n_dropped += 1
+        return req
+
+    def _release(self, slot: int) -> Any:
+        req = self.active[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is not active")
+        self.active[slot] = None
+        return req
+
+    def drop_queued(self, pred: Callable[[Any], bool]) -> List[Any]:
+        """Remove queued requests matching ``pred`` (e.g. expired
+        deadlines) before they reach a slot."""
+        keep, dropped = [], []
+        for entry in self._heap:
+            (dropped if pred(entry[2]) else keep).append(entry)
+        if dropped:
+            self._heap = keep
+            heapq.heapify(self._heap)
+            self.n_dropped += len(dropped)
+        return [e[2] for e in dropped]
+
+    def check_conservation(self) -> None:
+        """Raise AssertionError if any request was lost or duplicated."""
+        accounted = (self.n_rejected + self.n_finished + self.n_dropped
+                     + len(self._heap) + self.busy_slots)
+        assert accounted == self.n_submitted, (
+            f"conservation violated: submitted={self.n_submitted} "
+            f"accounted={accounted}")
 
 
 class ContinuousBatcher:
@@ -45,9 +163,8 @@ class ContinuousBatcher:
         self.n_slots = n_slots
         self.cache_cap = cache_cap
         self.eos_id = eos_id
-        self.queue: Deque[Request] = deque()
+        self.sched = SlotScheduler(n_slots)
         self.submitted: List[Request] = []
-        self.active: List[Optional[Request]] = [None] * n_slots
         self.caches = model.init_caches(n_slots, cache_cap)
         self.lengths = jnp.zeros((n_slots,), jnp.int32)
         self.next_token = jnp.zeros((n_slots,), jnp.int32)
@@ -58,9 +175,13 @@ class ContinuousBatcher:
         self.steps = 0
         self.busy_slot_steps = 0
 
+    @property
+    def active(self) -> List[Optional[Request]]:
+        return self.sched.active
+
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self.sched.submit(req)
         self.submitted.append(req)
 
     def _splice_cache(self, slot: int, cache1: Any) -> None:
@@ -70,17 +191,14 @@ class ContinuousBatcher:
             self.caches, cache1)
 
     def _admit(self) -> None:
-        for slot in range(self.n_slots):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.popleft()
-                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, cache1, lengths1 = self._prefill(self.params, toks)
-                self._splice_cache(slot, cache1)
-                self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
-                first = int(jnp.argmax(logits[0]))
-                req.out_tokens.append(first)
-                self.next_token = self.next_token.at[slot].set(first)
-                self.active[slot] = req
+        for slot, req in self.sched.admit():
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            logits, cache1, lengths1 = self._prefill(self.params, toks)
+            self._splice_cache(slot, cache1)
+            self.lengths = self.lengths.at[slot].set(int(lengths1[0]))
+            first = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(first)
+            self.next_token = self.next_token.at[slot].set(first)
 
     # ------------------------------------------------------------------ #
     def step(self) -> None:
@@ -102,7 +220,7 @@ class ContinuousBatcher:
             req.out_tokens.append(tok)
             if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens:
                 req.done = True
-                self.active[slot] = None
+                self.sched.finish(slot)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Drive until queue and slots drain (or ``max_steps``); returns
@@ -111,8 +229,7 @@ class ContinuousBatcher:
         would drop those).  Finished requests are handed out exactly once:
         they leave ``submitted``, so a long-lived server neither re-delivers
         nor accumulates them."""
-        while (self.queue or any(r is not None for r in self.active)) \
-                and self.steps < max_steps:
+        while self.sched.has_work() and self.steps < max_steps:
             self.step()
         finished = [r for r in self.submitted if r.done]
         self.submitted = [r for r in self.submitted if not r.done]

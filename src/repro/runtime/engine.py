@@ -1,0 +1,658 @@
+"""Program-backed serving engine: async request scheduling, chunked
+prefill, per-token streaming.
+
+This is where the repo's two halves meet: the staged compilation pipeline
+(``compile()`` → :class:`~repro.core.program.Program`) becomes the serving
+hot path.  Both engine steps are compiled Programs over the GraphIR LM
+(:mod:`repro.models.graph_lm`) — so backend selection policies, int8
+quantization and the persistent autotune cache all apply to sustained
+traffic, not just offline evaluation:
+
+* decode Program — tokens (B, 1) + caches → next-token logits, one call
+  per engine decode tick over the whole fixed slot batch;
+* prefill Program — tokens (B, chunk) + caches → per-position logits; long
+  prompts are split into fixed-size chunks *interleaved with decode ticks*
+  so a newly admitted long prompt never stalls in-flight decodes for more
+  than ~one chunk (the bounded inter-token gap serve_bench measures).
+
+Scheduling is deterministic and tick-based (wall-clock only feeds
+metrics): :class:`~repro.runtime.batching.SlotScheduler` supplies priority
+FIFO admission with bounded-queue admission control; per-request deadlines
+(in ticks) drop expired work from the queue and from slots.  Tokens stream
+to the caller via ``on_token`` callbacks the moment they are decoded;
+:class:`AsyncEngine` wraps that into ``async for`` iteration.
+
+Exactness contract: under greedy decoding the engine's outputs are
+token-exact against :class:`UnbatchedReference` — a no-batching loop over
+B=1 Programs compiled from the same graphs — for both fp32 and int8
+Programs.  For int8 this requires every Program variant to share one set
+of calibrated activation scales (see :func:`build_lm_serving`), because
+dynamic per-batch scales would make a request's tokens depend on its
+batch neighbours.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.program import compile
+from repro.core.selector import BackendPolicy
+from repro.models.graph_lm import (GraphLMConfig, build_decode_graph,
+                                   build_prefill_graph, init_cache_inputs,
+                                   init_lm_params)
+from repro.runtime.batching import SlotScheduler
+
+__all__ = [
+    "EngineRequest", "EngineMetrics", "Engine", "AsyncEngine",
+    "ProgramStepper", "UnbatchedReference", "build_lm_serving",
+    "padded_len",
+]
+
+
+def padded_len(n: int, chunk: int) -> int:
+    """Prompt length rounded up to a whole number of prefill chunks."""
+    return -(-max(n, 1) // chunk) * chunk
+
+
+# --------------------------------------------------------------------------- #
+# Requests and metrics
+# --------------------------------------------------------------------------- #
+
+@dataclass
+class EngineRequest:
+    """One generation request.  Terminal states are mutually exclusive:
+    ``done`` (finished normally) or ``dropped`` (reason string — admission
+    rejection or deadline expiry); partial output survives a drop."""
+
+    uid: int
+    prompt: np.ndarray                      # (prompt_len,) int32
+    max_new_tokens: int
+    priority: int = 0
+    deadline_tick: Optional[int] = None     # absolute engine tick to finish by
+    on_token: Optional[Callable[["EngineRequest", int], None]] = None
+    on_finish: Optional[Callable[["EngineRequest"], None]] = None
+
+    out_tokens: List[int] = field(default_factory=list)
+    done: bool = False
+    dropped: Optional[str] = None
+    submit_tick: int = -1
+    first_token_tick: Optional[int] = None
+    finish_tick: Optional[int] = None
+    t_submit: float = 0.0
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+    max_gap_s: float = 0.0                  # max wall gap between our tokens
+    _t_last_token: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.t_done is None else self.t_done - self.t_submit
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        return None if self.t_first is None else self.t_first - self.t_submit
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+@dataclass
+class EngineMetrics:
+    """Aggregated serving metrics — the record ``serve_bench`` emits as
+    JSON and ``repro.tools.report.serving_table`` renders."""
+
+    n_finished: int = 0
+    n_dropped: int = 0
+    n_rejected: int = 0
+    ticks: int = 0
+    decode_ticks: int = 0
+    prefill_ticks: int = 0
+    busy_slot_ticks: int = 0    # slots doing real work, summed over ticks
+    n_slots: int = 0
+    tokens_out: int = 0
+    wall_s: float = 0.0
+    latencies_s: List[float] = field(default_factory=list)
+    ttfts_s: List[float] = field(default_factory=list)
+    max_intertoken_gap_s: float = 0.0
+
+    @property
+    def busy_slot_fraction(self) -> float:
+        return self.busy_slot_ticks / max(self.ticks * self.n_slots, 1)
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "n_finished": self.n_finished,
+            "n_dropped": self.n_dropped,
+            "n_rejected": self.n_rejected,
+            "ticks": self.ticks,
+            "decode_ticks": self.decode_ticks,
+            "prefill_ticks": self.prefill_ticks,
+            "tokens_out": self.tokens_out,
+            "wall_s": self.wall_s,
+            "tokens_per_s": self.tokens_per_s,
+            "busy_slot_fraction": self.busy_slot_fraction,
+            "latency_s": {"p50": _pct(self.latencies_s, 50),
+                          "p95": _pct(self.latencies_s, 95)},
+            "ttft_s": {"p50": _pct(self.ttfts_s, 50),
+                       "p95": _pct(self.ttfts_s, 95)},
+            "max_intertoken_gap_s": self.max_intertoken_gap_s,
+        }
+
+
+# --------------------------------------------------------------------------- #
+# Program-backed step functions
+# --------------------------------------------------------------------------- #
+
+class ProgramStepper:
+    """Owns the two compiled Programs plus the cache arrays they thread.
+
+    Step dispatch goes through :meth:`Program.bind` — the positional
+    fast-call path — because at serving batch sizes the per-call Python
+    overhead of the kwargs path is a measurable fraction of a decode tick
+    (``serve_bench`` reports both).
+    """
+
+    def __init__(self, cfg: GraphLMConfig, params: Mapping[str, Any], *,
+                 n_slots: int, chunk: int, cache_cap: int,
+                 policy: Optional[BackendPolicy] = None,
+                 quantize: Optional[str] = None,
+                 calib_ranges: Optional[Mapping[str, Any]] = None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.cache_cap = cache_cap
+        dec_g = build_decode_graph(cfg, params, batch=n_slots,
+                                   cache_cap=cache_cap)
+        pre_g = build_prefill_graph(cfg, params, batch=n_slots, chunk=chunk,
+                                    cache_cap=cache_cap)
+        self.decode_program = compile(dec_g, policy=policy, quantize=quantize,
+                                      calib_ranges=calib_ranges)
+        self.prefill_program = compile(pre_g, policy=policy, quantize=quantize,
+                                       calib_ranges=calib_ranges)
+        self.cache_names = [v for v in dec_g.outputs[1:]]   # new_cache_*
+        cache_inputs = sorted(init_cache_inputs(cfg, 1, 1))
+        self._input_names = ("tokens", "start", "n_new", *cache_inputs)
+        # caches are threaded call-to-call and never reused -> donate them
+        # (aliased in place on backends that support it)
+        self._dec = self.decode_program.bind(*self._input_names,
+                                             donate=cache_inputs)
+        self._pre = self.prefill_program.bind(*self._input_names,
+                                              donate=cache_inputs)
+        self.caches: Dict[str, Any] = {
+            k: jnp.asarray(v)
+            for k, v in init_cache_inputs(cfg, n_slots, cache_cap).items()}
+
+    def _call(self, fn, tokens, start, n_new):
+        cache_args = [self.caches[n] for n in sorted(self.caches)]
+        outs = fn(jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(n_new),
+                  *cache_args)
+        logits = np.asarray(outs[0])
+        for name, arr in zip(self.cache_names, outs[1:]):
+            self.caches[name.replace("new_", "")] = arr
+        return logits
+
+    def prefill(self, tokens: np.ndarray, start: np.ndarray,
+                n_new: np.ndarray) -> np.ndarray:
+        """tokens (B, chunk) → logits (B, chunk, V); caches advance."""
+        return self._call(self._pre, tokens, start, n_new)
+
+    def decode(self, tokens: np.ndarray, start: np.ndarray,
+               n_new: np.ndarray) -> np.ndarray:
+        """tokens (B, 1) → logits (B, V); caches advance."""
+        return self._call(self._dec, tokens, start, n_new)
+
+
+# --------------------------------------------------------------------------- #
+# The engine
+# --------------------------------------------------------------------------- #
+
+@dataclass
+class _SlotState:
+    req: EngineRequest
+    pos: int = 0          # prompt tokens prefilled so far
+    length: int = 0       # valid cache entries
+    next_token: int = 0
+    decoding: bool = False
+
+
+class Engine:
+    """Deterministic tick-based serving loop over a :class:`ProgramStepper`.
+
+    Each :meth:`step` is one tick: expire deadlines, admit queued requests
+    to free slots, then run either one prefill-chunk Program call or one
+    decode Program call over the whole slot batch.  When both phases have
+    work the engine alternates, which bounds any request's inter-token gap
+    to roughly one chunk of someone else's prompt.
+    """
+
+    def __init__(self, stepper: ProgramStepper, *, eos_id: int = -1,
+                 max_queue: Optional[int] = None):
+        self.stepper = stepper
+        self.n_slots = stepper.n_slots
+        self.chunk = stepper.chunk
+        self.cache_cap = stepper.cache_cap
+        self.eos_id = eos_id
+        self.sched = SlotScheduler(self.n_slots, max_queue=max_queue)
+        self.slots: List[Optional[_SlotState]] = [None] * self.n_slots
+        self.tick = 0
+        self.finished: List[EngineRequest] = []
+        self.dropped: List[EngineRequest] = []
+        self.metrics = EngineMetrics(n_slots=self.n_slots)
+        self._last_was_prefill = False
+        self._t0: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: EngineRequest) -> bool:
+        """Admission control: False (with ``req.dropped`` set) when the
+        queue is full or the request cannot fit the cache."""
+        req.submit_tick = self.tick
+        req.t_submit = time.perf_counter()
+        if len(req.prompt) == 0 or req.max_new_tokens < 1:
+            return self._reject(req, "empty")
+        need = max(padded_len(len(req.prompt), self.chunk),
+                   len(req.prompt) + req.max_new_tokens)
+        if need > self.cache_cap:
+            return self._reject(req, "too_long")
+        if not self.sched.submit(req):
+            req.dropped = "queue_full"
+            self.metrics.n_rejected += 1
+            self._finalize(req)
+            return False
+        return True
+
+    def _reject(self, req: EngineRequest, reason: str) -> bool:
+        req.dropped = reason
+        self.sched.reject(req)
+        self.metrics.n_rejected += 1
+        self._finalize(req)
+        return False
+
+    def _finalize(self, req: EngineRequest) -> None:
+        req.finish_tick = self.tick
+        req.t_done = time.perf_counter()
+        if req.on_finish is not None:
+            req.on_finish(req)
+
+    # ------------------------------------------------------------------ #
+    def _emit(self, st: _SlotState, tok: int) -> None:
+        req = st.req
+        now = time.perf_counter()
+        req.out_tokens.append(tok)
+        self.metrics.tokens_out += 1
+        if req.t_first is None:
+            req.t_first = now
+            req.first_token_tick = self.tick
+            self.metrics.ttfts_s.append(req.ttft_s or 0.0)
+        if req._t_last_token is not None:
+            gap = now - req._t_last_token
+            req.max_gap_s = max(req.max_gap_s, gap)
+            self.metrics.max_intertoken_gap_s = max(
+                self.metrics.max_intertoken_gap_s, gap)
+        req._t_last_token = now
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
+    def _finish_slot(self, slot: int) -> None:
+        st = self.slots[slot]
+        req = self.sched.finish(slot)
+        assert req is st.req
+        req.done = True
+        self.slots[slot] = None
+        self.finished.append(req)
+        self.metrics.n_finished += 1
+        self._finalize(req)
+        self.metrics.latencies_s.append(req.latency_s or 0.0)
+
+    def _drop_slot(self, slot: int, reason: str) -> None:
+        st = self.slots[slot]
+        req = self.sched.drop(slot)
+        assert req is st.req
+        req.dropped = reason
+        self.slots[slot] = None
+        self.dropped.append(req)
+        self.metrics.n_dropped += 1
+        self._finalize(req)
+
+    def _expire(self) -> None:
+        expired = self.sched.drop_queued(
+            lambda r: r.deadline_tick is not None and self.tick >= r.deadline_tick)
+        for req in expired:
+            req.dropped = "deadline"
+            self.dropped.append(req)
+            self.metrics.n_dropped += 1
+            self._finalize(req)
+        for slot, st in enumerate(self.slots):
+            if st is not None and st.req.deadline_tick is not None \
+                    and self.tick >= st.req.deadline_tick:
+                self._drop_slot(slot, "deadline")
+
+    # ------------------------------------------------------------------ #
+    def step(self) -> None:
+        """One scheduling tick (see class docstring)."""
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        self.tick += 1
+        self.metrics.ticks += 1
+        self._expire()
+        for slot, req in self.sched.admit():
+            self.slots[slot] = _SlotState(req=req)
+        prefill = [i for i, st in enumerate(self.slots)
+                   if st is not None and not st.decoding]
+        decode = [i for i, st in enumerate(self.slots)
+                  if st is not None and st.decoding]
+        if prefill and (not decode or not self._last_was_prefill):
+            self._prefill_tick(prefill)
+            self._last_was_prefill = True
+        elif decode:
+            self._decode_tick(decode)
+            self._last_was_prefill = False
+        self.metrics.wall_s = time.perf_counter() - self._t0
+
+    def _prefill_tick(self, slots: List[int]) -> None:
+        b, c = self.n_slots, self.chunk
+        tokens = np.zeros((b, c), np.int32)
+        start = np.zeros((b,), np.int32)
+        n_new = np.zeros((b,), np.int32)
+        for s in slots:
+            st = self.slots[s]
+            n = min(c, len(st.req.prompt) - st.pos)
+            tokens[s, :n] = st.req.prompt[st.pos:st.pos + n]
+            start[s] = st.pos
+            n_new[s] = n
+        logits = self.stepper.prefill(tokens, start, n_new)
+        self.metrics.prefill_ticks += 1
+        self.metrics.busy_slot_ticks += len(slots)
+        for s in slots:
+            st = self.slots[s]
+            n = int(n_new[s])
+            st.pos += n
+            if st.pos >= len(st.req.prompt):
+                st.decoding = True
+                st.length = len(st.req.prompt)
+                first = int(np.argmax(logits[s, n - 1]))
+                st.next_token = first
+                self._emit(st, first)
+                self._maybe_finish(s, first)
+
+    def _decode_tick(self, slots: List[int]) -> None:
+        b = self.n_slots
+        tokens = np.zeros((b, 1), np.int32)
+        start = np.zeros((b,), np.int32)
+        n_new = np.zeros((b,), np.int32)
+        for s in slots:
+            st = self.slots[s]
+            tokens[s, 0] = st.next_token
+            start[s] = st.length
+            n_new[s] = 1
+        logits = self.stepper.decode(tokens, start, n_new)
+        self.metrics.decode_ticks += 1
+        self.metrics.busy_slot_ticks += len(slots)
+        for s in slots:
+            st = self.slots[s]
+            st.length += 1
+            tok = int(np.argmax(logits[s]))
+            st.next_token = tok
+            self._emit(st, tok)
+            self._maybe_finish(s, tok)
+
+    def _maybe_finish(self, slot: int, tok: int) -> None:
+        st = self.slots[slot]
+        if tok == self.eos_id or len(st.req.out_tokens) >= st.req.max_new_tokens:
+            self._finish_slot(slot)
+
+    # ------------------------------------------------------------------ #
+    def reset_metrics(self) -> None:
+        """Zero the metrics window (e.g. after warmup) without touching
+        scheduler state, slots or caches."""
+        self.metrics = EngineMetrics(n_slots=self.n_slots)
+        self._t0 = None
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    def run(self, max_ticks: int = 100_000) -> List[EngineRequest]:
+        """Drive until queue and slots drain; returns newly finished
+        requests (handed out exactly once)."""
+        while self.has_work() and self.tick < max_ticks:
+            self.step()
+        out, self.finished = self.finished, []
+        return out
+
+
+# --------------------------------------------------------------------------- #
+# Async front-end
+# --------------------------------------------------------------------------- #
+
+_DONE = object()
+
+
+class AsyncEngine:
+    """Cooperative asyncio facade: per-token streaming via ``async for``.
+
+    Single-threaded and deterministic — :meth:`run` interleaves engine
+    ticks with consumer wakeups on the current event loop; no background
+    threads.
+    """
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self._uid = 0
+
+    async def generate(self, prompt: np.ndarray, max_new_tokens: int, *,
+                       priority: int = 0, deadline_tick: Optional[int] = None):
+        """Async iterator of generated token ids for one request."""
+        q: asyncio.Queue = asyncio.Queue()
+        self._uid += 1
+        req = EngineRequest(
+            uid=self._uid, prompt=np.asarray(prompt, np.int32),
+            max_new_tokens=max_new_tokens, priority=priority,
+            deadline_tick=deadline_tick,
+            on_token=lambda r, t: q.put_nowait(t),
+            on_finish=lambda r: q.put_nowait(_DONE))
+        if not self.engine.submit(req):
+            raise RuntimeError(f"request rejected: {req.dropped}")
+        while True:
+            tok = await q.get()
+            if tok is _DONE:
+                break
+            yield tok
+        if req.dropped is not None:
+            # a mid-flight drop (deadline) must not look like completion —
+            # the consumer has only a truncated stream
+            raise RuntimeError(
+                f"request {req.uid} dropped after "
+                f"{len(req.out_tokens)} tokens: {req.dropped}")
+
+    async def run(self, max_ticks: int = 100_000) -> None:
+        """Drive the engine until drained, yielding to consumers between
+        ticks."""
+        while self.engine.has_work() and self.engine.tick < max_ticks:
+            self.engine.step()
+            await asyncio.sleep(0)
+
+
+# --------------------------------------------------------------------------- #
+# Unbatched reference + the serving factory
+# --------------------------------------------------------------------------- #
+
+class UnbatchedReference:
+    """No-batching greedy loop over B=1 Programs compiled from the same
+    graphs (and, for int8, the same calibration ranges) as the engine's —
+    the token-exactness oracle and serve_bench's baseline.
+
+    ``chunk=None`` prefills the whole prompt in one Program call
+    (one-shot); an integer chunk reproduces the engine's chunked prefill.
+    Programs are compiled lazily per distinct (chunk,) shape and cached.
+    """
+
+    def __init__(self, cfg: GraphLMConfig, params: Mapping[str, Any], *,
+                 cache_cap: int, policy: Optional[BackendPolicy] = None,
+                 quantize: Optional[str] = None,
+                 calib_ranges: Optional[Mapping[str, Any]] = None):
+        self.cfg = cfg
+        self.params = dict(params)
+        self.cache_cap = cache_cap
+        self._policy = policy
+        self._quantize = quantize
+        self._ranges = calib_ranges
+        self._decode: Optional[Tuple[Any, List[str]]] = None
+        self._prefills: Dict[int, Tuple[Any, List[str]]] = {}
+
+    def _compiled(self, graph) -> Tuple[Any, List[str]]:
+        prog = compile(graph, policy=self._policy, quantize=self._quantize,
+                       calib_ranges=self._ranges)
+        cache_inputs = sorted(init_cache_inputs(self.cfg, 1, 1))
+        names = ("tokens", "start", "n_new", *cache_inputs)
+        return (prog.bind(*names, donate=cache_inputs),
+                [v for v in graph.outputs[1:]])
+
+    def _prefill_for(self, chunk: int) -> Tuple[Any, List[str]]:
+        if chunk not in self._prefills:
+            g = build_prefill_graph(self.cfg, self.params, batch=1,
+                                    chunk=chunk, cache_cap=self.cache_cap)
+            self._prefills[chunk] = self._compiled(g)
+        return self._prefills[chunk]
+
+    def _decode_fn(self) -> Tuple[Any, List[str]]:
+        if self._decode is None:
+            g = build_decode_graph(self.cfg, self.params, batch=1,
+                                   cache_cap=self.cache_cap)
+            self._decode = self._compiled(g)
+        return self._decode
+
+    def generate(self, prompt: np.ndarray, max_new_tokens: int, *,
+                 chunk: Optional[int] = None, eos_id: int = -1,
+                 record: Optional[List] = None) -> List[int]:
+        prompt = np.asarray(prompt, np.int32)
+        if len(prompt) == 0 or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
+        c = len(prompt) if chunk is None else chunk
+        if padded_len(len(prompt), c) > self.cache_cap \
+                or len(prompt) + max_new_tokens > self.cache_cap:
+            raise ValueError(f"prompt {len(prompt)} + {max_new_tokens} new "
+                             f"tokens exceeds cache cap {self.cache_cap}")
+        pre, cache_outs = self._prefill_for(c)
+        caches = {k: jnp.asarray(v) for k, v in
+                  init_cache_inputs(self.cfg, 1, self.cache_cap).items()}
+
+        def call(fn, outs, tokens, start, n_new, kind):
+            inputs = {"tokens": tokens, "start": start, "n_new": n_new,
+                      **{k: np.asarray(v) for k, v in caches.items()}}
+            if record is not None:
+                record.append((kind, inputs))
+            res = fn(jnp.asarray(tokens), jnp.asarray(start),
+                     jnp.asarray(n_new), *[caches[k] for k in sorted(caches)])
+            for name, arr in zip(outs, res[1:]):
+                caches[name.replace("new_", "")] = arr
+            return np.asarray(res[0])
+
+        pos = 0
+        logits = None
+        while pos < len(prompt):
+            n = min(c, len(prompt) - pos)
+            toks = np.zeros((1, c), np.int32)
+            toks[0, :n] = prompt[pos:pos + n]
+            logits = call(pre, cache_outs,
+                          toks, np.asarray([pos], np.int32),
+                          np.asarray([n], np.int32), "prefill")
+            pos += n
+        out = [int(np.argmax(logits[0, n - 1]))]
+        dec, dec_outs = self._decode_fn()
+        length = len(prompt)
+        while out[-1] != eos_id and len(out) < max_new_tokens:
+            logits = call(dec, dec_outs,
+                          np.asarray([[out[-1]]], np.int32),
+                          np.asarray([length], np.int32),
+                          np.asarray([1], np.int32), "decode")
+            length += 1
+            out.append(int(np.argmax(logits[0])))
+        return out
+
+
+def _merge_ranges(*range_dicts: Mapping[str, Any]) -> Dict[str, Any]:
+    """Union of calibration ranges over value names: min lo, max hi.
+
+    ``channel_mean`` is taken from the first dict that has the value —
+    exact averaging would need per-batch counts.  It only feeds
+    quantize-time bias correction, which never fires for the bias-free
+    graph-LM dense nodes; revisit if the builder grows fused biases."""
+    from repro.core.quant import ValueRange
+    out: Dict[str, Any] = {}
+    for d in range_dicts:
+        for name, vr in d.items():
+            if name in out:
+                prev = out[name]
+                out[name] = ValueRange(min(prev[0], vr[0]), max(prev[1], vr[1]),
+                                       getattr(prev, "channel_mean", None))
+            else:
+                out[name] = vr
+    return out
+
+
+def shared_calibration(cfg: GraphLMConfig, params: Mapping[str, Any], *,
+                       chunk: int, cache_cap: int, seed: int = 0,
+                       n_prompts: int = 3,
+                       max_new_tokens: int = 4) -> Dict[str, Any]:
+    """One calibration for every Program variant of this model.
+
+    Records real serving traffic (a few fp32 reference generations) as
+    input batches for the B=1 prefill and decode graphs, calibrates each,
+    and merges the ranges by value name.  Because the graph builders use
+    identical value names across batch/chunk variants, the result drives
+    ``compile(..., quantize="int8", calib_ranges=...)`` for the engine's
+    batched Programs and the unbatched reference alike — giving every
+    variant the same static activation scales (the precondition for
+    batched-vs-unbatched token-exactness under int8)."""
+    from repro.core.quant import calibrate
+    ref = UnbatchedReference(cfg, params, cache_cap=cache_cap)
+    rng = np.random.default_rng(seed)
+    record: List[Tuple[str, Dict[str, Any]]] = []
+    for _ in range(n_prompts):
+        plen = int(rng.integers(1, max(2, 2 * chunk)))
+        prompt = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        ref.generate(prompt, max_new_tokens, chunk=chunk, record=record)
+    pre_batches = [inputs for kind, inputs in record if kind == "prefill"]
+    dec_batches = [inputs for kind, inputs in record if kind == "decode"]
+    g_pre = build_prefill_graph(cfg, params, batch=1, chunk=chunk,
+                                cache_cap=cache_cap)
+    g_dec = build_decode_graph(cfg, params, batch=1, cache_cap=cache_cap)
+    return _merge_ranges(calibrate(g_pre, pre_batches),
+                         calibrate(g_dec, dec_batches))
+
+
+def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
+                     n_slots: int = 4, chunk: int = 8, cache_cap: int = 64,
+                     quantize: Optional[str] = None,
+                     policy: Optional[BackendPolicy] = None,
+                     seed: int = 0, eos_id: int = -1,
+                     max_queue: Optional[int] = None,
+                     params: Optional[Mapping[str, Any]] = None,
+                     ) -> Tuple[Engine, UnbatchedReference]:
+    """Compile the serving Programs for a graph LM and return the engine
+    plus its unbatched reference (sharing weights and, under int8, the
+    calibrated activation scales)."""
+    cfg = cfg or GraphLMConfig()
+    params = dict(params) if params is not None else init_lm_params(cfg, seed)
+    ranges = None
+    if quantize is not None:
+        ranges = shared_calibration(cfg, params, chunk=chunk,
+                                    cache_cap=cache_cap, seed=seed)
+    stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
+                             cache_cap=cache_cap, policy=policy,
+                             quantize=quantize, calib_ranges=ranges)
+    engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue)
+    reference = UnbatchedReference(cfg, params, cache_cap=cache_cap,
+                                   policy=policy, quantize=quantize,
+                                   calib_ranges=ranges)
+    return engine, reference

@@ -23,7 +23,8 @@ from typing import Dict, List, Sequence, Tuple
 import numpy as np
 
 __all__ = ["load_records", "roofline_table", "dryrun_table",
-           "weight_bytes", "activation_bytes", "footprint_table"]
+           "weight_bytes", "activation_bytes", "footprint_table",
+           "serving_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -90,6 +91,34 @@ def footprint_table(entries: Sequence[Tuple[str, object]]) -> str:
     return "\n".join(out)
 
 
+# --------------------------------------------------------------------------- #
+# Serving metrics — benchmarks/serve_bench.py JSON records
+# --------------------------------------------------------------------------- #
+
+def serving_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown serving-metrics table from ``(label, record)`` pairs, where
+    each record is one ``benchmarks/serve_bench.py`` JSON output: engine
+    tokens/s vs the unbatched loop, p50/p95 latency, time-to-first-token,
+    busy-slot fraction, and the chunked-prefill inter-token gap against
+    one full-prompt prefill."""
+    out = ["| config | tok/s | vs unbatched | p50 | p95 | ttft p50 | "
+           "busy | max gap (chunked) | full prefill |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for label, rec in records:
+        eng = rec["engine"]
+        gap = rec.get("prefill_gap", {})
+        out.append(
+            f"| {label} | {eng['tokens_per_s']:,.0f} | "
+            f"{rec.get('speedup', 0):.2f}x | "
+            f"{_fmt_s(eng['latency_s']['p50'])} | "
+            f"{_fmt_s(eng['latency_s']['p95'])} | "
+            f"{_fmt_s(eng['ttft_s']['p50'])} | "
+            f"{eng['busy_slot_fraction']:.0%} | "
+            f"{_fmt_s(gap.get('max_gap_chunked_s', 0))} | "
+            f"{_fmt_s(gap.get('full_prefill_s', 0))} |")
+    return "\n".join(out)
+
+
 def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
     rows = [r for r in recs if r["mesh"] == mesh]
     out = ["| arch | shape | compute | memory | collective | bottleneck | "
@@ -151,7 +180,15 @@ def summary_stats(recs: List[Dict]) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--serve-dir", default="experiments/serve",
+                    help="directory of serve_bench JSON records")
     args = ap.parse_args()
+    serve = [(os.path.splitext(os.path.basename(f))[0], json.load(open(f)))
+             for f in sorted(glob.glob(os.path.join(args.serve_dir, "*.json")))]
+    if serve:
+        print("## Serving (benchmarks/serve_bench.py)\n")
+        print(serving_table(serve))
+        print()
     recs = load_records(args.dir)
     print("## Summary\n")
     print(summary_stats(recs))

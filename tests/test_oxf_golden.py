@@ -1,0 +1,71 @@
+"""Golden-file regression test for the OXF bundle format.
+
+``tests/golden/tiny_int8`` is a checked-in int8-quantized Program bundle
+(dense+bias+relu fused then quantized: ``dense_fused_q`` with w_scale /
+x_scale / zero_point attrs, an int8 weight twin, a bias-corrected qbias —
+the whole PR-2 surface).  The bundle must load and, on re-save, reproduce
+``program.json`` and ``model.json`` byte-for-byte: any silent change to
+attr serialization, assignment pinning, cost-table emission or key
+ordering fails here before it corrupts deployed artifacts.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Program, load_graph
+from repro.core.quant import is_quantized
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "tiny_int8")
+
+
+def test_golden_bundle_loads_quantized():
+    prog = Program.load(GOLDEN)
+    assert is_quantized(prog.graph)
+    ops = {n.op for n in prog.graph.nodes}
+    assert ops == {"dense_fused_q", "dense_q"}
+    # pinned assignment reproduced without re-tuning
+    assert set(prog.assignment.values()) == {"xla"}
+    # int8 weight twins + self-describing quant attrs survived the trip
+    assert prog.graph.params["w1.q8"].dtype == np.int8
+    node = next(n for n in prog.graph.nodes if n.op == "dense_fused_q")
+    for key in ("w_scale", "x_scale", "zero_point"):
+        assert key in node.attrs, key
+
+
+def test_golden_bundle_resave_byte_identical(tmp_path):
+    prog = Program.load(GOLDEN)
+    out = tmp_path / "resaved"
+    prog.save(str(out))
+    for fname in ("program.json", "model.json"):
+        golden = open(os.path.join(GOLDEN, fname), "rb").read()
+        resaved = open(out / fname, "rb").read()
+        assert resaved == golden, f"{fname} drifted from the golden bundle"
+    # weights round-trip exactly (array-compare; npz container bytes may
+    # legitimately differ)
+    g0, g1 = load_graph(GOLDEN), load_graph(str(out))
+    assert set(g0.params) == set(g1.params)
+    for k in g0.params:
+        np.testing.assert_array_equal(np.asarray(g0.params[k]),
+                                      np.asarray(g1.params[k]), err_msg=k)
+
+
+def test_golden_bundle_executes_to_expected_output():
+    prog = Program.load(GOLDEN)
+    x = np.load(os.path.join(GOLDEN, "input_x.npy"))
+    want = np.load(os.path.join(GOLDEN, "expected_y.npy"))
+    (y,) = prog(x=x)
+    np.testing.assert_allclose(np.asarray(y), want, rtol=1e-5, atol=1e-6)
+
+
+def test_golden_double_roundtrip_stable(tmp_path):
+    """save(load(save(load(x)))) is a fixpoint, not just one lucky hop."""
+    prog = Program.load(GOLDEN)
+    a = tmp_path / "a"
+    prog.save(str(a))
+    b = tmp_path / "b"
+    Program.load(str(a)).save(str(b))
+    for fname in ("program.json", "model.json"):
+        assert open(a / fname, "rb").read() == open(b / fname, "rb").read()

@@ -1,0 +1,93 @@
+"""Backend-selector fallback tests.
+
+The policies must degrade cleanly when a fancy backend's ``supports()``
+predicate rejects the node's shapes (e.g. pallas block-divisibility), and
+must not crash on ops that only have a single registered backend (e.g.
+the serving ops ``cache_update`` / ``chunk_attention``): the chosen
+backend is always one of the registered-and-supported set.
+"""
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (registers every op/backend)
+from repro.core import (AutotunePolicy, CostModelPolicy, FixedPolicy,
+                        Node, TensorSpec, backends_for)
+
+
+def _attn_node_and_specs():
+    # seq 7 with an explicit block_q=4 -> 7 % 4 != 0 -> pallas unsupported
+    node = Node("attn", "attention", ["q", "k", "v"], ["o"],
+                attrs={"block_q": 4, "block_kv": 4, "causal": True})
+    q = TensorSpec((1, 7, 2, 8), "float32")
+    kv = TensorSpec((1, 7, 1, 8), "float32")
+    return node, [q, kv, kv]
+
+
+def _grouped_conv_node_and_specs():
+    # groups=2 -> the pallas GEMM conv rejects; ref/xla remain
+    node = Node("c", "conv2d", ["x", "w"], ["y"], attrs={"groups": 2})
+    return node, [TensorSpec((1, 4, 4, 4), "float32"),
+                  TensorSpec((3, 3, 2, 4), "float32")]
+
+
+def _single_backend_node_and_specs():
+    # cache_update has exactly one backend (ref)
+    node = Node("u", "cache_update", ["c", "n", "s", "k"], ["o"])
+    return node, [TensorSpec((2, 8, 1, 4), "float32"),
+                  TensorSpec((2, 2, 1, 4), "float32"),
+                  TensorSpec((2,), "int32"), TensorSpec((2,), "int32")]
+
+
+@pytest.mark.parametrize("make", [_attn_node_and_specs,
+                                  _grouped_conv_node_and_specs,
+                                  _single_backend_node_and_specs])
+def test_costmodel_policy_chooses_supported(make):
+    node, specs = make()
+    avail = backends_for(node.op, specs, node.attrs)
+    assert avail, "test premise: at least one supported backend"
+    choice = CostModelPolicy().resolve(node, specs)
+    assert choice in avail
+
+
+def test_pallas_actually_rejected_by_supports():
+    node, specs = _attn_node_and_specs()
+    all_backends = backends_for(node.op)
+    supported = backends_for(node.op, specs, node.attrs)
+    assert "pallas" in all_backends
+    assert "pallas" not in supported      # the shape filter really fired
+    node2, specs2 = _grouped_conv_node_and_specs()
+    assert "pallas" not in backends_for(node2.op, specs2, node2.attrs)
+
+
+def test_single_backend_op_resolves_to_ref():
+    node, specs = _single_backend_node_and_specs()
+    assert backends_for(node.op, specs, node.attrs) == ["ref"]
+    assert CostModelPolicy().resolve(node, specs) == "ref"
+    assert FixedPolicy(prefer=("pallas", "xla")).resolve(node, specs) == "ref"
+
+
+def test_autotune_policy_degrades_cleanly():
+    pol = AutotunePolicy(reps=1)
+    for make in (_grouped_conv_node_and_specs, _single_backend_node_and_specs):
+        node, specs = make()
+        avail = backends_for(node.op, specs, node.attrs)
+        choice = pol.resolve(node, specs)
+        assert choice in avail
+    assert pol.n_measured >= 2
+
+
+def test_autotune_single_backend_chunk_attention():
+    node = Node("a", "chunk_attention", ["q", "k", "v", "s"], ["o"])
+    specs = [TensorSpec((1, 2, 2, 4), "float32"),
+             TensorSpec((1, 8, 1, 4), "float32"),
+             TensorSpec((1, 8, 1, 4), "float32"),
+             TensorSpec((1,), "int32")]
+    assert AutotunePolicy(reps=1).resolve(node, specs) == "ref"
+
+
+def test_pinned_unsupported_backend_raises():
+    node, specs = _attn_node_and_specs()
+    node.backend = "pallas"
+    with pytest.raises(ValueError, match="pinned backend"):
+        FixedPolicy().resolve(node, specs)

@@ -12,9 +12,21 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# The subprocess tests below force 8 virtual host devices via XLA_FLAGS,
+# so raw device count is not the limiting condition — the mesh code they
+# drive is: it uses the explicit-sharding API (jax.sharding.AxisType,
+# jax.make_mesh(axis_types=...)), which this host's jax may predate.
+# Encoding the real condition here keeps local `pytest -x -q` and CI in
+# agreement without a deselect list.
+multidev = pytest.mark.skipif(
+    not hasattr(jax.sharding, "AxisType"),
+    reason="needs jax.sharding.AxisType (explicit-sharding mesh API); "
+           "this jax predates it")
 
 
 def run_sub(code: str, n_dev: int = 8, timeout: int = 560) -> str:
@@ -38,6 +50,7 @@ mesh = jax.make_mesh((2, 4), ("data", "model"),
 """
 
 
+@multidev
 def test_sharded_train_step_matches_single_device():
     run_sub(PREAMBLE + """
 from repro.configs import get_reduced
@@ -76,6 +89,7 @@ print("OK train", err)
 """)
 
 
+@multidev
 def test_tree_decode_matches_dense():
     run_sub(PREAMBLE + """
 from repro.sharding.collectives import tree_decode_attention
@@ -95,6 +109,7 @@ print("OK tree-decode", err)
 """)
 
 
+@multidev
 def test_compressed_psum_and_ring_matmul():
     run_sub(PREAMBLE + """
 from repro.optim.compress import compressed_psum_mean
@@ -121,6 +136,7 @@ print("OK compress+ring", err)
 """)
 
 
+@multidev
 def test_dryrun_cell_machinery_small_mesh():
     """build_cell -> lower -> compile -> cost/memory/collective parse, on a
     (2,4) mesh with reduced configs — the dry-run pipeline end-to-end."""
@@ -149,6 +165,7 @@ for name in ["stablelm-12b", "qwen2-moe-a2.7b", "mamba2-370m"]:
 """)
 
 
+@multidev
 def test_elastic_reshard_across_meshes():
     """Save on a (2,4) mesh, restore onto (4,2) and (8,1) — values equal."""
     run_sub(PREAMBLE + """
