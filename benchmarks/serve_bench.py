@@ -10,7 +10,12 @@ Measures, on the example graph LM:
   one-shot prefill, against the wall time of one full-prompt prefill;
 * per-step dispatch overhead of ``Program.__call__`` (kwargs + validation)
   vs. the ``Program.bind`` fast path;
-* token-exactness of the engine against the unbatched reference.
+* token-exactness of the engine against the unbatched reference;
+* per-op backend assignments of the serving Programs, plus a backend
+  sweep: prefill/decode step throughput with the serving ops pinned to
+  each registered backend, normalised against ``ref``;
+* an autotune pass: the serving Programs compiled under ``AutotunePolicy``
+  with measurements persisted to the on-disk autotune cache.
 
 Emits a JSON record (p50/p95 latency, TTFT, busy-slot fraction, tokens/s,
 gaps, dispatch) to stdout or ``--json``; ``--smoke`` is the fast CI
@@ -28,8 +33,14 @@ from typing import Any, Dict, Optional
 
 import numpy as np
 
-from repro.models.graph_lm import GraphLMConfig
-from repro.runtime.engine import EngineRequest, build_lm_serving, padded_len
+from repro.core import AutotunePolicy, FixedPolicy, default_cache_path
+from repro.models.graph_lm import GraphLMConfig, init_lm_params
+from repro.runtime.engine import (EngineRequest, ProgramStepper,
+                                  build_lm_serving, padded_len)
+from repro.tools.report import _fmt_assignment
+
+SERVING_OPS = ("embedding", "cache_update", "chunk_attention",
+               "decode_attention")
 
 SMOKE_CFG = GraphLMConfig(vocab=61, d_model=32, n_layers=1, n_heads=4,
                           n_kv_heads=2, d_ff=64)
@@ -85,7 +96,8 @@ def _throughput(cfg, workload, *, n_slots, chunk, cache_cap, quantize,
     speedup = (eng_summary["tokens_per_s"] / unbatched["tokens_per_s"]
                if unbatched["tokens_per_s"] else 0.0)
     return {"engine": eng_summary, "unbatched": unbatched,
-            "speedup": speedup, "token_exact": bool(check_exact)}
+            "speedup": speedup, "token_exact": bool(check_exact),
+            "backends": _serving_assignment(engine.stepper)}
 
 
 def _gap_experiment(cfg, *, n_slots, chunk, cache_cap, long_prompt_len,
@@ -138,6 +150,88 @@ def _gap_experiment(cfg, *, n_slots, chunk, cache_cap, long_prompt_len,
             "gap_bounded": bool(gap_chunked < full_prefill_s)}
 
 
+def _serving_assignment(stepper: ProgramStepper) -> Dict[str, Any]:
+    """The serving-op slice of the stepper's backend summary."""
+    full = stepper.backend_summary()
+    return {phase: {op: counts for op, counts in per_op.items()
+                    if op in SERVING_OPS}
+            for phase, per_op in full.items()}
+
+
+def _step_rate(fn, tokens_per_call: int, reps: int) -> float:
+    """Steady-state tokens/s of one stepper step function."""
+    fn()                                   # warm (jit compile)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    dt = time.perf_counter() - t0
+    return tokens_per_call * reps / dt if dt > 0 else 0.0
+
+
+def _backend_sweep(cfg, *, n_slots, chunk, cache_cap, reps: int,
+                   params=None) -> Dict[str, Any]:
+    """Prefill/decode step throughput with the serving ops pinned per
+    backend, plus the resulting per-op assignments.  Non-serving ops keep
+    the default xla-then-ref preference in every row, so the delta between
+    rows is the serving ops' backends and nothing else."""
+    params = params if params is not None else init_lm_params(cfg, 0)
+    rows: Dict[str, Any] = {}
+    prefs = {
+        "ref": ("ref",),
+        "xla": ("xla", "ref"),
+        "pallas": ("pallas", "xla", "ref"),
+        # split-KV decode first, so the row actually exercises it (plain
+        # pallas would otherwise always win the preference order)
+        "pallas_split": ("pallas_split", "pallas", "xla", "ref"),
+    }
+    rng = np.random.default_rng(0)
+    tokens = rng.integers(0, cfg.vocab, size=(n_slots, chunk)).astype(np.int32)
+    dec_tokens = tokens[:, :1]
+    start = np.zeros((n_slots,), np.int32)
+    pre_n = np.full((n_slots,), chunk, np.int32)
+    dec_n = np.ones((n_slots,), np.int32)
+    for label, pref in prefs.items():
+        policy = FixedPolicy(per_op={op: pref for op in SERVING_OPS})
+        st = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
+                            cache_cap=cache_cap, policy=policy)
+        rows[label] = {
+            "assignment": _serving_assignment(st),
+            "prefill_tok_s": _step_rate(
+                lambda: st.prefill(tokens, start, pre_n),
+                n_slots * chunk, reps),
+            "decode_tok_s": _step_rate(
+                lambda: st.decode(dec_tokens, start, dec_n),
+                n_slots, reps),
+        }
+    ref = rows["ref"]
+    for row in rows.values():
+        row["prefill_vs_ref"] = (row["prefill_tok_s"] / ref["prefill_tok_s"]
+                                 if ref["prefill_tok_s"] else 0.0)
+        row["decode_vs_ref"] = (row["decode_tok_s"] / ref["decode_tok_s"]
+                                if ref["decode_tok_s"] else 0.0)
+    return rows
+
+
+def _autotune_report(cfg, *, n_slots, chunk, cache_cap, reps: int,
+                     cache_path: Optional[str] = None,
+                     params=None) -> Dict[str, Any]:
+    """Compile the serving Programs under ``AutotunePolicy`` with the
+    persistent on-disk cache, and report what it picked for the serving
+    ops.  A second run of this benchmark on the same machine performs zero
+    re-measurements (everything preloads from the cache)."""
+    params = params if params is not None else init_lm_params(cfg, 0)
+    path = cache_path or default_cache_path()
+    pol = AutotunePolicy(reps=reps, cache_path=path)
+    st = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
+                        cache_cap=cache_cap, policy=pol)
+    return {
+        "cache_path": path,
+        "n_measured": pol.n_measured,
+        "n_loaded": pol.n_loaded,
+        "assignment": _serving_assignment(st),
+    }
+
+
 def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
                        ) -> Dict[str, float]:
     """µs/call of the kwargs Program path vs the bind() fast path on the
@@ -170,7 +264,7 @@ def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
 
 def run(*, smoke: bool = False, quantize: Optional[str] = None,
         n_slots: Optional[int] = None, chunk: int = 8,
-        seed: int = 0) -> Dict[str, Any]:
+        seed: int = 0, autotune_cache: Optional[str] = None) -> Dict[str, Any]:
     cfg = SMOKE_CFG if smoke else FULL_CFG
     slots = n_slots or (2 if smoke else 4)
     cache_cap = 64 if smoke else 128
@@ -195,6 +289,13 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["dispatch"] = _dispatch_overhead(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         reps=50 if smoke else 200)
+    params = init_lm_params(cfg, 0)
+    result["backend_sweep"] = _backend_sweep(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        reps=5 if smoke else 20, params=params)
+    result["autotune"] = _autotune_report(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        reps=2 if smoke else 3, cache_path=autotune_cache, params=params)
     return result
 
 
@@ -206,12 +307,16 @@ def main(argv=None) -> int:
                     help="serve int8-quantized Programs")
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--autotune-cache", metavar="PATH", default=None,
+                    help="persistent autotune cache file (default: "
+                         "ORPHEUS_AUTOTUNE_CACHE or ~/.cache/orpheus)")
     ap.add_argument("--json", metavar="PATH",
                     help="write the JSON record here instead of stdout")
     args = ap.parse_args(argv)
 
     rec = run(smoke=args.smoke, quantize="int8" if args.int8 else None,
-              n_slots=args.slots, chunk=args.chunk)
+              n_slots=args.slots, chunk=args.chunk,
+              autotune_cache=args.autotune_cache)
     eng, unb = rec["engine"], rec["unbatched"]
     gap = rec["prefill_gap"]
     print(f"# engine  : {eng['tokens_per_s']:,.0f} tok/s "
@@ -227,6 +332,15 @@ def main(argv=None) -> int:
           f"bounded={gap['gap_bounded']})")
     print(f"# dispatch: call {rec['dispatch']['call_us']:.0f}us vs "
           f"bind {rec['dispatch']['bind_us']:.0f}us per step")
+    for label, row in rec["backend_sweep"].items():
+        print(f"# sweep[{label:>6}]: prefill {row['prefill_tok_s']:,.0f} tok/s "
+              f"({row['prefill_vs_ref']:.2f}x ref), "
+              f"decode {row['decode_tok_s']:,.0f} tok/s "
+              f"({row['decode_vs_ref']:.2f}x ref)")
+    at = rec["autotune"]
+    print(f"# autotune: measured {at['n_measured']} sigs "
+          f"(+{at['n_loaded']} from cache) -> "
+          f"{_fmt_assignment(at['assignment'])}")
     payload = json.dumps(rec, indent=1, sort_keys=True)
     if args.json:
         with open(args.json, "w") as f:

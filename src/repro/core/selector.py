@@ -56,7 +56,8 @@ class HardwareProfile:
     peak_flops: float            # FLOP/s
     hbm_bw: float                # B/s
     backend_efficiency: Tuple[Tuple[str, float], ...] = (
-        ("pallas", 0.8), ("xla", 0.65), ("winograd", 0.65), ("ref", 0.35),
+        ("pallas", 0.8), ("pallas_split", 0.75), ("xla", 0.65),
+        ("winograd", 0.65), ("ref", 0.35),
     )
 
     def efficiency(self, backend: str) -> float:
@@ -344,6 +345,18 @@ class AutotunePolicy(BackendPolicy):
         key = _sig_key(node.op, in_specs, node.attrs)
         if key in self._cache:
             return self._cache[key]
+        avail = backends_for(node.op, in_specs, node.attrs)
+        if self.candidates is not None:
+            avail = [b for b in avail if b in self.candidates]
+        if len(avail) == 1:
+            # Nothing to compare: measuring would burn warm-up + reps
+            # iterations to "choose" among one option.  This also skips the
+            # runnability probe a measurement used to provide — a sole
+            # candidate that cannot execute on this platform now fails at
+            # first Program call instead of at compile; with one candidate
+            # there is no alternative either way.
+            self._cache[key] = avail[0]
+            return avail[0]
         times = self.measure(node.op, in_specs, node.attrs)
         if not times:
             raise ValueError(f"no runnable backend for {node.op}")

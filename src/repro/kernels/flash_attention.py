@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["flash_attention"]
+__all__ = ["flash_attention", "flash_chunk_attention"]
 
 _NEG_INF = -1e30
 
@@ -146,3 +146,114 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         name="flash_attention",
     )(qr, kr, vr)
     return out.reshape(b, hq, sq, dv).transpose(0, 2, 1, 3)
+
+
+def _chunk_flash_kernel(start_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *,
+                        scale: float, bq: int, bkv: int, n_kv_blocks: int):
+    """Same online-softmax recurrence as :func:`_flash_kernel`, with the
+    query offset a per-sequence runtime value: query row t of the chunk
+    sits at absolute position ``start + t`` and attends cache columns
+    ``<= start + t`` (offset-causal).  ``start`` arrives via SMEM."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    start = start_ref[0]
+    row0 = start + qi * bq                      # abs position of block row 0
+    col0 = ki * bkv
+    # the block is live iff its max row position reaches its min column
+    live = (row0 + bq - 1) >= col0
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (bq,bkv)
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        s = jnp.where(cols <= rows, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[:, :1] = l_ref[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[:, :1] = m_new
+
+    @pl.when(ki == n_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                          start: jax.Array, *,
+                          scale: Optional[float] = None,
+                          block_q: int = 256, block_kv: int = 512,
+                          interpret: bool = False) -> jax.Array:
+    """Chunked-prefill flash attention against a KV cache.
+
+    q (B, T, Hq, D), k/v (B, S, Hk, D), start (B,) int32 -> (B, T, Hq, D).
+    Query row t of sequence b is at absolute position ``start[b] + t`` and
+    attends cache keys at positions ``<= start[b] + t`` — the contract of
+    the ``chunk_attention`` serving op.  Every query sees at least column
+    0 (start >= 0), so the softmax is never empty.
+    """
+    b, t, hq, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[3]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    bq = min(block_q, t)
+    bkv = min(block_kv, s)
+    assert t % bq == 0 and s % bkv == 0, (
+        f"chunk/cache lengths must divide block sizes: {t}%{bq}, {s}%{bkv}")
+    nq, nkv = t // bq, s // bkv
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, t, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, dv)
+    start_r = jnp.repeat(start.astype(jnp.int32), hq)        # (B*Hq,)
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return ((bh // hq) * hkv + (bh % hq) // group, ki, 0)
+
+    kernel = functools.partial(_chunk_flash_kernel, scale=scale,
+                               bq=bq, bkv=bkv, n_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, qi, ki: (bh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, bq, d), q_map),
+            pl.BlockSpec((1, bkv, d), kv_map),
+            pl.BlockSpec((1, bkv, dv), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, t, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),   # acc
+            pltpu.VMEM((bq, 128), jnp.float32),  # running max (col 0 used)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running sum-of-exp
+        ],
+        interpret=interpret,
+        name="flash_chunk_attention",
+    )(start_r, qr, kr, vr)
+    return out.reshape(b, hq, t, dv).transpose(0, 2, 1, 3)

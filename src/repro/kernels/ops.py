@@ -152,6 +152,53 @@ def _decode_pallas_impl(inputs, attrs):
                          interpret=attrs.get("interpret", pallas_interpret()))]
 
 
+def _dec_split_supports(specs, attrs):
+    k = specs[1]
+    n_splits = int(attrs.get("n_splits", 2))
+    skv = k.shape[1]
+    if n_splits < 2 or skv % n_splits or skv // n_splits < 8:
+        return False
+    part = skv // n_splits
+    return part % min(int(attrs.get("block_kv", 512)), part) == 0
+
+
+def _dec_split_cost(specs, attrs):
+    q = specs[0]
+    n_splits = int(attrs.get("n_splits", 2))
+    base = _dec_cost(specs, attrs)
+    # per-split (acc, m, l) partials written then re-read by the combiner
+    partials = n_splits * (q.nbytes + 8.0 * q.shape[0] * q.shape[1])
+    return Cost(flops=base.flops, bytes=base.bytes + 2.0 * partials)
+
+
+@impl("decode_attention", "pallas_split", supports=_dec_split_supports,
+      cost_fn=_dec_split_cost,
+      note="split-KV flash-decode for long caches: per-shard partials via "
+           "flash_decode_partial, combined exactly (ref.combine_partials_ref)")
+def _decode_split_impl(inputs, attrs):
+    q, k, v, lengths = inputs
+    n_splits = int(attrs.get("n_splits", 2))
+    skv = k.shape[1]
+    part = skv // n_splits
+    if lengths is None:
+        lengths = jnp.full((q.shape[0],), skv, jnp.int32)
+    outs, ms, ls = [], [], []
+    for i in range(n_splits):
+        ks = jax.lax.slice_in_dim(k, i * part, (i + 1) * part, axis=1)
+        vs = jax.lax.slice_in_dim(v, i * part, (i + 1) * part, axis=1)
+        len_i = jnp.clip(lengths - i * part, 0, part)
+        o, m, l = flash_decode_partial(
+            q, ks, vs, len_i, scale=attrs.get("scale"),
+            block_kv=int(attrs.get("block_kv", 512)),
+            interpret=attrs.get("interpret", pallas_interpret()))
+        outs.append(o)
+        ms.append(m)
+        ls.append(l)
+    combined = R.combine_partials_ref(
+        jnp.stack(outs).astype(jnp.float32), jnp.stack(ms), jnp.stack(ls))
+    return [combined.astype(q.dtype)]
+
+
 def decode_attention(q, k, v, lengths=None, *, scale=None, backend="ref", **kw):
     return get_impl("decode_attention", backend)(
         [q, k, v, lengths], {"scale": scale, **kw})[0]

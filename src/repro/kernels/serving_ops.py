@@ -19,6 +19,24 @@ graph inputs AND outputs, so a Program stays a pure function):
   ``decode_attention`` op so the flash-decode Pallas backend stays
   selectable on the hot path.
 
+Each op carries *multiple* backends — that is the point of running the
+serving hot path through the registry at all: the selector, the cost
+models and the autotuner finally have something to choose from under
+sustained traffic.
+
+* ``ref``    — jnp oracle (vmap'd masked gather/scatter, dense fp32
+  attention with the GQA heads materialised).
+* ``xla``    — fused lowerings: one-hot-matmul embedding (MXU instead of
+  gather), per-slot ``dynamic_update_slice`` cache writes, GQA attention
+  grouped in the einsum so the repeated K/V expansion is never
+  materialised.
+* ``pallas`` — flash-style ``chunk_attention`` reusing the online-softmax
+  machinery of :mod:`repro.kernels.flash_attention` with per-sequence
+  offset-causal masking (``supports()`` guards block divisibility).
+
+``decode_attention`` additionally gains a ``pallas_split`` split-KV
+backend (registered in :mod:`repro.kernels.ops`) for long caches.
+
 All shapes are static (fixed batch = engine slots, fixed chunk size,
 fixed cache capacity), so each serving step jits exactly once.
 """
@@ -34,6 +52,8 @@ import jax.numpy as jnp
 from repro.core.ir import TensorSpec
 from repro.core.registry import Cost, defop, get_impl, impl
 from repro.kernels import ref as R
+from repro.kernels.flash_attention import flash_chunk_attention
+from repro.kernels.ops import pallas_interpret
 
 __all__ = ["embedding", "cache_update", "chunk_attention"]
 
@@ -67,6 +87,28 @@ defop("embedding", _embedding_shape, _embedding_cost,
 def _embedding_ref(inputs, attrs):
     ids, table = inputs
     return [jnp.take(table, ids, axis=0)]
+
+
+def _embedding_xla_cost(specs, attrs):
+    ids, table = specs
+    v, d = table.shape
+    n = ids.nelems
+    out = _embedding_shape(specs, attrs)[0]
+    # one-hot matmul: 2*N*V*D flops and a materialised (N, V) one-hot
+    return Cost(flops=2.0 * n * v * d,
+                bytes=table.nbytes + out.nbytes + 4.0 * n * v)
+
+
+@impl("embedding", "xla", cost_fn=_embedding_xla_cost,
+      note="fused one-hot matmul: row select on the MXU instead of a gather "
+           "(exact — 0/1 weights select rows bit-for-bit)")
+def _embedding_xla(inputs, attrs):
+    ids, table = inputs
+    # clamp like jit-mode jnp.take does, so out-of-range ids pick the
+    # nearest valid row instead of one_hot's all-zero row
+    ids = jnp.clip(ids, 0, table.shape[0] - 1)
+    onehot = jax.nn.one_hot(ids, table.shape[0], dtype=table.dtype)
+    return [jnp.tensordot(onehot, table, axes=1)]
 
 
 def embedding(ids, table, *, backend: str = "ref", **kw):
@@ -114,6 +156,25 @@ def _cache_update_ref(inputs, attrs):
     return [jax.vmap(one)(cache, new, start, n_new)]
 
 
+@impl("cache_update", "xla",
+      note="per-slot lax.dynamic_update_slice of the mask-merged chunk; "
+           "matches ref exactly on the engine contract 0 <= start <= cap-T "
+           "(ref's per-row index clip only differs outside it)")
+def _cache_update_xla(inputs, attrs):
+    cache, new, start, n_new = inputs
+    t = new.shape[1]
+    cap = cache.shape[1]
+
+    def one(c, x, s, n):
+        s = jnp.clip(s, 0, cap - t)
+        cur = jax.lax.dynamic_slice_in_dim(c, s, t, axis=0)
+        mask = (jnp.arange(t) < n).reshape((t,) + (1,) * (x.ndim - 1))
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, jnp.where(mask, x, cur), s, axis=0)
+
+    return [jax.vmap(one)(cache, new, start, n_new)]
+
+
 def cache_update(cache, new, start, n_new, *, backend: str = "ref", **kw):
     return get_impl("cache_update", backend)([cache, new, start, n_new], kw)[0]
 
@@ -139,13 +200,31 @@ defop("chunk_attention", _chunk_attn_shape, _chunk_attn_cost,
           "inputs (q (B,T,Hq,D), k (B,S,Hk,D), v, start (B,)); attrs: scale")
 
 
-@impl("chunk_attention", "ref",
+def _chunk_attn_scale(attrs, d: int) -> float:
+    # NOT `attrs.get("scale") or default`: an explicit scale=0.0 is falsy
+    # but meaningful (uniform attention over the allowed positions)
+    scale = attrs.get("scale")
+    return (1.0 / math.sqrt(d)) if scale is None else scale
+
+
+def _chunk_attn_ref_cost(specs, attrs):
+    q, k = specs[0], specs[1]
+    b, t, hq, d = q.shape
+    s = k.shape[1]
+    base = _chunk_attn_cost(specs, attrs)
+    # the oracle materialises the GQA-repeated K/V in fp32 plus the dense
+    # (B, Hq, T, S) logits and probability tensors
+    extra = 4.0 * (2.0 * b * s * hq * d + 2.0 * b * hq * t * s)
+    return Cost(flops=base.flops, bytes=base.bytes + extra)
+
+
+@impl("chunk_attention", "ref", cost_fn=_chunk_attn_ref_cost,
       note="dense offset-causal masked attention in fp32 (the oracle)")
 def _chunk_attention_ref(inputs, attrs):
     q, k, v, start = inputs
     b, t, hq, d = q.shape
     s = k.shape[1]
-    scale = attrs.get("scale") or (1.0 / math.sqrt(d))
+    scale = _chunk_attn_scale(attrs, d)
     kf = R._repeat_kv(k, hq).astype(jnp.float32)
     vf = R._repeat_kv(v, hq).astype(jnp.float32)
     logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kf)
@@ -155,6 +234,46 @@ def _chunk_attention_ref(inputs, attrs):
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bhqk,bkhd->bqhd", p, vf)
     return [o.astype(q.dtype)]
+
+
+@impl("chunk_attention", "xla",
+      note="GQA grouped inside the einsum — the repeated-KV expansion is "
+           "never materialised; XLA fuses mask+softmax")
+def _chunk_attention_xla(inputs, attrs):
+    q, k, v, start = inputs
+    b, t, hq, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    assert hq % hk == 0, (hq, hk)
+    g = hq // hk
+    scale = _chunk_attn_scale(attrs, d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, t, hk, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    qpos = start[:, None] + jnp.arange(t)[None, :]              # (B, T)
+    allowed = jnp.arange(s)[None, None, :] <= qpos[:, :, None]  # (B, T, S)
+    logits = jnp.where(allowed[:, None, None, :, :], logits, R._NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return [o.reshape(b, t, hq, d).astype(q.dtype)]
+
+
+def _chunk_attn_pallas_supports(specs, attrs):
+    q, k = specs[0], specs[1]
+    bq = min(int(attrs.get("block_q", 256)), q.shape[1])
+    bkv = min(int(attrs.get("block_kv", 512)), k.shape[1])
+    return (q.shape[1] % bq == 0 and k.shape[1] % bkv == 0
+            and q.shape[2] % k.shape[2] == 0)
+
+
+@impl("chunk_attention", "pallas", supports=_chunk_attn_pallas_supports,
+      note="flash-style online-softmax kernel; per-sequence offset-causal "
+           "masking, fully-masked KV blocks skipped")
+def _chunk_attention_pallas(inputs, attrs):
+    q, k, v, start = inputs
+    return [flash_chunk_attention(
+        q, k, v, start, scale=attrs.get("scale"),
+        block_q=int(attrs.get("block_q", 256)),
+        block_kv=int(attrs.get("block_kv", 512)),
+        interpret=attrs.get("interpret", pallas_interpret()))]
 
 
 def chunk_attention(q, k, v, start, *, scale=None, backend: str = "ref", **kw):

@@ -8,6 +8,14 @@ prefill and decode steps go through the full staged compilation pipeline:
 the point of the serving engine — backend selection, quantization and the
 autotune cache all apply to the serving hot path.
 
+No node pins a backend: every op in these graphs — including the serving
+ops ``embedding`` / ``cache_update`` / ``chunk_attention`` /
+``decode_attention``, each of which carries ref/xla/pallas alternatives —
+resolves through whatever :class:`~repro.core.selector.BackendPolicy` the
+caller compiles with, and an :class:`~repro.core.selector.AutotunePolicy`
+measures the candidates at the exact batch/chunk/cache-capacity shapes
+these builders emit (persisted in the on-disk autotune cache).
+
 State is functional: KV caches are graph *inputs* and *outputs*
 (``cache_k{i}`` → ``new_cache_k{i}``), so a Program stays a pure function
 and the engine threads cache arrays between calls.

@@ -202,6 +202,23 @@ class ProgramStepper:
             self.caches[name.replace("new_", "")] = arr
         return logits
 
+    def backend_summary(self) -> Dict[str, Dict[str, Dict[str, int]]]:
+        """Per-phase, per-op backend assignment counts — what the policy
+        actually chose for the serving hot path.  Shape:
+        ``{"prefill"|"decode": {op: {backend: node_count}}}``; rendered by
+        ``serve_bench --json`` and ``repro.tools.report.backend_table``."""
+        out: Dict[str, Dict[str, Dict[str, int]]] = {}
+        for phase, prog in (("prefill", self.prefill_program),
+                            ("decode", self.decode_program)):
+            per_op: Dict[str, Dict[str, int]] = {}
+            assignment = prog.assignment
+            for node in prog.graph.nodes:
+                counts = per_op.setdefault(node.op, {})
+                b = assignment[node.name]
+                counts[b] = counts.get(b, 0) + 1
+            out[phase] = per_op
+        return out
+
     def prefill(self, tokens: np.ndarray, start: np.ndarray,
                 n_new: np.ndarray) -> np.ndarray:
         """tokens (B, chunk) → logits (B, chunk, V); caches advance."""

@@ -24,7 +24,7 @@ import numpy as np
 
 __all__ = ["load_records", "roofline_table", "dryrun_table",
            "weight_bytes", "activation_bytes", "footprint_table",
-           "serving_table"]
+           "serving_table", "backend_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -119,6 +119,40 @@ def serving_table(records: Sequence[Tuple[str, Dict]]) -> str:
     return "\n".join(out)
 
 
+def _fmt_assignment(assignment: Dict) -> str:
+    """``{phase: {op: {backend: n}}}`` -> ``op=backend`` summary (majority
+    backend per op across phases)."""
+    merged: Dict[str, Dict[str, int]] = {}
+    for per_op in assignment.values():
+        for op, counts in per_op.items():
+            agg = merged.setdefault(op, {})
+            for b, n in counts.items():
+                agg[b] = agg.get(b, 0) + n
+    return ", ".join(f"{op}={max(c, key=c.get)}"
+                     for op, c in sorted(merged.items()))
+
+
+def backend_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown per-backend serving throughput table from serve_bench JSON
+    records: for each config, one row per swept backend with prefill and
+    decode step tokens/s (absolute and vs the ref row), plus what the
+    autotuner chose for the serving ops on this machine."""
+    out = ["| config | serving backends | prefill tok/s | vs ref | "
+           "decode tok/s | vs ref |",
+           "|---|---|---|---|---|---|"]
+    for label, rec in records:
+        for name, row in rec.get("backend_sweep", {}).items():
+            out.append(
+                f"| {label} | {name} | {row['prefill_tok_s']:,.0f} | "
+                f"{row['prefill_vs_ref']:.2f}x | {row['decode_tok_s']:,.0f} | "
+                f"{row['decode_vs_ref']:.2f}x |")
+        at = rec.get("autotune")
+        if at:
+            out.append(f"| {label} | autotuned: {_fmt_assignment(at['assignment'])} "
+                       f"| - | - | - | - |")
+    return "\n".join(out)
+
+
 def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
     rows = [r for r in recs if r["mesh"] == mesh]
     out = ["| arch | shape | compute | memory | collective | bottleneck | "
@@ -189,6 +223,11 @@ def main() -> None:
         print("## Serving (benchmarks/serve_bench.py)\n")
         print(serving_table(serve))
         print()
+        if any("backend_sweep" in rec or "autotune" in rec
+               for _, rec in serve):
+            print("## Serving-op backends (serve_bench backend sweep)\n")
+            print(backend_table(serve))
+            print()
     recs = load_records(args.dir)
     print("## Summary\n")
     print(summary_stats(recs))

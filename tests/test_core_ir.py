@@ -1,15 +1,19 @@
-"""GraphIR, registry, passes, importer, executor, selector unit tests."""
+"""GraphIR, registry, passes, importer, Program, selector unit tests.
+
+Execution goes through the staged ``compile()`` -> ``Program`` pipeline
+(with ``pipeline=()`` where a test wants the graph run as-is, matching the
+old ``Executor`` semantics the shim preserves for external callers)."""
 
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (AutotunePolicy, CostModelPolicy, Executor,
-                        FixedPolicy, Graph, GraphError, Node, TensorSpec,
-                        backends_for, eliminate_common_subexpr,
-                        eliminate_dead, fold_batchnorm, fold_constants,
-                        fuse_bias_act, get_impl, get_op, infer_shapes,
-                        load_graph, registered_ops, save_graph, simplify,
+from repro.core import (AutotunePolicy, CostModelPolicy, FixedPolicy, Graph,
+                        GraphError, Node, TensorSpec, backends_for, compile,
+                        eliminate_common_subexpr, eliminate_dead,
+                        fold_batchnorm, fold_constants, fuse_bias_act,
+                        get_impl, get_op, infer_shapes, load_graph,
+                        registered_ops, save_graph, simplify,
                         topological_order)
 
 
@@ -65,8 +69,8 @@ class TestIR:
 
 class TestPasses:
     def _run(self, g, x, backend="ref"):
-        return np.asarray(Executor(infer_shapes(g),
-                                   FixedPolicy(prefer=(backend,)))(x=x)[0])
+        return np.asarray(compile(g, FixedPolicy(prefer=(backend,)),
+                                  pipeline=())(x=x)[0])
 
     def test_fuse_bias_act(self, rng):
         g = tiny_graph(rng)
@@ -161,49 +165,49 @@ class TestRegistry:
         assert wino.flops < cost.flops  # fewer multiplies is the point
 
 
-class TestSelectorExecutor:
+class TestSelectorProgram:
     def test_fixed_policy_per_op(self, rng):
         g = infer_shapes(tiny_graph(rng))
-        ex = Executor(g, FixedPolicy(per_op={"conv2d": ("winograd",)},
-                                     prefer=("ref",)))
-        assert ex.assignment["c1"] == "winograd"
+        prog = compile(g, FixedPolicy(per_op={"conv2d": ("winograd",)},
+                                      prefer=("ref",)), pipeline=())
+        assert prog.assignment["c1"] == "winograd"
 
     def test_pinned_backend_wins(self, rng):
         g = infer_shapes(tiny_graph(rng))
         g.nodes[0].backend = "xla"
-        ex = Executor(g, FixedPolicy(prefer=("ref",)))
-        assert ex.assignment["c1"] == "xla"
+        prog = compile(g, FixedPolicy(prefer=("ref",)), pipeline=())
+        assert prog.assignment["c1"] == "xla"
 
     def test_cost_model_policy_runs(self, rng):
         g = infer_shapes(tiny_graph(rng))
-        ex = Executor(g, CostModelPolicy())
+        prog = compile(g, CostModelPolicy(), pipeline=())
         x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
-        (y,) = ex(x=x)
+        (y,) = prog(x=x)
         assert np.isfinite(np.asarray(y)).all()
 
     def test_autotune_policy_picks_measured_best(self, rng):
         g = infer_shapes(tiny_graph(rng))
         pol = AutotunePolicy(reps=2)
-        ex = Executor(g, pol)
-        assert ex.assignment["c1"] in backends_for("conv2d")
+        prog = compile(g, pol, pipeline=())
+        assert prog.assignment["c1"] in backends_for("conv2d")
         assert pol._timings  # measurements cached
 
     def test_instrumented_run_reports_all_nodes(self, rng):
         g = infer_shapes(tiny_graph(rng))
-        ex = Executor(g, FixedPolicy(prefer=("ref",)))
+        prog = compile(g, FixedPolicy(prefer=("ref",)), pipeline=())
         x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
-        outs, reports = ex.run_instrumented(x=x)
+        outs, reports = prog.run_instrumented(x=x)
         assert len(reports) == len(g.nodes)
         assert all(r.seconds >= 0 for r in reports)
 
-    def test_executor_backend_equivalence(self, rng):
+    def test_program_backend_equivalence(self, rng):
         """The Orpheus guarantee: same graph, any backend, same numbers."""
         g = infer_shapes(tiny_graph(rng))
         x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
         outs = {}
         for b in ("ref", "xla", "pallas"):
             outs[b] = np.asarray(
-                Executor(g, FixedPolicy(prefer=(b, "ref")))(x=x)[0])
+                compile(g, FixedPolicy(prefer=(b, "ref")), pipeline=())(x=x)[0])
         np.testing.assert_allclose(outs["xla"], outs["ref"], rtol=1e-4,
                                    atol=1e-4)
         np.testing.assert_allclose(outs["pallas"], outs["ref"], rtol=1e-4,
@@ -211,7 +215,8 @@ class TestSelectorExecutor:
 
     def test_lower_compile_cost(self, rng):
         g = infer_shapes(tiny_graph(rng))
-        co = Executor(g, FixedPolicy(prefer=("ref",))).lower().compile()
+        co = compile(g, FixedPolicy(prefer=("ref",)),
+                     pipeline=()).lower().compile()
         ca = co.cost_analysis()
         if isinstance(ca, list):  # older jaxlib returns one dict per device
             ca = ca[0]
@@ -224,8 +229,9 @@ class TestImporter:
         save_graph(g, str(tmp_path / "m"))
         g2 = load_graph(str(tmp_path / "m"))
         x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
-        y1 = Executor(g, FixedPolicy(prefer=("ref",)))(x=x)[0]
-        y2 = Executor(infer_shapes(g2), FixedPolicy(prefer=("ref",)))(x=x)[0]
+        y1 = compile(g, FixedPolicy(prefer=("ref",)), pipeline=())(x=x)[0]
+        y2 = compile(infer_shapes(g2), FixedPolicy(prefer=("ref",)),
+                     pipeline=())(x=x)[0]
         np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
 
     def test_version_check(self, rng, tmp_path):

@@ -3,8 +3,9 @@
 The policies must degrade cleanly when a fancy backend's ``supports()``
 predicate rejects the node's shapes (e.g. pallas block-divisibility), and
 must not crash on ops that only have a single registered backend (e.g.
-the serving ops ``cache_update`` / ``chunk_attention``): the chosen
-backend is always one of the registered-and-supported set.
+``swiglu``): the chosen backend is always one of the
+registered-and-supported set.  The autotuner must also skip measurement
+entirely when there is only one candidate — there is nothing to compare.
 """
 
 import numpy as np
@@ -32,11 +33,9 @@ def _grouped_conv_node_and_specs():
 
 
 def _single_backend_node_and_specs():
-    # cache_update has exactly one backend (ref)
-    node = Node("u", "cache_update", ["c", "n", "s", "k"], ["o"])
-    return node, [TensorSpec((2, 8, 1, 4), "float32"),
-                  TensorSpec((2, 2, 1, 4), "float32"),
-                  TensorSpec((2,), "int32"), TensorSpec((2,), "int32")]
+    # swiglu has exactly one backend (ref) — XLA fuses it well on its own
+    node = Node("sw", "swiglu", ["g", "u"], ["o"])
+    return node, [TensorSpec((2, 8), "float32"), TensorSpec((2, 8), "float32")]
 
 
 @pytest.mark.parametrize("make", [_attn_node_and_specs,
@@ -74,16 +73,35 @@ def test_autotune_policy_degrades_cleanly():
         avail = backends_for(node.op, specs, node.attrs)
         choice = pol.resolve(node, specs)
         assert choice in avail
-    assert pol.n_measured >= 2
+    # grouped conv (ref/xla) was measured; single-backend swiglu was not
+    assert pol.n_measured == 1
 
 
-def test_autotune_single_backend_chunk_attention():
+def test_autotune_skips_single_candidate_measurement():
+    """Regression: one registered (or candidate-filtered) backend used to
+    burn warm-up + reps iterations to "choose" among one option."""
+    node, specs = _single_backend_node_and_specs()
+    pol = AutotunePolicy(reps=1)
+    assert pol.resolve(node, specs) == "ref"
+    assert pol.n_measured == 0 and not pol._timings
+    # same skip when `candidates` narrows a multi-backend op down to one
+    conv, conv_specs = _grouped_conv_node_and_specs()
+    pol2 = AutotunePolicy(reps=1, candidates=("xla",))
+    assert pol2.resolve(conv, conv_specs) == "xla"
+    assert pol2.n_measured == 0 and not pol2._timings
+
+
+def test_autotune_multibackend_chunk_attention():
     node = Node("a", "chunk_attention", ["q", "k", "v", "s"], ["o"])
     specs = [TensorSpec((1, 2, 2, 4), "float32"),
              TensorSpec((1, 8, 1, 4), "float32"),
              TensorSpec((1, 8, 1, 4), "float32"),
              TensorSpec((1,), "int32")]
-    assert AutotunePolicy(reps=1).resolve(node, specs) == "ref"
+    avail = backends_for(node.op, specs, node.attrs)
+    assert set(avail) >= {"ref", "xla"}
+    pol = AutotunePolicy(reps=1, candidates=("ref", "xla"))
+    assert pol.resolve(node, specs) in avail
+    assert pol.n_measured == 1
 
 
 def test_pinned_unsupported_backend_raises():
