@@ -78,6 +78,14 @@ def main() -> None:
           f"bounded={gap['gap_bounded']}")
     print(f"serve/dispatch_bind,{rec['dispatch']['bind_us']:.0f},"
           f"call={rec['dispatch']['call_us']:.0f}us")
+    pg = rec["paged"]
+    print(f"serve/paged_capacity,{pg['capacity']['paged_concurrent']},"
+          f"dense={pg['capacity']['dense_concurrent']};"
+          f"ratio={pg['capacity']['ratio']:.1f}x;"
+          f"exact={pg['token_exact']}")
+    print(f"serve/paged_prefix_ticks,{pg['prefix']['prefill_ticks_hit']},"
+          f"cold={pg['prefix']['prefill_ticks_cold']};"
+          f"hit_tokens={pg['prefix']['hit_tokens']}")
 
     print(f"# total {time.time()-t0:.1f}s")
 

@@ -15,7 +15,12 @@ Measures, on the example graph LM:
   sweep: prefill/decode step throughput with the serving ops pinned to
   each registered backend, normalised against ``ref``;
 * an autotune pass: the serving Programs compiled under ``AutotunePolicy``
-  with measurements persisted to the on-disk autotune cache.
+  with measurements persisted to the on-disk autotune cache;
+* the paged KV cache (``"paged"`` JSON section): max concurrent requests
+  at equal memory, dense vs paged; prefix-hit vs cold TTFT (wall time AND
+  deterministic prefill-tick counts) on a shared-prefix workload;
+  token-exactness of the paged engine vs the dense reference; block-pool
+  stats (hit rate, CoW count, fragmentation).
 
 Emits a JSON record (p50/p95 latency, TTFT, busy-slot fraction, tokens/s,
 gaps, dispatch) to stdout or ``--json``; ``--smoke`` is the fast CI
@@ -37,10 +42,9 @@ from repro.core import AutotunePolicy, FixedPolicy, default_cache_path
 from repro.models.graph_lm import GraphLMConfig, init_lm_params
 from repro.runtime.engine import (EngineRequest, ProgramStepper,
                                   build_lm_serving, padded_len)
+from repro.runtime.kv_cache import pages_needed
+from repro.tools.docgen import SERVING_OPS
 from repro.tools.report import _fmt_assignment
-
-SERVING_OPS = ("embedding", "cache_update", "chunk_attention",
-               "decode_attention")
 
 SMOKE_CFG = GraphLMConfig(vocab=61, d_model=32, n_layers=1, n_heads=4,
                           n_kv_heads=2, d_ff=64)
@@ -232,6 +236,112 @@ def _autotune_report(cfg, *, n_slots, chunk, cache_cap, reps: int,
     }
 
 
+def _paged_experiment(cfg, *, n_slots, chunk, cache_cap, page_size,
+                      quantize, seed: int) -> Dict[str, Any]:
+    """The paged-KV-cache record: capacity at equal memory (max concurrent
+    requests, dense vs paged), prefix-hit vs cold TTFT on a shared-prefix
+    workload, token-exactness vs the dense reference, and pool stats.
+    Report-only — wall-clock numbers are for trend inspection (this box
+    has ~3x timing noise); the tick counts are deterministic."""
+    rng = np.random.default_rng(seed)
+    max_pages = -(-cache_cap // page_size)
+    n_blocks = n_slots * max_pages          # same memory as the dense cache
+    plen, max_new = 12, 6                   # the capacity workload shape
+    per_req = pages_needed(plen, max_new, page_size)
+    # one more slot than the pool can feed, so BLOCKS are what binds
+    paged_slots = min(n_blocks // per_req + 1, 16)
+
+    def peak_concurrency(engine, n_requests: int) -> int:
+        for i in range(n_requests):
+            p = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+            engine.submit(EngineRequest(uid=i, prompt=p,
+                                        max_new_tokens=max_new))
+        peak = 0
+        while engine.has_work() and engine.tick < 10_000:
+            engine.step()
+            peak = max(peak, engine.sched.busy_slots)
+        return peak
+
+    dense_eng, _ = build_lm_serving(cfg, n_slots=n_slots, chunk=chunk,
+                                    cache_cap=cache_cap, quantize=quantize)
+    paged_eng, paged_ref = build_lm_serving(
+        cfg, n_slots=paged_slots, chunk=chunk, cache_cap=cache_cap,
+        paged=True, page_size=page_size, n_blocks=n_blocks,
+        quantize=quantize)
+    dense_peak = peak_concurrency(dense_eng, 2 * paged_slots)
+    paged_peak = peak_concurrency(paged_eng, 2 * paged_slots)
+
+    # prefix-hit vs cold TTFT: one long shared prefix, measured on the
+    # SAME engine (cold request populates the prefix index, warm one hits)
+    prefix_len = min(40, cache_cap - 8)
+    prefix = rng.integers(0, cfg.vocab, size=prefix_len).astype(np.int32)
+
+    def one_request(tail_len: int) -> EngineRequest:
+        tail = rng.integers(0, cfg.vocab, size=tail_len).astype(np.int32)
+        req = EngineRequest(uid=1000 + tail_len,
+                            prompt=np.concatenate([prefix, tail]),
+                            max_new_tokens=4)
+        assert paged_eng.submit(req), req.dropped
+        # max_ticks is an ABSOLUTE lifetime tick and this engine already
+        # ran the capacity workload — budget relative to where it is now
+        paged_eng.run(max_ticks=paged_eng.tick + 10_000)
+        return req
+
+    warmup = one_request(1)                 # compile + warm, also caches
+    hits0 = paged_eng.stepper.pool.hit_tokens
+    pool0 = paged_eng.stepper.pool
+    # drop the cached prefix so the "cold" run really is cold: build a
+    # fresh engine sharing nothing, then a hit run on the warmed engine
+    cold_eng, _ = build_lm_serving(
+        cfg, n_slots=paged_slots, chunk=chunk, cache_cap=cache_cap,
+        paged=True, page_size=page_size, n_blocks=n_blocks,
+        quantize=quantize)
+    # warm prompt's FIRST token differs from the prefix's, so the pages it
+    # registers can never prefix-hit the measured cold request
+    warm_prompt = np.full(4, (int(prefix[0]) + 1) % cfg.vocab, np.int32)
+    warm_req = EngineRequest(uid=-1, prompt=warm_prompt, max_new_tokens=2)
+    cold_eng.submit(warm_req)
+    cold_eng.run()                          # jit outside the timed request
+    cold = EngineRequest(uid=1, prompt=np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab, size=2).astype(np.int32)]),
+        max_new_tokens=4)
+    assert cold_eng.submit(cold)
+    cold_eng.run(max_ticks=cold_eng.tick + 10_000)
+    hit = one_request(2)
+    hit_tokens = paged_eng.stepper.pool.hit_tokens - hits0
+
+    exact = (hit.out_tokens == paged_ref.generate(hit.prompt, 4)
+             and warmup.out_tokens == paged_ref.generate(warmup.prompt, 4))
+    cold_ticks = (cold.first_token_tick or 0) - cold.submit_tick
+    hit_ticks = (hit.first_token_tick or 0) - hit.submit_tick
+    return {
+        "page_size": page_size,
+        "n_blocks": n_blocks,
+        "memory_rows": n_blocks * page_size,
+        "capacity": {
+            "dense_slots": n_slots,
+            "dense_concurrent": dense_peak,
+            "paged_slots": paged_slots,
+            "paged_concurrent": paged_peak,
+            "ratio": paged_peak / dense_peak if dense_peak else 0.0,
+            "request_shape": {"prompt_len": plen, "max_new": max_new,
+                              "pages_per_request": per_req},
+        },
+        "prefix": {
+            "prefix_len": prefix_len,
+            "hit_tokens": int(hit_tokens),
+            "ttft_cold_s": cold.ttft_s,
+            "ttft_hit_s": hit.ttft_s,
+            "prefill_ticks_cold": cold_ticks,
+            "prefill_ticks_hit": hit_ticks,
+            "hit_faster": bool((hit.ttft_s or 0) < (cold.ttft_s or 0)),
+        },
+        "token_exact": bool(exact),
+        "pool": pool0.stats(),
+        "backends": _serving_assignment(paged_eng.stepper),
+    }
+
+
 def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
                        ) -> Dict[str, float]:
     """µs/call of the kwargs Program path vs the bind() fast path on the
@@ -289,6 +399,9 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["dispatch"] = _dispatch_overhead(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         reps=50 if smoke else 200)
+    result["paged"] = _paged_experiment(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        page_size=8, quantize=quantize, seed=seed)
     params = init_lm_params(cfg, 0)
     result["backend_sweep"] = _backend_sweep(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
@@ -332,6 +445,15 @@ def main(argv=None) -> int:
           f"bounded={gap['gap_bounded']})")
     print(f"# dispatch: call {rec['dispatch']['call_us']:.0f}us vs "
           f"bind {rec['dispatch']['bind_us']:.0f}us per step")
+    pg = rec["paged"]
+    cap_r, pre = pg["capacity"], pg["prefix"]
+    print(f"# paged   : page {pg['page_size']} x {pg['n_blocks']} blocks "
+          f"(= dense memory); concurrent {cap_r['paged_concurrent']} vs "
+          f"dense {cap_r['dense_concurrent']} ({cap_r['ratio']:.1f}x); "
+          f"ttft hit {(pre['ttft_hit_s'] or 0)*1e3:.1f}ms vs cold "
+          f"{(pre['ttft_cold_s'] or 0)*1e3:.1f}ms "
+          f"({pre['prefill_ticks_hit']} vs {pre['prefill_ticks_cold']} "
+          f"prefill ticks); exact={pg['token_exact']}")
     for label, row in rec["backend_sweep"].items():
         print(f"# sweep[{label:>6}]: prefill {row['prefill_tok_s']:,.0f} tok/s "
               f"({row['prefill_vs_ref']:.2f}x ref), "

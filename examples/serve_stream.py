@@ -7,7 +7,11 @@ one-flag switch — see --int8).  A long-prompt request arrives while the
 others are decoding; chunked prefill keeps their token streams flowing
 (the printed per-token timeline shows the interleaving).
 
-Run:  PYTHONPATH=src python examples/serve_stream.py [--int8]
+--paged serves the same traffic through the paged KV cache (shared page
+pool + block tables + prefix reuse — see docs/serving-guide.md §3); the
+pool's hit/CoW/fragmentation stats are printed at the end.
+
+Run:  PYTHONPATH=src python examples/serve_stream.py [--int8] [--paged]
 """
 
 import argparse
@@ -29,10 +33,10 @@ async def client(name: str, aeng: AsyncEngine, prompt, max_new: int, t0: float):
     return toks
 
 
-async def amain(quantize):
+async def amain(quantize, paged):
     cfg = GraphLMConfig()
     engine, ref = build_lm_serving(cfg, n_slots=4, chunk=8, cache_cap=96,
-                                   quantize=quantize)
+                                   quantize=quantize, paged=paged)
     aeng = AsyncEngine(engine)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
@@ -52,14 +56,21 @@ async def amain(quantize):
     print(f"{m['tokens_out']} tokens, {m['tokens_per_s']:,.0f} tok/s, "
           f"busy {m['busy_slot_fraction']:.0%}, "
           f"prefill/decode ticks {m['prefill_ticks']}/{m['decode_ticks']}")
+    if engine.paged:
+        s = engine.stepper.pool.stats()
+        print(f"paged pool: {s['n_blocks']} blocks x {s['page_size']} rows, "
+              f"hit rate {s['hit_rate']:.0%}, CoW {s['cow_count']}, "
+              f"fragmentation {s['fragmentation']:.0%}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--int8", action="store_true",
                     help="serve int8-quantized Programs")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged KV cache (prefix reuse)")
     args = ap.parse_args()
-    asyncio.run(amain("int8" if args.int8 else None))
+    asyncio.run(amain("int8" if args.int8 else None, args.paged))
 
 
 if __name__ == "__main__":

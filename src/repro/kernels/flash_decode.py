@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["flash_decode", "flash_decode_partial"]
+__all__ = ["flash_decode", "flash_decode_partial", "flash_paged_decode"]
 
 _NEG_INF = -1e30
 
@@ -158,3 +158,96 @@ def flash_decode_partial(q: jax.Array, k: jax.Array, v: jax.Array,
     combine shards with ``ref.combine_partials_ref`` (exact)."""
     return _flash_decode(q, k, v, lengths, scale, block_kv, interpret,
                          emit_stats=True)
+
+
+# --------------------------------------------------------------------------- #
+# Paged flash decode — KV pages reached through a scalar-prefetched block
+# table.  Same streaming recurrence as _decode_kernel, but the KV "block"
+# of grid step pi is PHYSICAL page block_tables[b, pi]: the index map reads
+# the prefetched table, so pages are DMA'd straight from wherever they live
+# in the pool — the dense gather copy the ref/xla paged backends pay never
+# exists here.  Garbage table entries (logical pages past a sequence's
+# length, filled with 0 by the engine) are masked by the per-sequence
+# length operand exactly like short caches in plain flash_decode.
+# --------------------------------------------------------------------------- #
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, m_out_ref, l_out_ref, acc_ref, m_ref, l_ref,
+                         *, scale: float, page: int, n_pages: int):
+    # bt_ref (the scalar-prefetched block table) is consumed by the index
+    # maps; the compute body is the stock online-softmax recurrence with
+    # one page per KV step.
+    del bt_ref
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, scale=scale, bkv=page,
+                   n_kv_blocks=n_pages, emit_stats=False)
+
+
+def flash_paged_decode(q: jax.Array, pages_k: jax.Array, pages_v: jax.Array,
+                       block_tables: jax.Array,
+                       lengths: Optional[jax.Array] = None, *,
+                       scale: Optional[float] = None,
+                       interpret: bool = False) -> jax.Array:
+    """q (B, Hq, D), pages_k/v (N, P, Hkv, D), block_tables (B, MP) int32,
+    lengths (B,) -> (B, Hq, D), softmax-normalised.
+
+    Logical position ``pi * P + r`` of sequence b lives at physical row
+    ``(pages[block_tables[b, pi]], r)``; positions >= lengths[b] are
+    masked (so unallocated table entries may hold any valid block id)."""
+    b, hq, d = q.shape
+    n_blocks, page, hkv = pages_k.shape[0], pages_k.shape[1], pages_k.shape[2]
+    dv = pages_v.shape[3]
+    n_pages = block_tables.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    if lengths is None:
+        lengths = jnp.full((b,), n_pages * page, jnp.int32)
+
+    # q: (B, Hq, D) -> (B*Hkv, group, D); pages: (N, P, Hkv, D) -> head-major
+    # (N*Hkv, P, D) so one (block, head) pair is a contiguous (P, D) tile.
+    qr = q.reshape(b, hkv, group, d).reshape(b * hkv, group, d)
+    kr = pages_k.transpose(0, 2, 1, 3).reshape(n_blocks * hkv, page, d)
+    vr = pages_v.transpose(0, 2, 1, 3).reshape(n_blocks * hkv, page, dv)
+    len_r = jnp.repeat(lengths.astype(jnp.int32), hkv)          # (B*Hkv,)
+    tables = jnp.clip(block_tables, 0, n_blocks - 1).astype(jnp.int32)
+
+    def kv_map(bh, pi, bt):
+        # physical (block, head) row of logical page pi of sequence bh//Hkv
+        return (bt[bh // hkv, pi] * hkv + bh % hkv, 0, 0)
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale, page=page,
+                               n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                     # the block table
+        grid=(b * hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bh, pi, bt: (bh,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, group, d), lambda bh, pi, bt: (bh, 0, 0)),
+            pl.BlockSpec((1, page, d), kv_map),
+            pl.BlockSpec((1, page, dv), kv_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, group, dv), lambda bh, pi, bt: (bh, 0, 0)),
+            pl.BlockSpec((1, group, 1), lambda bh, pi, bt: (bh, 0, 0)),
+            pl.BlockSpec((1, group, 1), lambda bh, pi, bt: (bh, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((group, dv), jnp.float32),
+            pltpu.VMEM((group, 128), jnp.float32),
+            pltpu.VMEM((group, 128), jnp.float32),
+        ],
+    )
+    out, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b * hkv, group, dv), q.dtype),
+            jax.ShapeDtypeStruct((b * hkv, group, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b * hkv, group, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        name="flash_paged_decode",
+    )(tables, len_r, qr, kr, vr)
+    return out.reshape(b, hq, dv)

@@ -138,6 +138,7 @@ def _decode_ref_impl(inputs, attrs):
 
 
 def _dec_pallas_supports(specs, attrs):
+    """Skv % block_kv == 0 (block clamped to the cache length)."""
     k = specs[1]
     bkv = min(int(attrs.get("block_kv", 512)), k.shape[1])
     return k.shape[1] % bkv == 0
@@ -153,6 +154,8 @@ def _decode_pallas_impl(inputs, attrs):
 
 
 def _dec_split_supports(specs, attrs):
+    """n_splits >= 2 dividing Skv into >= 8-row shards, each shard a
+    multiple of its (clamped) block_kv."""
     k = specs[1]
     n_splits = int(attrs.get("n_splits", 2))
     skv = k.shape[1]
@@ -163,10 +166,11 @@ def _dec_split_supports(specs, attrs):
 
 
 def _dec_split_cost(specs, attrs):
+    """Adds the combine overhead: per-split (acc, m, l) partials written
+    then re-read by the exact merge."""
     q = specs[0]
     n_splits = int(attrs.get("n_splits", 2))
     base = _dec_cost(specs, attrs)
-    # per-split (acc, m, l) partials written then re-read by the combiner
     partials = n_splits * (q.nbytes + 8.0 * q.shape[0] * q.shape[1])
     return Cost(flops=base.flops, bytes=base.bytes + 2.0 * partials)
 

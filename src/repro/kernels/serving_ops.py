@@ -90,11 +90,12 @@ def _embedding_ref(inputs, attrs):
 
 
 def _embedding_xla_cost(specs, attrs):
+    """One-hot matmul: 2*N*V*D flops plus the materialised (N, V)
+    one-hot, traded against the gather's pure byte cost."""
     ids, table = specs
     v, d = table.shape
     n = ids.nelems
     out = _embedding_shape(specs, attrs)[0]
-    # one-hot matmul: 2*N*V*D flops and a materialised (N, V) one-hot
     return Cost(flops=2.0 * n * v * d,
                 bytes=table.nbytes + out.nbytes + 4.0 * n * v)
 
@@ -141,36 +142,49 @@ defop("cache_update", _cache_update_shape, _cache_update_cost,
 
 
 @impl("cache_update", "ref",
-      note="vmap'd masked gather/scatter; n_new==0 slots are exact no-ops")
+      note="vmap'd row scatter with masked rows dropped; n_new==0 slots "
+           "are exact no-ops.  (Masked rows used to clip to cap-1 and "
+           "re-write it — a duplicate-index scatter that corrupted the "
+           "last cache row when a ragged final chunk ended exactly at "
+           "capacity.)")
 def _cache_update_ref(inputs, attrs):
     cache, new, start, n_new = inputs
     t = new.shape[1]
     cap = cache.shape[1]
 
     def one(c, x, s, n):
-        idx = jnp.clip(s + jnp.arange(t), 0, cap - 1)
-        rows = c[idx]
-        mask = (jnp.arange(t) < n).reshape((t,) + (1,) * (x.ndim - 1))
-        return c.at[idx].set(jnp.where(mask, x, rows))
+        idx = s + jnp.arange(t)
+        # rows at or past n are padding: send them out of bounds so the
+        # scatter drops them instead of clipping onto a real row
+        idx = jnp.where(jnp.arange(t) < n, jnp.clip(idx, 0, cap - 1), cap)
+        return c.at[idx].set(x, mode="drop")
 
     return [jax.vmap(one)(cache, new, start, n_new)]
 
 
 @impl("cache_update", "xla",
       note="per-slot lax.dynamic_update_slice of the mask-merged chunk; "
-           "matches ref exactly on the engine contract 0 <= start <= cap-T "
-           "(ref's per-row index clip only differs outside it)")
+           "matches ref exactly on the engine contract 0 <= start and "
+           "start + n_new <= cap (a final ragged chunk may start past "
+           "cap - T — the slice is shifted back and the chunk re-aligned)")
 def _cache_update_xla(inputs, attrs):
     cache, new, start, n_new = inputs
     t = new.shape[1]
     cap = cache.shape[1]
 
     def one(c, x, s, n):
-        s = jnp.clip(s, 0, cap - t)
-        cur = jax.lax.dynamic_slice_in_dim(c, s, t, axis=0)
-        mask = (jnp.arange(t) < n).reshape((t,) + (1,) * (x.ndim - 1))
+        # a ragged final chunk can have s > cap - t while still writing
+        # only n <= cap - s valid rows; shift the fixed-size slice window
+        # back into bounds and place the chunk at its offset inside it
+        s_c = jnp.clip(s, 0, cap - t)
+        shift = s - s_c
+        cur = jax.lax.dynamic_slice_in_dim(c, s_c, t, axis=0)
+        j = jnp.arange(t)
+        src = jnp.take(x, jnp.clip(j - shift, 0, t - 1), axis=0)
+        mask = ((j >= shift) & (j < shift + n)).reshape(
+            (t,) + (1,) * (x.ndim - 1))
         return jax.lax.dynamic_update_slice_in_dim(
-            c, jnp.where(mask, x, cur), s, axis=0)
+            c, jnp.where(mask, src, cur), s_c, axis=0)
 
     return [jax.vmap(one)(cache, new, start, n_new)]
 
@@ -208,12 +222,12 @@ def _chunk_attn_scale(attrs, d: int) -> float:
 
 
 def _chunk_attn_ref_cost(specs, attrs):
+    """Adds the oracle's materialisation traffic: GQA-repeated K/V in
+    fp32 plus the dense (B, Hq, T, S) logits and probability tensors."""
     q, k = specs[0], specs[1]
     b, t, hq, d = q.shape
     s = k.shape[1]
     base = _chunk_attn_cost(specs, attrs)
-    # the oracle materialises the GQA-repeated K/V in fp32 plus the dense
-    # (B, Hq, T, S) logits and probability tensors
     extra = 4.0 * (2.0 * b * s * hq * d + 2.0 * b * hq * t * s)
     return Cost(flops=base.flops, bytes=base.bytes + extra)
 
@@ -257,6 +271,8 @@ def _chunk_attention_xla(inputs, attrs):
 
 
 def _chunk_attn_pallas_supports(specs, attrs):
+    """T % block_q == 0, S % block_kv == 0 (blocks clamped to the sequence
+    lengths) and Hq divisible by Hk (whole GQA groups)."""
     q, k = specs[0], specs[1]
     bq = min(int(attrs.get("block_q", 256)), q.shape[1])
     bkv = min(int(attrs.get("block_kv", 512)), k.shape[1])
@@ -279,3 +295,266 @@ def _chunk_attention_pallas(inputs, attrs):
 def chunk_attention(q, k, v, start, *, scale=None, backend: str = "ref", **kw):
     return get_impl("chunk_attention", backend)(
         [q, k, v, start], {"scale": scale, **kw})[0]
+
+
+# --------------------------------------------------------------------------- #
+# Paged serving ops — K/V rows live in a shared page pool
+# (n_blocks, page_size, Hk, D) and each sequence reaches its rows through an
+# int32 block table (B, max_pages): logical page -> physical block.  The
+# engine side of the contract (allocation, refcounts, prefix reuse, CoW)
+# lives in repro.runtime.kv_cache; these ops only move and read rows.
+# Garbage table entries (unallocated logical pages, filled with 0) are
+# harmless: reads of those positions are masked by start/lengths, writes
+# never target them (start .. start+n_new-1 always lies in allocated pages).
+# --------------------------------------------------------------------------- #
+
+def _gather_pages(pages, tables):
+    """(N, P, H, D) pages + (B, MP) tables -> dense (B, MP*P, H, D) view."""
+    n, p = pages.shape[0], pages.shape[1]
+    g = jnp.take(pages, jnp.clip(tables, 0, n - 1), axis=0)  # (B, MP, P, H, D)
+    return g.reshape(tables.shape[0], tables.shape[1] * p, *pages.shape[2:])
+
+
+def _gathered_bytes(pages_spec, tables_spec) -> float:
+    """HBM bytes of one gathered dense K or V view."""
+    n, p, h, d = pages_spec.shape
+    b, mp = tables_spec.shape
+    itemsize = pages_spec.nbytes / max(pages_spec.nelems, 1)
+    return float(b * mp * p * h * d) * itemsize
+
+
+# ---- paged_cache_update --------------------------------------------------- #
+# inputs (pages (N,P,H,D), new (B,T,H,D), tables (B,MP) i32, start, n_new)
+
+def _paged_update_shape(specs, attrs):
+    pages, new, tables = specs[0], specs[1], specs[2]
+    if pages.shape[2:] != new.shape[2:]:
+        raise ValueError(f"page/new head mismatch: {pages.shape} vs {new.shape}")
+    if new.shape[0] != tables.shape[0]:
+        raise ValueError(f"batch mismatch: {new.shape} vs {tables.shape}")
+    return [pages]
+
+
+def _paged_update_cost(specs, attrs):
+    new = specs[1]
+    # read-modify-write of T rows per sequence through the table
+    return Cost(flops=0.0, bytes=3.0 * new.nbytes + _bytes(specs[2:]))
+
+
+defop("paged_cache_update", _paged_update_shape, _paged_update_cost,
+      doc="scatter n_new K/V rows into a shared page pool through per-"
+          "sequence block tables; inputs (pages (N,P,H,D), new (B,T,H,D), "
+          "tables (B,MP) int32, start (B,), n_new (B,))")
+
+
+def _paged_rows(tables, start, t, p, n_blocks):
+    """Physical (block, row) targets for T rows per slot from ``start``;
+    rows at or past ``n_new`` get block index N (dropped by the scatter)."""
+    mp = tables.shape[1]
+    pos = start[:, None] + jnp.arange(t)[None, :]              # (B, T)
+    blk = jnp.take_along_axis(tables, jnp.clip(pos // p, 0, mp - 1), axis=1)
+    return jnp.clip(blk, 0, n_blocks - 1), pos % p
+
+
+@impl("paged_cache_update", "ref",
+      note="per-slot python loop of masked row scatters (the oracle); "
+          "n_new==0 slots are exact no-ops")
+def _paged_cache_update_ref(inputs, attrs):
+    pages, new, tables, start, n_new = inputs
+    n_blocks, p = pages.shape[0], pages.shape[1]
+    b, t = new.shape[0], new.shape[1]
+    blk, row = _paged_rows(tables, start, t, p, n_blocks)
+    out = jnp.asarray(pages)
+    for bi in range(b):
+        valid = jnp.arange(t) < n_new[bi]
+        tgt = jnp.where(valid, blk[bi], n_blocks)      # OOB rows are dropped
+        out = out.at[tgt, row[bi]].set(new[bi], mode="drop")
+    return [out]
+
+
+@impl("paged_cache_update", "xla",
+      note="one flat (B*T)-row scatter; bit-identical to ref because write "
+           "targets are unique (each writable page belongs to one sequence)")
+def _paged_cache_update_xla(inputs, attrs):
+    pages, new, tables, start, n_new = inputs
+    n_blocks, p = pages.shape[0], pages.shape[1]
+    b, t = new.shape[0], new.shape[1]
+    blk, row = _paged_rows(tables, start, t, p, n_blocks)
+    valid = jnp.arange(t)[None, :] < jnp.asarray(n_new)[:, None]
+    tgt = jnp.where(valid, blk, n_blocks)
+    return [jnp.asarray(pages).at[tgt.reshape(-1), row.reshape(-1)].set(
+        jnp.asarray(new).reshape((b * t,) + new.shape[2:]), mode="drop")]
+
+
+def paged_cache_update(pages, new, tables, start, n_new, *,
+                       backend: str = "ref", **kw):
+    return get_impl("paged_cache_update", backend)(
+        [pages, new, tables, start, n_new], kw)[0]
+
+
+# ---- paged_chunk_attention ------------------------------------------------ #
+# inputs (q (B,T,Hq,D), pages_k (N,P,Hk,D), pages_v, tables (B,MP), start)
+
+def _paged_chunk_shape(specs, attrs):
+    return [specs[0]]
+
+
+def _paged_chunk_cost(specs, attrs):
+    q, pk, tables = specs[0], specs[1], specs[3]
+    b, t, hq, d = q.shape
+    s = tables.shape[1] * pk.shape[1]
+    gathered = 2.0 * _gathered_bytes(pk, tables)      # stream K and V once
+    return Cost(flops=4.0 * b * hq * t * s * d,
+                bytes=2.0 * q.nbytes + tables.nbytes + gathered)
+
+
+defop("paged_chunk_attention", _paged_chunk_shape, _paged_chunk_cost,
+      doc="chunked-prefill attention reading K/V through block tables; "
+          "inputs (q (B,T,Hq,D), pages_k (N,P,Hk,D), pages_v, "
+          "tables (B,MP) int32, start (B,)); attrs: scale")
+
+
+def _paged_chunk_ref_cost(specs, attrs):
+    """Charges the materialised dense gather plus the ref oracle's
+    GQA-repeated K/V and dense logits/probability tensors."""
+    q, pk, tables = specs[0], specs[1], specs[3]
+    b, t, hq, d = q.shape
+    s = tables.shape[1] * pk.shape[1]
+    base = _paged_chunk_cost(specs, attrs)
+    extra = 2.0 * 2.0 * _gathered_bytes(pk, tables)   # written then re-read
+    extra += 4.0 * (2.0 * b * s * hq * d + 2.0 * b * hq * t * s)
+    return Cost(flops=base.flops, bytes=base.bytes + extra)
+
+
+@impl("paged_chunk_attention", "ref", cost_fn=_paged_chunk_ref_cost,
+      note="gather pages to a dense view, then the dense fp32 offset-"
+           "causal oracle")
+def _paged_chunk_attention_ref(inputs, attrs):
+    q, pk, pv, tables, start = inputs
+    return _chunk_attention_ref(
+        [q, _gather_pages(pk, tables), _gather_pages(pv, tables), start],
+        attrs)
+
+
+def _paged_chunk_xla_cost(specs, attrs):
+    """Charges the materialised dense gather; attention itself stays
+    GQA-grouped (no repeated-KV expansion)."""
+    q, pk, tables = specs[0], specs[1], specs[3]
+    base = _paged_chunk_cost(specs, attrs)
+    return Cost(flops=base.flops,
+                bytes=base.bytes + 2.0 * 2.0 * _gathered_bytes(pk, tables))
+
+
+@impl("paged_chunk_attention", "xla", cost_fn=_paged_chunk_xla_cost,
+      note="gather pages to a dense view + the GQA-grouped einsum "
+           "(repeated-KV never materialised)")
+def _paged_chunk_attention_xla(inputs, attrs):
+    q, pk, pv, tables, start = inputs
+    return _chunk_attention_xla(
+        [q, _gather_pages(pk, tables), _gather_pages(pv, tables), start],
+        attrs)
+
+
+def paged_chunk_attention(q, pages_k, pages_v, tables, start, *, scale=None,
+                          backend: str = "ref", **kw):
+    return get_impl("paged_chunk_attention", backend)(
+        [q, pages_k, pages_v, tables, start], {"scale": scale, **kw})[0]
+
+
+# ---- paged_decode_attention ----------------------------------------------- #
+# inputs (q (B,Hq,D), pages_k (N,P,Hk,D), pages_v, tables (B,MP), lengths)
+
+def _paged_dec_shape(specs, attrs):
+    return [specs[0]]
+
+
+def _paged_dec_cost(specs, attrs):
+    q, pk, tables = specs[0], specs[1], specs[3]
+    b, hq, d = q.shape
+    s = tables.shape[1] * pk.shape[1]
+    gathered = 2.0 * _gathered_bytes(pk, tables)
+    return Cost(flops=4.0 * b * hq * s * d,
+                bytes=2.0 * q.nbytes + tables.nbytes + gathered)
+
+
+defop("paged_decode_attention", _paged_dec_shape, _paged_dec_cost,
+      doc="single-token attention reading the KV cache through block "
+          "tables; inputs (q (B,Hq,D), pages_k (N,P,Hk,D), pages_v, "
+          "tables (B,MP) int32, lengths (B,)); attrs: scale")
+
+
+def _paged_dec_ref_cost(specs, attrs):
+    """Adds the materialised dense gather and the oracle's GQA-repeated
+    K/V to the op's streaming cost."""
+    q, pk, tables = specs[0], specs[1], specs[3]
+    b, hq, d = q.shape
+    s = tables.shape[1] * pk.shape[1]
+    base = _paged_dec_cost(specs, attrs)
+    extra = 2.0 * 2.0 * _gathered_bytes(pk, tables)
+    extra += 4.0 * (2.0 * b * s * hq * d)
+    return Cost(flops=base.flops, bytes=base.bytes + extra)
+
+
+@impl("paged_decode_attention", "ref", cost_fn=_paged_dec_ref_cost,
+      note="gather pages to a dense view + the dense fp32 decode oracle")
+def _paged_decode_attention_ref(inputs, attrs):
+    q, pk, pv, tables, lengths = inputs
+    k = _gather_pages(pk, tables)
+    v = _gather_pages(pv, tables)
+    return [R.decode_attention_ref(q, k, v, lengths,
+                                   scale=attrs.get("scale"))]
+
+
+def _paged_dec_xla_cost(specs, attrs):
+    """Charges the materialised dense gather on top of the op's
+    streaming cost; GQA stays grouped in the einsum."""
+    q, pk, tables = specs[0], specs[1], specs[3]
+    base = _paged_dec_cost(specs, attrs)
+    return Cost(flops=base.flops,
+                bytes=base.bytes + 2.0 * 2.0 * _gathered_bytes(pk, tables))
+
+
+@impl("paged_decode_attention", "xla", cost_fn=_paged_dec_xla_cost,
+      note="gather pages to a dense view + GQA-grouped einsum over the "
+           "length-masked positions")
+def _paged_decode_attention_xla(inputs, attrs):
+    q, pk, pv, tables, lengths = inputs
+    k = _gather_pages(pk, tables)
+    v = _gather_pages(pv, tables)
+    b, hq, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    assert hq % hk == 0, (hq, hk)
+    g = hq // hk
+    scale = _chunk_attn_scale(attrs, d)
+    qg = (q.astype(jnp.float32) * scale).reshape(b, hk, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32))
+    allowed = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(allowed, logits, R._NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
+    return [o.reshape(b, hq, d).astype(q.dtype)]
+
+
+def _paged_dec_pallas_supports(specs, attrs):
+    """page_size % 8 == 0 (TPU sublane tiling of one page per KV step) and
+    Hq divisible by Hk (whole GQA groups)."""
+    q, pk = specs[0], specs[1]
+    return pk.shape[1] % 8 == 0 and q.shape[1] % pk.shape[2] == 0
+
+
+@impl("paged_decode_attention", "pallas", supports=_paged_dec_pallas_supports,
+      note="block-table-aware flash decode: pages streamed via scalar-"
+           "prefetched table indices, online softmax, one KV read per GQA "
+           "group (repro.kernels.flash_decode.flash_paged_decode)")
+def _paged_decode_attention_pallas(inputs, attrs):
+    from repro.kernels.flash_decode import flash_paged_decode
+    q, pk, pv, tables, lengths = inputs
+    return [flash_paged_decode(
+        q, pk, pv, tables, lengths, scale=attrs.get("scale"),
+        interpret=attrs.get("interpret", pallas_interpret()))]
+
+
+def paged_decode_attention(q, pages_k, pages_v, tables, lengths, *,
+                           scale=None, backend: str = "ref", **kw):
+    return get_impl("paged_decode_attention", backend)(
+        [q, pages_k, pages_v, tables, lengths], {"scale": scale, **kw})[0]

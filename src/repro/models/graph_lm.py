@@ -37,14 +37,16 @@ against each other.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, List
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.ir import Graph, Node, TensorSpec
 
 __all__ = ["GraphLMConfig", "init_lm_params", "build_decode_graph",
-           "build_prefill_graph", "init_cache_inputs"]
+           "build_prefill_graph", "init_cache_inputs",
+           "build_paged_decode_graph", "build_paged_prefill_graph",
+           "init_paged_cache_inputs"]
 
 
 @dataclass(frozen=True)
@@ -103,8 +105,23 @@ def init_cache_inputs(cfg: GraphLMConfig, batch: int,
     return out
 
 
+def init_paged_cache_inputs(cfg: GraphLMConfig, n_blocks: int,
+                            page_size: int) -> Dict[str, np.ndarray]:
+    """Zeroed page-pool arrays matching the paged graphs' cache input
+    names.  Unlike the dense layout there is no batch dimension — one
+    shared pool of ``n_blocks`` fixed-size pages per layer, indexed
+    through per-sequence block tables."""
+    shape = (n_blocks, page_size, cfg.n_kv_heads, cfg.d_head)
+    out: Dict[str, np.ndarray] = {}
+    for i in range(cfg.n_layers):
+        out[f"cache_k{i}"] = np.zeros(shape, np.float32)
+        out[f"cache_v{i}"] = np.zeros(shape, np.float32)
+    return out
+
+
 def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
-              t: int, cache_cap: int, decode: bool) -> Graph:
+              t: int, cache_cap: int, decode: bool,
+              paged: Optional[Tuple[int, int, int]] = None) -> Graph:
     if t > cache_cap:
         raise ValueError(f"chunk {t} exceeds cache capacity {cache_cap}")
     dm, dh, hq, hk = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
@@ -113,10 +130,18 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
         "start": TensorSpec((batch,), "int32"),
         "n_new": TensorSpec((batch,), "int32"),
     }
-    for i in range(cfg.n_layers):
-        spec = TensorSpec((batch, cache_cap, hk, dh), "float32")
-        inputs[f"cache_k{i}"] = spec
-        inputs[f"cache_v{i}"] = spec
+    if paged is None:
+        for i in range(cfg.n_layers):
+            spec = TensorSpec((batch, cache_cap, hk, dh), "float32")
+            inputs[f"cache_k{i}"] = spec
+            inputs[f"cache_v{i}"] = spec
+    else:
+        n_blocks, page_size, max_pages = paged
+        inputs["block_tables"] = TensorSpec((batch, max_pages), "int32")
+        for i in range(cfg.n_layers):
+            spec = TensorSpec((n_blocks, page_size, hk, dh), "float32")
+            inputs[f"cache_k{i}"] = spec
+            inputs[f"cache_v{i}"] = spec
 
     nodes: List[Node] = [Node("embed_lookup", "embedding",
                               ["tokens", "embed"], ["x0"])]
@@ -135,27 +160,51 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
                  {"shape": (batch, t, hk, dh)}),
             Node(f"{L}.v_heads", "reshape", [f"{L}.v"], [f"{L}.v4"],
                  {"shape": (batch, t, hk, dh)}),
-            Node(f"{L}.k_write", "cache_update",
-                 [f"cache_k{i}", f"{L}.k4", "start", "n_new"], [f"new_cache_k{i}"]),
-            Node(f"{L}.v_write", "cache_update",
-                 [f"cache_v{i}", f"{L}.v4", "start", "n_new"], [f"new_cache_v{i}"]),
         ]
-        if decode:
+        if paged is None:
             nodes += [
-                Node(f"{L}.q_heads", "reshape", [f"{L}.q"], [f"{L}.qd"],
-                     {"shape": (batch, hq, dh)}),
-                Node(f"{L}.attn", "decode_attention",
-                     [f"{L}.qd", f"new_cache_k{i}", f"new_cache_v{i}", "kvlen"],
-                     [f"{L}.att"]),
+                Node(f"{L}.k_write", "cache_update",
+                     [f"cache_k{i}", f"{L}.k4", "start", "n_new"],
+                     [f"new_cache_k{i}"]),
+                Node(f"{L}.v_write", "cache_update",
+                     [f"cache_v{i}", f"{L}.v4", "start", "n_new"],
+                     [f"new_cache_v{i}"]),
             ]
         else:
             nodes += [
-                Node(f"{L}.q_heads", "reshape", [f"{L}.q"], [f"{L}.q4"],
-                     {"shape": (batch, t, hq, dh)}),
-                Node(f"{L}.attn", "chunk_attention",
-                     [f"{L}.q4", f"new_cache_k{i}", f"new_cache_v{i}", "start"],
-                     [f"{L}.att"]),
+                Node(f"{L}.k_write", "paged_cache_update",
+                     [f"cache_k{i}", f"{L}.k4", "block_tables", "start", "n_new"],
+                     [f"new_cache_k{i}"]),
+                Node(f"{L}.v_write", "paged_cache_update",
+                     [f"cache_v{i}", f"{L}.v4", "block_tables", "start", "n_new"],
+                     [f"new_cache_v{i}"]),
             ]
+        if decode:
+            nodes.append(Node(f"{L}.q_heads", "reshape", [f"{L}.q"],
+                              [f"{L}.qd"], {"shape": (batch, hq, dh)}))
+            if paged is None:
+                nodes.append(Node(
+                    f"{L}.attn", "decode_attention",
+                    [f"{L}.qd", f"new_cache_k{i}", f"new_cache_v{i}", "kvlen"],
+                    [f"{L}.att"]))
+            else:
+                nodes.append(Node(
+                    f"{L}.attn", "paged_decode_attention",
+                    [f"{L}.qd", f"new_cache_k{i}", f"new_cache_v{i}",
+                     "block_tables", "kvlen"], [f"{L}.att"]))
+        else:
+            nodes.append(Node(f"{L}.q_heads", "reshape", [f"{L}.q"],
+                              [f"{L}.q4"], {"shape": (batch, t, hq, dh)}))
+            if paged is None:
+                nodes.append(Node(
+                    f"{L}.attn", "chunk_attention",
+                    [f"{L}.q4", f"new_cache_k{i}", f"new_cache_v{i}", "start"],
+                    [f"{L}.att"]))
+            else:
+                nodes.append(Node(
+                    f"{L}.attn", "paged_chunk_attention",
+                    [f"{L}.q4", f"new_cache_k{i}", f"new_cache_v{i}",
+                     "block_tables", "start"], [f"{L}.att"]))
         nodes += [
             Node(f"{L}.attn_flat", "reshape", [f"{L}.att"], [f"{L}.attn2"],
                  {"shape": (batch, t, hq * dh)}),
@@ -184,7 +233,8 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
     for i in range(cfg.n_layers):
         outputs += [f"new_cache_k{i}", f"new_cache_v{i}"]
     mode = "decode" if decode else "prefill"
-    g = Graph(name=f"graph_lm_{mode}_b{batch}_t{t}", inputs=inputs,
+    tag = "paged_" if paged is not None else ""
+    g = Graph(name=f"graph_lm_{tag}{mode}_b{batch}_t{t}", inputs=inputs,
               outputs=outputs, nodes=nodes, params=dict(params))
     g.validate()
     return g
@@ -207,3 +257,27 @@ def build_prefill_graph(cfg: GraphLMConfig, params: Dict[str, Any], *,
     cache rows are overwritten by the next chunk or the first decode)."""
     return _lm_graph(cfg, params, batch=batch, t=chunk, cache_cap=cache_cap,
                      decode=False)
+
+
+def build_paged_decode_graph(cfg: GraphLMConfig, params: Dict[str, Any], *,
+                             batch: int, n_blocks: int, page_size: int,
+                             max_pages: int) -> Graph:
+    """Paged decode step: the dense caches are replaced by one shared
+    page pool per layer (``(n_blocks, page_size, Hk, D)``) plus an int32
+    ``block_tables`` input ``(B, max_pages)`` mapping each slot's logical
+    page to a physical block.  Every activation value name matches the
+    dense variant, so one calibration drives int8 quantization of both
+    (the paged ops themselves are not quantized — they move cache rows)."""
+    return _lm_graph(cfg, params, batch=batch, t=1,
+                     cache_cap=max_pages * page_size, decode=True,
+                     paged=(n_blocks, page_size, max_pages))
+
+
+def build_paged_prefill_graph(cfg: GraphLMConfig, params: Dict[str, Any], *,
+                              batch: int, chunk: int, n_blocks: int,
+                              page_size: int, max_pages: int) -> Graph:
+    """Paged prefill chunk — see :func:`build_paged_decode_graph` for the
+    cache layout; chunk semantics match :func:`build_prefill_graph`."""
+    return _lm_graph(cfg, params, batch=batch, t=chunk,
+                     cache_cap=max_pages * page_size, decode=False,
+                     paged=(n_blocks, page_size, max_pages))

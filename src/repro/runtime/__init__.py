@@ -3,13 +3,16 @@ Program-backed serving engine."""
 
 from repro.runtime.batching import ContinuousBatcher, Request, SlotScheduler
 from repro.runtime.engine import (AsyncEngine, Engine, EngineMetrics,
-                                  EngineRequest, ProgramStepper,
-                                  UnbatchedReference, build_lm_serving)
+                                  EngineRequest, PagedProgramStepper,
+                                  ProgramStepper, UnbatchedReference,
+                                  build_lm_serving)
+from repro.runtime.kv_cache import BlockPool
 from repro.runtime.serve import make_decode_step, make_prefill_step, serve_shardings
 from repro.runtime.train import make_train_step, train_state_shardings
 
 __all__ = ["ContinuousBatcher", "Request", "SlotScheduler",
            "AsyncEngine", "Engine", "EngineMetrics", "EngineRequest",
-           "ProgramStepper", "UnbatchedReference", "build_lm_serving",
+           "ProgramStepper", "PagedProgramStepper", "UnbatchedReference",
+           "BlockPool", "build_lm_serving",
            "make_decode_step", "make_prefill_step", "serve_shardings",
            "make_train_step", "train_state_shardings"]

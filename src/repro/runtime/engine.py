@@ -44,14 +44,17 @@ import numpy as np
 from repro.core.program import compile
 from repro.core.selector import BackendPolicy
 from repro.models.graph_lm import (GraphLMConfig, build_decode_graph,
+                                   build_paged_decode_graph,
+                                   build_paged_prefill_graph,
                                    build_prefill_graph, init_cache_inputs,
-                                   init_lm_params)
+                                   init_lm_params, init_paged_cache_inputs)
 from repro.runtime.batching import SlotScheduler
+from repro.runtime.kv_cache import BlockPool
 
 __all__ = [
     "EngineRequest", "EngineMetrics", "Engine", "AsyncEngine",
-    "ProgramStepper", "UnbatchedReference", "build_lm_serving",
-    "padded_len",
+    "ProgramStepper", "PagedProgramStepper", "UnbatchedReference",
+    "build_lm_serving", "padded_len",
 ]
 
 
@@ -163,6 +166,8 @@ class ProgramStepper:
     (``serve_bench`` reports both).
     """
 
+    paged = False
+
     def __init__(self, cfg: GraphLMConfig, params: Mapping[str, Any], *,
                  n_slots: int, chunk: int, cache_cap: int,
                  policy: Optional[BackendPolicy] = None,
@@ -193,10 +198,10 @@ class ProgramStepper:
             k: jnp.asarray(v)
             for k, v in init_cache_inputs(cfg, n_slots, cache_cap).items()}
 
-    def _call(self, fn, tokens, start, n_new):
+    def _call(self, fn, tokens, start, n_new, *extra):
         cache_args = [self.caches[n] for n in sorted(self.caches)]
         outs = fn(jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(n_new),
-                  *cache_args)
+                  *[jnp.asarray(e) for e in extra], *cache_args)
         logits = np.asarray(outs[0])
         for name, arr in zip(self.cache_names, outs[1:]):
             self.caches[name.replace("new_", "")] = arr
@@ -230,6 +235,124 @@ class ProgramStepper:
         return self._call(self._dec, tokens, start, n_new)
 
 
+class PagedProgramStepper(ProgramStepper):
+    """Paged variant: the per-slot dense caches are replaced by one shared
+    page pool per layer plus per-sequence block tables
+    (:class:`repro.runtime.kv_cache.BlockPool` owns the host-side block
+    bookkeeping; this class owns the device page arrays and the compiled
+    paged Programs).
+
+    The engine's view is unchanged — same ``prefill(tokens, start,
+    n_new)`` / ``decode(...)`` signatures — because this class records the
+    written rows with the pool itself (it sees the token values and
+    ``n_new``), applies any pending copy-on-write page copies to the
+    device arrays, and threads the freshly built block tables into the
+    Program call.  What the engine gains on top is the admission
+    interface: :meth:`try_admit` (claim cached prefix blocks + reserve
+    worst-case growth; ``None`` = not enough blocks right now),
+    :meth:`attach` and :meth:`release`.
+    """
+
+    paged = True
+
+    def __init__(self, cfg: GraphLMConfig, params: Mapping[str, Any], *,
+                 n_slots: int, chunk: int, page_size: int, n_blocks: int,
+                 max_pages: int,
+                 policy: Optional[BackendPolicy] = None,
+                 quantize: Optional[str] = None,
+                 calib_ranges: Optional[Mapping[str, Any]] = None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.chunk = chunk
+        self.page_size = page_size
+        self.n_blocks = n_blocks
+        self.max_pages = max_pages
+        self.cache_cap = max_pages * page_size   # per-sequence logical cap
+        dec_g = build_paged_decode_graph(cfg, params, batch=n_slots,
+                                         n_blocks=n_blocks,
+                                         page_size=page_size,
+                                         max_pages=max_pages)
+        pre_g = build_paged_prefill_graph(cfg, params, batch=n_slots,
+                                          chunk=chunk, n_blocks=n_blocks,
+                                          page_size=page_size,
+                                          max_pages=max_pages)
+        self.decode_program = compile(dec_g, policy=policy, quantize=quantize,
+                                      calib_ranges=calib_ranges)
+        self.prefill_program = compile(pre_g, policy=policy, quantize=quantize,
+                                       calib_ranges=calib_ranges)
+        self.cache_names = [v for v in dec_g.outputs[1:]]
+        cache_inputs = sorted(init_paged_cache_inputs(cfg, 1, 1))
+        self._input_names = ("tokens", "start", "n_new", "block_tables",
+                             *cache_inputs)
+        self._dec = self.decode_program.bind(*self._input_names,
+                                             donate=cache_inputs)
+        self._pre = self.prefill_program.bind(*self._input_names,
+                                              donate=cache_inputs)
+        self.caches: Dict[str, Any] = {
+            k: jnp.asarray(v)
+            for k, v in init_paged_cache_inputs(cfg, n_blocks,
+                                                page_size).items()}
+        self.pool = BlockPool(n_blocks, page_size)
+        self._slot_seq: Dict[int, int] = {}
+
+    # ---------------------------- admission --------------------------- #
+    def try_admit(self, prompt: np.ndarray,
+                  max_new_tokens: int) -> Optional[Tuple[int, int]]:
+        """Claim the request's cached prefix and reserve its worst-case
+        block count.  Returns ``(sequence id, reused_tokens)`` or ``None``
+        when the pool cannot currently cover it (leave it queued)."""
+        return self.pool.admit([int(t) for t in prompt], max_new_tokens)
+
+    def attach(self, slot: int, sid: int) -> None:
+        self._slot_seq[slot] = sid
+
+    def release(self, slot: int, *, register: bool = True) -> None:
+        """Return the slot's blocks to the pool; a finished sequence
+        (``register=True``) leaves its pages in the prefix index for
+        future prompts to share."""
+        self.pool.release(self._slot_seq.pop(slot), register=register)
+
+    # ------------------------------ steps ----------------------------- #
+    def _record_writes(self, tokens: np.ndarray, start: np.ndarray,
+                       n_new: np.ndarray) -> None:
+        """Mirror this step's row writes into the pool (allocating pages
+        and triggering CoW), then apply the resulting page copies to the
+        device arrays BEFORE the Program call overwrites the new rows."""
+        for s in range(self.n_slots):
+            n = int(n_new[s])
+            if n == 0:
+                continue
+            sid = self._slot_seq[s]
+            seq = self.pool.sequence(sid)
+            assert seq.n_tokens == int(start[s]), \
+                f"slot {s}: pool at {seq.n_tokens}, engine writing {start[s]}"
+            self.pool.append(sid, [int(t) for t in tokens[s, :n]])
+        copies = self.pool.take_copies()
+        if copies:
+            src = jnp.asarray([c[0] for c in copies], jnp.int32)
+            dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+            for name in list(self.caches):
+                arr = self.caches[name]
+                self.caches[name] = arr.at[dst].set(arr[src])
+
+    def _tables(self) -> np.ndarray:
+        bt = np.zeros((self.n_slots, self.max_pages), np.int32)
+        for s, sid in self._slot_seq.items():
+            table = self.pool.block_table(sid)
+            bt[s, :len(table)] = table
+        return bt
+
+    def prefill(self, tokens: np.ndarray, start: np.ndarray,
+                n_new: np.ndarray) -> np.ndarray:
+        self._record_writes(tokens, start, n_new)
+        return self._call(self._pre, tokens, start, n_new, self._tables())
+
+    def decode(self, tokens: np.ndarray, start: np.ndarray,
+               n_new: np.ndarray) -> np.ndarray:
+        self._record_writes(tokens, start, n_new)
+        return self._call(self._dec, tokens, start, n_new, self._tables())
+
+
 # --------------------------------------------------------------------------- #
 # The engine
 # --------------------------------------------------------------------------- #
@@ -259,6 +382,7 @@ class Engine:
         self.n_slots = stepper.n_slots
         self.chunk = stepper.chunk
         self.cache_cap = stepper.cache_cap
+        self.paged = stepper.paged
         self.eos_id = eos_id
         self.sched = SlotScheduler(self.n_slots, max_queue=max_queue)
         self.slots: List[Optional[_SlotState]] = [None] * self.n_slots
@@ -268,18 +392,32 @@ class Engine:
         self.metrics = EngineMetrics(n_slots=self.n_slots)
         self._last_was_prefill = False
         self._t0: Optional[float] = None
+        # (head uid, pool version) of the last admission gate refusal —
+        # skips re-running the prefix lookup every tick while nothing that
+        # could free blocks has happened
+        self._gate_blocked: Optional[Tuple[int, int]] = None
 
     # ------------------------------------------------------------------ #
     def submit(self, req: EngineRequest) -> bool:
         """Admission control: False (with ``req.dropped`` set) when the
-        queue is full or the request cannot fit the cache."""
+        queue is full or the request could never fit the cache.
+
+        The fit check uses the UNPADDED prompt length: the cache stores
+        ``len(prompt) + max_new_tokens - 1`` rows at most (the final
+        generated token is emitted, never written back), and prefill
+        padding rows are masked out of the cache write — so a prompt of
+        exactly ``cache_cap`` tokens with ``max_new_tokens == 1`` is
+        admissible.  (It used to be rejected after rounding the prompt up
+        to a whole number of chunks.)"""
         req.submit_tick = self.tick
         req.t_submit = time.perf_counter()
         if len(req.prompt) == 0 or req.max_new_tokens < 1:
             return self._reject(req, "empty")
-        need = max(padded_len(len(req.prompt), self.chunk),
-                   len(req.prompt) + req.max_new_tokens)
+        need = len(req.prompt) + req.max_new_tokens - 1
         if need > self.cache_cap:
+            return self._reject(req, "too_long")
+        if self.paged and not self.stepper.pool.fits_ever(
+                len(req.prompt), req.max_new_tokens):
             return self._reject(req, "too_long")
         if not self.sched.submit(req):
             req.dropped = "queue_full"
@@ -326,6 +464,9 @@ class Engine:
         assert req is st.req
         req.done = True
         self.slots[slot] = None
+        if self.paged:
+            # finished sequences donate their pages to the prefix index
+            self.stepper.release(slot, register=True)
         self.finished.append(req)
         self.metrics.n_finished += 1
         self._finalize(req)
@@ -337,6 +478,8 @@ class Engine:
         assert req is st.req
         req.dropped = reason
         self.slots[slot] = None
+        if self.paged:
+            self.stepper.release(slot, register=False)
         self.dropped.append(req)
         self.metrics.n_dropped += 1
         self._finalize(req)
@@ -362,8 +505,39 @@ class Engine:
         self.tick += 1
         self.metrics.ticks += 1
         self._expire()
-        for slot, req in self.sched.admit():
-            self.slots[slot] = _SlotState(req=req)
+        if self.paged:
+            # admission is gated on BLOCK availability, not slot count
+            # alone.  The gate performs the pool admission (claims cached
+            # prefix blocks + reserves worst-case growth) so consecutive
+            # admissions in one tick see each other's reservations.
+            pool = self.stepper.pool
+            head = self.sched.peek()
+            if head is None or self._gate_blocked != (head.uid, pool.version):
+                claims: Dict[int, Tuple[int, int]] = {}
+                refused: List[EngineRequest] = []
+
+                def gate(req: EngineRequest) -> bool:
+                    res = self.stepper.try_admit(req.prompt,
+                                                 req.max_new_tokens)
+                    if res is None:
+                        refused.append(req)
+                        return False
+                    claims[id(req)] = res
+                    return True
+
+                for slot, req in self.sched.admit(gate):
+                    sid, reused = claims[id(req)]
+                    self.stepper.attach(slot, sid)
+                    # a prefix hit fast-forwards prefill past the reused rows
+                    self.slots[slot] = _SlotState(req=req, pos=reused)
+                # remember a refused head: until a block reaches refcount 0
+                # or a reservation returns (pool.version bump), re-running
+                # its prefix lookup every tick cannot change the answer
+                self._gate_blocked = ((refused[0].uid, pool.version)
+                                      if refused else None)
+        else:
+            for slot, req in self.sched.admit():
+                self.slots[slot] = _SlotState(req=req)
         prefill = [i for i, st in enumerate(self.slots)
                    if st is not None and not st.decoding]
         decode = [i for i, st in enumerate(self.slots)
@@ -555,8 +729,10 @@ class UnbatchedReference:
         if len(prompt) == 0 or max_new_tokens < 1:
             raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
         c = len(prompt) if chunk is None else chunk
-        if padded_len(len(prompt), c) > self.cache_cap \
-                or len(prompt) + max_new_tokens > self.cache_cap:
+        # unpadded admission, matching Engine.submit: at most
+        # len(prompt) + max_new - 1 rows are ever written (chunk padding
+        # rows are masked out of the cache write)
+        if len(prompt) + max_new_tokens - 1 > self.cache_cap:
             raise ValueError(f"prompt {len(prompt)} + {max_new_tokens} new "
                              f"tokens exceeds cache cap {self.cache_cap}")
         pre, cache_outs = self._prefill_for(c)
@@ -655,21 +831,42 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                      seed: int = 0, eos_id: int = -1,
                      max_queue: Optional[int] = None,
                      params: Optional[Mapping[str, Any]] = None,
+                     paged: bool = False, page_size: int = 8,
+                     n_blocks: Optional[int] = None,
+                     max_pages: Optional[int] = None,
                      ) -> Tuple[Engine, UnbatchedReference]:
     """Compile the serving Programs for a graph LM and return the engine
     plus its unbatched reference (sharing weights and, under int8, the
-    calibrated activation scales)."""
+    calibrated activation scales).
+
+    ``paged=True`` swaps the dense per-slot caches for the paged KV cache
+    (:class:`PagedProgramStepper`): ``cache_cap`` becomes the per-sequence
+    logical capacity (rounded up to whole pages of ``page_size``) and
+    ``n_blocks`` sizes the shared pool — defaulting to the same total
+    memory as the dense layout (``n_slots * ceil(cache_cap / page_size)``
+    pages).  The reference stays dense either way: it is the paged
+    engine's token-exactness oracle."""
     cfg = cfg or GraphLMConfig()
     params = dict(params) if params is not None else init_lm_params(cfg, seed)
     ranges = None
     if quantize is not None:
         ranges = shared_calibration(cfg, params, chunk=chunk,
                                     cache_cap=cache_cap, seed=seed)
-    stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
-                             cache_cap=cache_cap, policy=policy,
-                             quantize=quantize, calib_ranges=ranges)
+    if paged:
+        mp = max_pages if max_pages is not None else -(-cache_cap // page_size)
+        nb = n_blocks if n_blocks is not None else n_slots * mp
+        stepper: ProgramStepper = PagedProgramStepper(
+            cfg, params, n_slots=n_slots, chunk=chunk, page_size=page_size,
+            n_blocks=nb, max_pages=mp, policy=policy, quantize=quantize,
+            calib_ranges=ranges)
+    else:
+        stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
+                                 cache_cap=cache_cap, policy=policy,
+                                 quantize=quantize, calib_ranges=ranges)
     engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue)
-    reference = UnbatchedReference(cfg, params, cache_cap=cache_cap,
+    reference = UnbatchedReference(cfg, params,
+                                   cache_cap=max(cache_cap,
+                                                 stepper.cache_cap),
                                    policy=policy, quantize=quantize,
                                    calib_ranges=ranges)
     return engine, reference

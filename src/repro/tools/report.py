@@ -24,7 +24,7 @@ import numpy as np
 
 __all__ = ["load_records", "roofline_table", "dryrun_table",
            "weight_bytes", "activation_bytes", "footprint_table",
-           "serving_table", "backend_table"]
+           "serving_table", "backend_table", "paged_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -153,6 +153,34 @@ def backend_table(records: Sequence[Tuple[str, Dict]]) -> str:
     return "\n".join(out)
 
 
+def paged_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown paged-KV-cache table from serve_bench JSON records (the
+    ``"paged"`` section): concurrent-request capacity at equal memory
+    (dense vs paged), prefix-hit vs cold TTFT with the deterministic
+    prefill-tick counts, prefix hit rate, CoW count and internal
+    fragmentation of the block pool."""
+    out = ["| config | page x blocks | concurrent (dense -> paged) | "
+           "ttft cold | ttft hit | prefill ticks (cold -> hit) | "
+           "hit rate | CoW | frag | exact |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for label, rec in records:
+        pg = rec.get("paged")
+        if not pg:
+            continue
+        cap, pre, pool = pg["capacity"], pg["prefix"], pg.get("pool", {})
+        out.append(
+            f"| {label} | {pg['page_size']} x {pg['n_blocks']} | "
+            f"{cap['dense_concurrent']} -> {cap['paged_concurrent']} "
+            f"({cap['ratio']:.1f}x) | "
+            f"{_fmt_s(pre.get('ttft_cold_s') or 0)} | "
+            f"{_fmt_s(pre.get('ttft_hit_s') or 0)} | "
+            f"{pre['prefill_ticks_cold']} -> {pre['prefill_ticks_hit']} | "
+            f"{pool.get('hit_rate', 0):.0%} | {pool.get('cow_count', 0)} | "
+            f"{pool.get('fragmentation', 0):.0%} | "
+            f"{'yes' if pg.get('token_exact') else 'NO'} |")
+    return "\n".join(out)
+
+
 def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
     rows = [r for r in recs if r["mesh"] == mesh]
     out = ["| arch | shape | compute | memory | collective | bottleneck | "
@@ -227,6 +255,10 @@ def main() -> None:
                for _, rec in serve):
             print("## Serving-op backends (serve_bench backend sweep)\n")
             print(backend_table(serve))
+            print()
+        if any("paged" in rec for _, rec in serve):
+            print("## Paged KV cache (serve_bench paged section)\n")
+            print(paged_table(serve))
             print()
     recs = load_records(args.dir)
     print("## Summary\n")

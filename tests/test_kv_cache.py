@@ -1,0 +1,249 @@
+"""BlockPool property suite — the paged KV cache's host-side invariants.
+
+Randomised (deterministic + hypothesis when installed) sequences of
+admit / append / fork / finish / drop are replayed against
+:class:`repro.runtime.kv_cache.BlockPool`, asserting after every step:
+
+* no block is leaked or double-freed — every block is in exactly one of
+  free / cached (refcount 0, prefix-indexed, evictable) / live;
+* a block's refcount equals the number of block tables containing it;
+* reservations cover worst-case growth (an admitted sequence can always
+  reach its declared ``max_new_tokens`` — ``_alloc`` asserts otherwise);
+* when everything finishes, refcounts return to zero and
+  free + cached == n_blocks.
+
+Plus directed tests for prefix matching, copy-on-write divergence,
+partial-tail sharing, LRU eviction and the stats counters.
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime.kv_cache import BlockPool, pages_needed
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _prompt(rng, n, vocab=13):
+    return [int(t) for t in rng.integers(0, vocab, size=n)]
+
+
+# --------------------------------------------------------------------------- #
+# directed unit tests
+# --------------------------------------------------------------------------- #
+
+def test_pages_needed_last_token_not_written():
+    # L + max_new - 1 rows: the final generated token is never written back
+    assert pages_needed(8, 1, 8) == 1       # exactly one page
+    assert pages_needed(8, 2, 8) == 2
+    assert pages_needed(1, 1, 8) == 1
+    assert pages_needed(16, 9, 8) == 3
+
+
+def test_admit_append_finish_roundtrip():
+    pool = BlockPool(8, 4)
+    rng = np.random.default_rng(0)
+    p = _prompt(rng, 6)
+    sid, reused = pool.admit(p, 3)
+    assert reused == 0
+    pool.append(sid, p)
+    pool.append(sid, [1, 2])                 # generated tokens
+    pool.check_integrity()
+    assert pool.sequence(sid).n_tokens == 8
+    pool.release(sid)
+    pool.check_integrity()
+    st = pool.stats()
+    assert st["live_blocks"] == 0 and st["reserved_blocks"] == 0
+    assert st["free_blocks"] + st["cached_blocks"] == 8
+
+
+def test_full_page_prefix_hit_and_cap():
+    pool = BlockPool(16, 4)
+    p = list(range(10))
+    sid, reused = pool.admit(p, 2)
+    assert reused == 0
+    pool.append(sid, p)
+    pool.release(sid)
+    # identical prompt: both full pages hit, plus one row of the
+    # registered partial tail — capped at len-1 = 9
+    sid2, reused2 = pool.admit(p, 2)
+    assert reused2 == 9
+    assert pool.block_table(sid2) == pool.block_table(sid2)  # smoke
+    pool.release(sid2, register=False)
+    # prompt sharing only the first page
+    q = p[:4] + [99] * 6
+    sid3, reused3 = pool.admit(q, 2)
+    assert reused3 == 4
+    pool.release(sid3, register=False)
+    # a 9-token prompt can reuse at most 8 (= len-1) tokens
+    sid4, reused4 = pool.admit(p[:9], 2)
+    assert reused4 == 8
+    pool.release(sid4, register=False)
+    pool.check_integrity()
+
+
+def test_partial_tail_share_triggers_cow():
+    pool = BlockPool(16, 4)
+    p = list(range(6))                        # 1 full page + 2-row tail
+    sid, _ = pool.admit(p, 1)
+    pool.append(sid, p)
+    pool.release(sid)                         # registers the partial tail
+    assert pool.stats()["indexed_partial_pages"] == 1
+    # new prompt matching the full page + 1 row of the tail
+    q = p[:5] + [77, 78]
+    sid2, reused = pool.admit(q, 2)
+    assert reused == 5                        # 4 (full page) + 1 (tail row)
+    before = pool.cow_count
+    pool.append(sid2, q[5:])                  # first write into shared tail
+    assert pool.cow_count == before + 1
+    src, dst = pool.take_copies()[0]
+    assert src != dst
+    pool.check_integrity()
+    pool.release(sid2, register=False)
+    pool.check_integrity()
+
+
+def test_fork_divergence_cow_both_ways():
+    pool = BlockPool(16, 4)
+    p = list(range(5))
+    sid, _ = pool.admit(p, 4)
+    pool.append(sid, p)
+    nsid = pool.fork(sid, 4)
+    assert nsid is not None
+    pool.check_integrity()
+    before = pool.cow_count
+    pool.append(sid, [50])                    # parent writes shared tail
+    pool.append(nsid, [60])                   # then the clone writes
+    assert pool.cow_count >= before + 1       # at least one side copied
+    assert pool.sequence(sid).tokens[-1] == 50
+    assert pool.sequence(nsid).tokens[-1] == 60
+    pool.release(sid)
+    pool.release(nsid)
+    pool.check_integrity()
+    assert pool.stats()["live_blocks"] == 0
+
+
+def test_admit_defers_when_pool_exhausted_then_recovers():
+    pool = BlockPool(4, 4)
+    rng = np.random.default_rng(1)
+    a = _prompt(rng, 8)
+    sid, _ = pool.admit(a, 8)                 # needs 8+8-1=15 rows -> 4 pages
+    assert sid is not None
+    assert pool.admit(_prompt(rng, 4), 2) is None   # nothing left
+    assert pool.n_admit_deferred == 1
+    pool.append(sid, a)
+    pool.release(sid, register=False)
+    assert pool.admit(_prompt(rng, 4), 2) is not None
+    pool.check_integrity()
+
+
+def test_lru_eviction_reclaims_cached_blocks():
+    pool = BlockPool(4, 4)
+    p1, p2 = list(range(4)), list(range(10, 14))
+    for p in (p1, p2):
+        sid, _ = pool.admit(p, 5)             # 4+5-1=8 rows -> 2 pages
+        pool.append(sid, p + [1])
+        pool.release(sid)                     # full page + tail cached
+    assert pool.stats()["cached_blocks"] == 4
+    # new admission must evict from the LRU cache to find blocks
+    sid, reused = pool.admit(list(range(20, 26)), 4)
+    assert sid is not None and reused == 0
+    pool.append(sid, list(range(20, 26)))
+    assert pool.evictions > 0
+    pool.check_integrity()
+    pool.release(sid, register=False)
+    pool.check_integrity()
+
+
+def test_stats_shape():
+    pool = BlockPool(8, 4)
+    s = pool.stats()
+    for key in ("n_blocks", "page_size", "free_blocks", "cached_blocks",
+                "live_blocks", "fragmentation", "hit_rate", "cow_count",
+                "evictions", "n_admit_deferred"):
+        assert key in s, key
+    assert s["free_blocks"] == 8
+
+
+# --------------------------------------------------------------------------- #
+# randomized property drive
+# --------------------------------------------------------------------------- #
+
+def _drive(n_blocks, page_size, ops, seed, vocab=7):
+    """Replay a random op sequence, checking integrity at every step.
+    Small vocab on purpose: shared prefixes (and therefore CoW) happen."""
+    pool = BlockPool(n_blocks, page_size)
+    rng = np.random.default_rng(seed)
+    live = {}                                 # sid -> (budget_tokens_left)
+    for op in ops:
+        if op == "admit":
+            plen = int(rng.integers(1, 3 * page_size))
+            max_new = int(rng.integers(1, 2 * page_size))
+            if not pool.fits_ever(plen, max_new):
+                continue
+            prompt = _prompt(rng, plen, vocab)
+            res = pool.admit(prompt, max_new)
+            if res is not None:
+                sid, reused = res
+                assert 0 <= reused <= plen - 1
+                # prefill the un-reused prompt tail immediately
+                pool.append(sid, prompt[reused:])
+                live[sid] = max_new - 1       # decode budget (first token
+                                              # comes from prefill logits)
+        elif op == "append" and live:
+            sid = int(rng.choice(list(live)))
+            if live[sid] > 0:
+                pool.append(sid, _prompt(rng, 1, vocab))
+                live[sid] -= 1
+        elif op == "fork" and live:
+            sid = int(rng.choice(list(live)))
+            nsid = pool.fork(sid, page_size)
+            if nsid is not None:
+                live[nsid] = page_size - 1
+        elif op in ("finish", "drop") and live:
+            sid = int(rng.choice(list(live)))
+            del live[sid]
+            pool.release(sid, register=op == "finish")
+        pool.check_integrity()
+    for sid in list(live):
+        pool.release(sid)
+    pool.check_integrity()
+    st = pool.stats()
+    assert st["live_blocks"] == 0 and st["reserved_blocks"] == 0
+    assert st["free_blocks"] + st["cached_blocks"] == n_blocks
+    return pool
+
+
+def test_pool_randomized_no_leak_no_double_free():
+    rng = np.random.default_rng(42)
+    total_cow = 0
+    for trial in range(30):
+        n_blocks = int(rng.integers(4, 24))
+        page = int(rng.integers(2, 9))
+        ops = list(rng.choice(["admit", "append", "append", "fork",
+                               "finish", "drop"],
+                              size=int(rng.integers(10, 80))))
+        pool = _drive(n_blocks, page, ops, seed=trial)
+        total_cow += pool.cow_count
+    assert total_cow > 0, "random drive never exercised copy-on-write"
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(4, 24), st.integers(2, 8),
+           st.lists(st.sampled_from(["admit", "append", "fork",
+                                     "finish", "drop"]),
+                    min_size=1, max_size=80),
+           st.integers(0, 2 ** 16))
+    @settings(max_examples=80, deadline=None)
+    def test_pool_invariants_hypothesis(n_blocks, page, ops, seed):
+        _drive(n_blocks, page, ops, seed)
+
+
+@pytest.mark.parametrize("bad", [(0, 4), (4, 0)])
+def test_pool_rejects_degenerate_shapes(bad):
+    with pytest.raises(ValueError):
+        BlockPool(*bad)
