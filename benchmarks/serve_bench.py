@@ -42,9 +42,14 @@ from repro.core import AutotunePolicy, FixedPolicy, default_cache_path
 from repro.models.graph_lm import GraphLMConfig, init_lm_params
 from repro.runtime.engine import (EngineRequest, ProgramStepper,
                                   build_lm_serving, padded_len)
-from repro.runtime.kv_cache import pages_needed
+from repro.runtime.kv_cache import kv_page_bytes, pages_needed
 from repro.tools.docgen import SERVING_OPS
 from repro.tools.report import _fmt_assignment
+
+# bump when the JSON record's shape changes incompatibly (BENCH_serve.json
+# is a tracked trajectory — downstream tooling keys on this)
+SCHEMA_VERSION = 2
+DEFAULT_JSON = "BENCH_serve.json"
 
 SMOKE_CFG = GraphLMConfig(vocab=61, d_model=32, n_layers=1, n_heads=4,
                           n_kv_heads=2, d_ff=64)
@@ -314,10 +319,15 @@ def _paged_experiment(cfg, *, n_slots, chunk, cache_cap, page_size,
              and warmup.out_tokens == paged_ref.generate(warmup.prompt, 4))
     cold_ticks = (cold.first_token_tick or 0) - cold.submit_tick
     hit_ticks = (hit.first_token_tick or 0) - hit.submit_tick
+    page_b = kv_page_bytes(cfg.n_layers, cfg.n_kv_heads, cfg.d_head,
+                           page_size)
     return {
+        "kv_dtype": "float32",
         "page_size": page_size,
         "n_blocks": n_blocks,
         "memory_rows": n_blocks * page_size,
+        "page_bytes": page_b,
+        "pool_bytes": n_blocks * page_b,
         "capacity": {
             "dense_slots": n_slots,
             "dense_concurrent": dense_peak,
@@ -339,6 +349,92 @@ def _paged_experiment(cfg, *, n_slots, chunk, cache_cap, page_size,
         "token_exact": bool(exact),
         "pool": pool0.stats(),
         "backends": _serving_assignment(paged_eng.stepper),
+    }
+
+
+def _paged_kv8_experiment(cfg, *, chunk, cache_cap, page_size, quantize,
+                          seed: int, fp32_paged: Dict[str, Any]
+                          ) -> Dict[str, Any]:
+    """The quantized-cache record: an int8-paged engine given the SAME pool
+    byte budget as the fp32-paged run. int8 pages are ~4x smaller, so the
+    same bytes buy ~4x the blocks; the headline is peak concurrency at
+    equal memory (acceptance bar: >= 1.8x). Token-exactness vs the fp32
+    dense reference is checked on the three admission paths — cold,
+    full-prefix hit, and CoW divergence into a shared partial tail page."""
+    rng = np.random.default_rng(seed + 1)
+    fp32_bytes = fp32_paged["pool_bytes"]
+    page_b = kv_page_bytes(cfg.n_layers, cfg.n_kv_heads, cfg.d_head,
+                           page_size, "int8")
+    n_blocks = fp32_bytes // page_b         # equal device memory
+    plen, max_new = 12, 6                   # same shape as the fp32 run
+    per_req = pages_needed(plen, max_new, page_size)
+    slots = min(n_blocks // per_req + 1, 16)
+    engine, ref = build_lm_serving(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        paged=True, page_size=page_size, n_blocks=n_blocks,
+        kv_dtype="int8", quantize=quantize)
+
+    for i in range(2 * slots):
+        p = rng.integers(0, cfg.vocab, size=plen).astype(np.int32)
+        engine.submit(EngineRequest(uid=i, prompt=p, max_new_tokens=max_new))
+    peak = 0
+    while engine.has_work() and engine.tick < 20_000:
+        engine.step()
+        peak = max(peak, engine.sched.busy_slots)
+    fp32_peak = fp32_paged["capacity"]["paged_concurrent"]
+
+    def one_request(uid: int, prompt: np.ndarray) -> EngineRequest:
+        req = EngineRequest(uid=uid, prompt=np.asarray(prompt, np.int32),
+                            max_new_tokens=4)
+        assert engine.submit(req), req.dropped
+        engine.run(max_ticks=engine.tick + 10_000)
+        return req
+
+    pool = engine.stepper.pool
+    prefix = rng.integers(0, cfg.vocab, size=14).astype(np.int32)
+    cold = one_request(2001, prefix)        # registers full + partial pages
+    hits0 = pool.hit_tokens
+    hit = one_request(2002, np.concatenate(
+        [prefix, rng.integers(0, cfg.vocab, size=3).astype(np.int32)]))
+    hit_tokens = pool.hit_tokens - hits0
+    # CoW divergence: replay the cold request's full token stream (prompt
+    # plus written-back outputs) so its frozen partial tail page is claimed,
+    # then one diverging token forces the append to copy that int8 page and
+    # its scale row before writing
+    cow0 = pool.cow_count
+    cow_prompt = np.concatenate(
+        [prefix, np.asarray(cold.out_tokens[:3], np.int32),
+         np.asarray([(int(cold.out_tokens[3]) + 1) % cfg.vocab], np.int32)])
+    cow = one_request(2003, cow_prompt)
+    cow_copies = pool.cow_count - cow0
+
+    exact = {
+        "cold": bool(cold.out_tokens == ref.generate(cold.prompt, 4)),
+        "prefix_hit": bool(hit.out_tokens == ref.generate(hit.prompt, 4)),
+        "cow": bool(cow.out_tokens == ref.generate(cow_prompt, 4)),
+    }
+    exact["all"] = all(exact.values())
+    return {
+        "kv_dtype": "int8",
+        "page_size": page_size,
+        "n_blocks": n_blocks,
+        "page_bytes": page_b,
+        "pool_bytes": n_blocks * page_b,
+        "fp32_pool_bytes": fp32_bytes,
+        "capacity": {
+            "paged_slots": slots,
+            "paged_concurrent": peak,
+            "fp32_paged_concurrent": fp32_peak,
+            "equal_memory_vs_fp32_paged":
+                peak / fp32_peak if fp32_peak else 0.0,
+            "request_shape": {"prompt_len": plen, "max_new": max_new,
+                              "pages_per_request": per_req},
+        },
+        "prefix": {"hit_tokens": int(hit_tokens),
+                   "cow_copies": int(cow_copies)},
+        "token_exact": exact,
+        "pool": pool.stats(),
+        "backends": _serving_assignment(engine.stepper),
     }
 
 
@@ -384,6 +480,7 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
 
     workload = _workload(cfg, n_requests, max_new, seed)
     result: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
         "config": {"smoke": smoke, "quantize": quantize, "n_slots": slots,
                    "chunk": chunk, "cache_cap": cache_cap,
                    "n_requests": n_requests, "max_new_tokens": max_new,
@@ -402,6 +499,9 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["paged"] = _paged_experiment(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         page_size=8, quantize=quantize, seed=seed)
+    result["paged_kv8"] = _paged_kv8_experiment(
+        cfg, chunk=chunk, cache_cap=cache_cap, page_size=8,
+        quantize=quantize, seed=seed, fp32_paged=result["paged"])
     params = init_lm_params(cfg, 0)
     result["backend_sweep"] = _backend_sweep(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
@@ -423,8 +523,10 @@ def main(argv=None) -> int:
     ap.add_argument("--autotune-cache", metavar="PATH", default=None,
                     help="persistent autotune cache file (default: "
                          "ORPHEUS_AUTOTUNE_CACHE or ~/.cache/orpheus)")
-    ap.add_argument("--json", metavar="PATH",
-                    help="write the JSON record here instead of stdout")
+    ap.add_argument("--json", metavar="PATH", nargs="?", const=DEFAULT_JSON,
+                    help="write the schema-versioned JSON record here "
+                         f"instead of stdout (bare --json: {DEFAULT_JSON} "
+                         "at the repo root)")
     args = ap.parse_args(argv)
 
     rec = run(smoke=args.smoke, quantize="int8" if args.int8 else None,
@@ -454,6 +556,14 @@ def main(argv=None) -> int:
           f"{(pre['ttft_cold_s'] or 0)*1e3:.1f}ms "
           f"({pre['prefill_ticks_hit']} vs {pre['prefill_ticks_cold']} "
           f"prefill ticks); exact={pg['token_exact']}")
+    k8 = rec["paged_kv8"]
+    k8c = k8["capacity"]
+    print(f"# paged kv8: page {k8['page_bytes']}B x {k8['n_blocks']} blocks "
+          f"(= fp32 pool bytes); concurrent {k8c['paged_concurrent']} vs "
+          f"fp32 paged {k8c['fp32_paged_concurrent']} "
+          f"({k8c['equal_memory_vs_fp32_paged']:.1f}x at equal memory); "
+          f"cow copies {k8['prefix']['cow_copies']}; "
+          f"exact={k8['token_exact']['all']}")
     for label, row in rec["backend_sweep"].items():
         print(f"# sweep[{label:>6}]: prefill {row['prefill_tok_s']:,.0f} tok/s "
               f"({row['prefill_vs_ref']:.2f}x ref), "

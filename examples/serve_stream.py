@@ -11,7 +11,12 @@ others are decoding; chunked prefill keeps their token streams flowing
 pool + block tables + prefix reuse — see docs/serving-guide.md §3); the
 pool's hit/CoW/fragmentation stats are printed at the end.
 
+--kv-dtype int8 additionally stores the paged pool as int8 pages with
+per-(page, kv-head) scales — same streams, ~4x the KV capacity per byte
+(implies --paged).
+
 Run:  PYTHONPATH=src python examples/serve_stream.py [--int8] [--paged]
+          [--kv-dtype {float32,int8}]
 """
 
 import argparse
@@ -33,10 +38,11 @@ async def client(name: str, aeng: AsyncEngine, prompt, max_new: int, t0: float):
     return toks
 
 
-async def amain(quantize, paged):
+async def amain(quantize, paged, kv_dtype):
     cfg = GraphLMConfig()
     engine, ref = build_lm_serving(cfg, n_slots=4, chunk=8, cache_cap=96,
-                                   quantize=quantize, paged=paged)
+                                   quantize=quantize, paged=paged,
+                                   kv_dtype=kv_dtype)
     aeng = AsyncEngine(engine)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
@@ -58,7 +64,8 @@ async def amain(quantize, paged):
           f"prefill/decode ticks {m['prefill_ticks']}/{m['decode_ticks']}")
     if engine.paged:
         s = engine.stepper.pool.stats()
-        print(f"paged pool: {s['n_blocks']} blocks x {s['page_size']} rows, "
+        print(f"paged pool: {s['n_blocks']} blocks x {s['page_size']} rows "
+              f"({s['kv_dtype']}, {s['page_bytes']}B/page), "
               f"hit rate {s['hit_rate']:.0%}, CoW {s['cow_count']}, "
               f"fragmentation {s['fragmentation']:.0%}")
 
@@ -69,8 +76,12 @@ def main() -> None:
                     help="serve int8-quantized Programs")
     ap.add_argument("--paged", action="store_true",
                     help="serve through the paged KV cache (prefix reuse)")
+    ap.add_argument("--kv-dtype", choices=("float32", "int8"),
+                    default="float32",
+                    help="paged KV page storage dtype (int8 implies --paged)")
     args = ap.parse_args()
-    asyncio.run(amain("int8" if args.int8 else None, args.paged))
+    paged = args.paged or args.kv_dtype != "float32"
+    asyncio.run(amain("int8" if args.int8 else None, paged, args.kv_dtype))
 
 
 if __name__ == "__main__":

@@ -31,7 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-__all__ = ["flash_attention", "flash_chunk_attention"]
+__all__ = ["flash_attention", "flash_chunk_attention",
+           "flash_paged_chunk_attention"]
 
 _NEG_INF = -1e30
 
@@ -150,7 +151,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 def _chunk_flash_kernel(start_ref, q_ref, k_ref, v_ref, o_ref,
                         acc_ref, m_ref, l_ref, *,
-                        scale: float, bq: int, bkv: int, n_kv_blocks: int):
+                        scale: float, bq: int, bkv: int, n_kv_blocks: int,
+                        ksc_ref=None, vsc_ref=None):
     """Same online-softmax recurrence as :func:`_flash_kernel`, with the
     query offset a per-sequence runtime value: query row t of the chunk
     sits at absolute position ``start + t`` and attends cache columns
@@ -175,6 +177,11 @@ def _chunk_flash_kernel(start_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
         k = k_ref[0].astype(jnp.float32)                  # (bkv, D)
         v = v_ref[0].astype(jnp.float32)
+        if ksc_ref is not None:
+            # int8 tiles: dequantize in-register with the per-(page, head)
+            # scalar that rode along in SMEM — no fp32 cache copy exists
+            k = k * ksc_ref[0]
+            v = v * vsc_ref[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (bq,bkv)
         rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
@@ -256,4 +263,125 @@ def flash_chunk_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         interpret=interpret,
         name="flash_chunk_attention",
     )(start_r, qr, kr, vr)
+    return out.reshape(b, hq, t, dv).transpose(0, 2, 1, 3)
+
+
+# --------------------------------------------------------------------------- #
+# Paged chunk-prefill flash attention — the KV "block" of grid step pi is
+# PHYSICAL page block_tables[b, pi], reached via a scalar-prefetched index
+# map (same trick as flash_decode.flash_paged_decode); the dense gather
+# copy the ref/xla paged backends pay never exists here.  Optional int8
+# mode: per-(page, head) scales ride along in SMEM through the same table
+# indices and dequant happens in-register inside the online-softmax loop.
+# --------------------------------------------------------------------------- #
+
+def _paged_chunk_kernel(bt_ref, start_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, *,
+                        scale: float, bq: int, page: int, n_pages: int):
+    del bt_ref                     # consumed by the index maps
+    _chunk_flash_kernel(start_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, scale=scale, bq=bq,
+                        bkv=page, n_kv_blocks=n_pages)
+
+
+def _paged_chunk_q_kernel(bt_ref, start_ref, q_ref, k_ref, ksc_ref, v_ref,
+                          vsc_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                          scale: float, bq: int, page: int, n_pages: int):
+    del bt_ref
+    _chunk_flash_kernel(start_ref, q_ref, k_ref, v_ref, o_ref,
+                        acc_ref, m_ref, l_ref, scale=scale, bq=bq,
+                        bkv=page, n_kv_blocks=n_pages,
+                        ksc_ref=ksc_ref, vsc_ref=vsc_ref)
+
+
+def flash_paged_chunk_attention(q: jax.Array, pages_k: jax.Array,
+                                pages_v: jax.Array, block_tables: jax.Array,
+                                start: jax.Array, *,
+                                k_scales: Optional[jax.Array] = None,
+                                v_scales: Optional[jax.Array] = None,
+                                scale: Optional[float] = None,
+                                block_q: int = 256,
+                                interpret: bool = False) -> jax.Array:
+    """Chunked-prefill flash attention reading K/V through block tables.
+
+    q (B, T, Hq, D), pages_k/v (N, P, Hk, D), block_tables (B, MP) int32,
+    start (B,) int32 -> (B, T, Hq, D).  Query row t of sequence b sits at
+    absolute position ``start[b] + t`` and attends cache positions
+    ``<= start[b] + t`` — the ``paged_chunk_attention`` op contract.
+    Offset-causal masking covers garbage table entries: logical pages past
+    the chunk's frontier are wholly masked, so they may hold any valid
+    block id.
+
+    With ``k_scales``/``v_scales`` ((N, Hk) float32) the pages are int8
+    and each (page, head) tile is dequantized in-register."""
+    b, t, hq, d = q.shape
+    n_blocks, page, hkv = pages_k.shape[0], pages_k.shape[1], pages_k.shape[2]
+    dv = pages_v.shape[3]
+    n_pages = block_tables.shape[1]
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    quant = k_scales is not None
+    assert quant == (v_scales is not None), "need both k_scales and v_scales"
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    bq = min(block_q, t)
+    assert t % bq == 0, f"chunk length must divide block_q: {t} % {bq}"
+    nq = t // bq
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * hq, t, d)
+    # pages: (N, P, Hk, D) -> head-major (N*Hk, P, D) so one (block, head)
+    # pair is a contiguous (P, D) tile the index map can address directly
+    kr = pages_k.transpose(0, 2, 1, 3).reshape(n_blocks * hkv, page, d)
+    vr = pages_v.transpose(0, 2, 1, 3).reshape(n_blocks * hkv, page, dv)
+    start_r = jnp.repeat(start.astype(jnp.int32), hq)           # (B*Hq,)
+    tables = jnp.clip(block_tables, 0, n_blocks - 1).astype(jnp.int32)
+
+    def q_map(bh, qi, pi, bt):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, pi, bt):
+        # physical (block, head) row: sequence bh//Hq, kv head of q head
+        return (bt[bh // hq, pi] * hkv + (bh % hq) // group, 0, 0)
+
+    def sc_map(bh, qi, pi, bt):
+        return (bt[bh // hq, pi] * hkv + (bh % hq) // group,)
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda bh, qi, pi, bt: (bh,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, bq, d), q_map),
+        pl.BlockSpec((1, page, d), kv_map),
+        pl.BlockSpec((1, page, dv), kv_map),
+    ]
+    operands = [start_r, qr, kr, vr]
+    if quant:
+        sc_spec = pl.BlockSpec((1,), sc_map, memory_space=pltpu.SMEM)
+        in_specs = in_specs[:3] + [sc_spec, in_specs[3], sc_spec]
+        operands = [start_r, qr, kr,
+                    jnp.asarray(k_scales, jnp.float32).reshape(-1),
+                    vr, jnp.asarray(v_scales, jnp.float32).reshape(-1)]
+        body = _paged_chunk_q_kernel
+    else:
+        body = _paged_chunk_kernel
+
+    kernel = functools.partial(body, scale=scale, bq=bq, page=page,
+                               n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                     # the block table
+        grid=(b * hq, nq, n_pages),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, dv), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dv), jnp.float32),   # acc
+            pltpu.VMEM((bq, 128), jnp.float32),  # running max (col 0 used)
+            pltpu.VMEM((bq, 128), jnp.float32),  # running sum-of-exp
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, t, dv), q.dtype),
+        interpret=interpret,
+        name=("flash_paged_chunk_attention_q" if quant
+              else "flash_paged_chunk_attention"),
+    )(tables, *operands)
     return out.reshape(b, hq, t, dv).transpose(0, 2, 1, 3)

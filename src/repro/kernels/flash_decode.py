@@ -39,7 +39,8 @@ _NEG_INF = -1e30
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
                    acc_ref, m_ref, l_ref, *,
-                   scale: float, bkv: int, n_kv_blocks: int, emit_stats: bool):
+                   scale: float, bkv: int, n_kv_blocks: int, emit_stats: bool,
+                   ksc_ref=None, vsc_ref=None):
     ki = pl.program_id(1)
 
     @pl.when(ki == 0)
@@ -56,6 +57,11 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
         q = q_ref[0].astype(jnp.float32) * scale        # (group, D)
         k = k_ref[0].astype(jnp.float32)                # (bkv, D)
         v = v_ref[0].astype(jnp.float32)
+        if ksc_ref is not None:
+            # int8 tiles: dequantize in-register with the per-(page, head)
+            # scalar that rode along in SMEM — no fp32 cache copy exists
+            k = k * ksc_ref[0]
+            v = v * vsc_ref[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (group,bkv)
         cols = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -183,9 +189,25 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
                    n_kv_blocks=n_pages, emit_stats=False)
 
 
+def _paged_decode_q_kernel(bt_ref, len_ref, q_ref, k_ref, ksc_ref, v_ref,
+                           vsc_ref, o_ref, m_out_ref, l_out_ref,
+                           acc_ref, m_ref, l_ref,
+                           *, scale: float, page: int, n_pages: int):
+    # int8 variant: the per-(page, head) dequant scales follow the same
+    # scalar-prefetched table indices as the K/V tiles, one SMEM scalar
+    # per grid step; dequant happens inside _decode_kernel's compute body.
+    del bt_ref
+    _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                   acc_ref, m_ref, l_ref, scale=scale, bkv=page,
+                   n_kv_blocks=n_pages, emit_stats=False,
+                   ksc_ref=ksc_ref, vsc_ref=vsc_ref)
+
+
 def flash_paged_decode(q: jax.Array, pages_k: jax.Array, pages_v: jax.Array,
                        block_tables: jax.Array,
                        lengths: Optional[jax.Array] = None, *,
+                       k_scales: Optional[jax.Array] = None,
+                       v_scales: Optional[jax.Array] = None,
                        scale: Optional[float] = None,
                        interpret: bool = False) -> jax.Array:
     """q (B, Hq, D), pages_k/v (N, P, Hkv, D), block_tables (B, MP) int32,
@@ -193,13 +215,19 @@ def flash_paged_decode(q: jax.Array, pages_k: jax.Array, pages_v: jax.Array,
 
     Logical position ``pi * P + r`` of sequence b lives at physical row
     ``(pages[block_tables[b, pi]], r)``; positions >= lengths[b] are
-    masked (so unallocated table entries may hold any valid block id)."""
+    masked (so unallocated table entries may hold any valid block id).
+
+    With ``k_scales``/``v_scales`` ((N, Hkv) float32) the pages are int8
+    and each (page, head) tile is dequantized in-register — the int8
+    bytes are all that ever stream through VMEM."""
     b, hq, d = q.shape
     n_blocks, page, hkv = pages_k.shape[0], pages_k.shape[1], pages_k.shape[2]
     dv = pages_v.shape[3]
     n_pages = block_tables.shape[1]
     assert hq % hkv == 0, (hq, hkv)
     group = hq // hkv
+    quant = k_scales is not None
+    assert quant == (v_scales is not None), "need both k_scales and v_scales"
     scale = (1.0 / math.sqrt(d)) if scale is None else scale
     if lengths is None:
         lengths = jnp.full((b,), n_pages * page, jnp.int32)
@@ -216,18 +244,34 @@ def flash_paged_decode(q: jax.Array, pages_k: jax.Array, pages_v: jax.Array,
         # physical (block, head) row of logical page pi of sequence bh//Hkv
         return (bt[bh // hkv, pi] * hkv + bh % hkv, 0, 0)
 
-    kernel = functools.partial(_paged_decode_kernel, scale=scale, page=page,
+    def sc_map(bh, pi, bt):
+        # the matching scalar in the flattened (N*Hkv,) scale sidecar
+        return (bt[bh // hkv, pi] * hkv + bh % hkv,)
+
+    in_specs = [
+        pl.BlockSpec((1,), lambda bh, pi, bt: (bh,),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, group, d), lambda bh, pi, bt: (bh, 0, 0)),
+        pl.BlockSpec((1, page, d), kv_map),
+        pl.BlockSpec((1, page, dv), kv_map),
+    ]
+    operands = [len_r, qr, kr, vr]
+    if quant:
+        sc_spec = pl.BlockSpec((1,), sc_map, memory_space=pltpu.SMEM)
+        in_specs = in_specs[:3] + [sc_spec, in_specs[3], sc_spec]
+        operands = [len_r, qr, kr,
+                    jnp.asarray(k_scales, jnp.float32).reshape(-1),
+                    vr, jnp.asarray(v_scales, jnp.float32).reshape(-1)]
+        body = _paged_decode_q_kernel
+    else:
+        body = _paged_decode_kernel
+
+    kernel = functools.partial(body, scale=scale, page=page,
                                n_pages=n_pages)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                     # the block table
         grid=(b * hkv, n_pages),
-        in_specs=[
-            pl.BlockSpec((1,), lambda bh, pi, bt: (bh,),
-                         memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, group, d), lambda bh, pi, bt: (bh, 0, 0)),
-            pl.BlockSpec((1, page, d), kv_map),
-            pl.BlockSpec((1, page, dv), kv_map),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, group, dv), lambda bh, pi, bt: (bh, 0, 0)),
             pl.BlockSpec((1, group, 1), lambda bh, pi, bt: (bh, 0, 0)),
@@ -248,6 +292,6 @@ def flash_paged_decode(q: jax.Array, pages_k: jax.Array, pages_v: jax.Array,
             jax.ShapeDtypeStruct((b * hkv, group, 1), jnp.float32),
         ],
         interpret=interpret,
-        name="flash_paged_decode",
-    )(tables, len_r, qr, kr, vr)
+        name="flash_paged_decode_q" if quant else "flash_paged_decode",
+    )(tables, *operands)
     return out.reshape(b, hq, dv)

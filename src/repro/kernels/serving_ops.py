@@ -455,6 +455,29 @@ def _paged_chunk_attention_xla(inputs, attrs):
         attrs)
 
 
+def _paged_chunk_pallas_supports(specs, attrs):
+    """T % block_q == 0 (block clamped to T), page_size % 8 == 0 (TPU
+    sublane tiling of one page per KV step) and Hq divisible by Hk."""
+    q, pk = specs[0], specs[1]
+    bq = min(int(attrs.get("block_q", 256)), q.shape[1])
+    return (q.shape[1] % bq == 0 and pk.shape[1] % 8 == 0
+            and q.shape[2] % pk.shape[2] == 0)
+
+
+@impl("paged_chunk_attention", "pallas",
+      supports=_paged_chunk_pallas_supports,
+      note="flash kernel reading pages in place via the scalar-prefetched "
+           "block table — the dense gather copy never exists "
+           "(flash_paged_chunk_attention)")
+def _paged_chunk_attention_pallas(inputs, attrs):
+    from repro.kernels.flash_attention import flash_paged_chunk_attention
+    q, pk, pv, tables, start = inputs
+    return [flash_paged_chunk_attention(
+        q, pk, pv, tables, start, scale=attrs.get("scale"),
+        block_q=int(attrs.get("block_q", 256)),
+        interpret=attrs.get("interpret", pallas_interpret()))]
+
+
 def paged_chunk_attention(q, pages_k, pages_v, tables, start, *, scale=None,
                           backend: str = "ref", **kw):
     return get_impl("paged_chunk_attention", backend)(
@@ -514,13 +537,8 @@ def _paged_dec_xla_cost(specs, attrs):
                 bytes=base.bytes + 2.0 * 2.0 * _gathered_bytes(pk, tables))
 
 
-@impl("paged_decode_attention", "xla", cost_fn=_paged_dec_xla_cost,
-      note="gather pages to a dense view + GQA-grouped einsum over the "
-           "length-masked positions")
-def _paged_decode_attention_xla(inputs, attrs):
-    q, pk, pv, tables, lengths = inputs
-    k = _gather_pages(pk, tables)
-    v = _gather_pages(pv, tables)
+def _decode_attention_xla_dense(q, k, v, lengths, attrs):
+    """GQA-grouped einsum decode over dense (already gathered) K/V."""
     b, hq, d = q.shape
     s, hk = k.shape[1], k.shape[2]
     assert hq % hk == 0, (hq, hk)
@@ -532,7 +550,17 @@ def _paged_decode_attention_xla(inputs, attrs):
     logits = jnp.where(allowed, logits, R._NEG_INF)
     p = jax.nn.softmax(logits, axis=-1)
     o = jnp.einsum("bkgs,bskd->bkgd", p, v.astype(jnp.float32))
-    return [o.reshape(b, hq, d).astype(q.dtype)]
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+@impl("paged_decode_attention", "xla", cost_fn=_paged_dec_xla_cost,
+      note="gather pages to a dense view + GQA-grouped einsum over the "
+           "length-masked positions")
+def _paged_decode_attention_xla(inputs, attrs):
+    q, pk, pv, tables, lengths = inputs
+    k = _gather_pages(pk, tables)
+    v = _gather_pages(pv, tables)
+    return [_decode_attention_xla_dense(q, k, v, lengths, attrs)]
 
 
 def _paged_dec_pallas_supports(specs, attrs):
@@ -558,3 +586,329 @@ def paged_decode_attention(q, pages_k, pages_v, tables, lengths, *,
                            scale=None, backend: str = "ref", **kw):
     return get_impl("paged_decode_attention", backend)(
         [q, pages_k, pages_v, tables, lengths], {"scale": scale, **kw})[0]
+
+
+# --------------------------------------------------------------------------- #
+# Quantized paged ops — pages stored int8 with a per-(page, kv-head) float32
+# scale sidecar (N, Hk).  Symmetric scheme: scale = absmax / 127, row = q *
+# scale.  Scales only ever GROW (running per-page max): a write that raises a
+# page's absmax requantizes that page's existing rows by old/new; pages whose
+# scale did not change requantize by exactly 1.0, which is bit-exact, so
+# prefix-shared pages keep identical bits across sequences.  An all-zero page
+# keeps scale 0.0 and quantizes via a `scale > 0` guard (`x / 0` would be
+# inf; `attrs.get("scale") or`-style falsy fallbacks are exactly the PR 4
+# bug class this guard avoids).  The fp32 cache is never materialised: the
+# attention backends dequantize after the gather (ref/xla) or in-register
+# inside the online-softmax loop (pallas).
+# --------------------------------------------------------------------------- #
+
+_Q_MAX = 127.0
+
+
+def _gather_pages_q(pages_q, scales, tables):
+    """int8 (N,P,H,D) pages + (N,H) scales + (B,MP) tables -> dense fp32
+    (B, MP*P, H, D) view, dequantized after the gather (per-sequence
+    working set, never the whole pool)."""
+    n, p = pages_q.shape[0], pages_q.shape[1]
+    idx = jnp.clip(tables, 0, n - 1)
+    g = jnp.take(pages_q, idx, axis=0).astype(jnp.float32)   # (B,MP,P,H,D)
+    sc = jnp.take(scales, idx, axis=0)                       # (B,MP,H)
+    g = g * sc[:, :, None, :, None]
+    return g.reshape(tables.shape[0], tables.shape[1] * p, *pages_q.shape[2:])
+
+
+def _scale_bytes(specs) -> float:
+    return float(sum(s.nbytes for s in specs if len(s.shape) == 2
+                     and s.dtype == "float32"))
+
+
+# ---- paged_cache_update_q ------------------------------------------------- #
+# inputs (pages (N,P,H,D) int8, scales (N,H) f32, new (B,T,H,D) f32,
+#         tables (B,MP) i32, start (B,), n_new (B,)) -> [pages, scales]
+
+def _paged_update_q_shape(specs, attrs):
+    pages, scales, new, tables = specs[0], specs[1], specs[2], specs[3]
+    if pages.dtype != "int8":
+        raise ValueError(f"quantized pages must be int8, got {pages.dtype}")
+    if scales.shape != (pages.shape[0], pages.shape[2]):
+        raise ValueError(f"scales {scales.shape} != (N, Hk) "
+                         f"({pages.shape[0]}, {pages.shape[2]})")
+    if pages.shape[2:] != new.shape[2:]:
+        raise ValueError(f"page/new head mismatch: {pages.shape} vs {new.shape}")
+    if new.shape[0] != tables.shape[0]:
+        raise ValueError(f"batch mismatch: {new.shape} vs {tables.shape}")
+    return [pages, scales]
+
+
+def _paged_update_q_cost(specs, attrs):
+    """int8-honest traffic: RMW of the written rows at 1 byte/elem, the
+    fp32 chunk read once, plus the full-pool requantize pass (read+write
+    every int8 page and both scale sidecar states)."""
+    pages, scales, new = specs[0], specs[1], specs[2]
+    return Cost(flops=2.0 * pages.nelems,
+                bytes=(2.0 * pages.nbytes + 3.0 * new.nelems + new.nbytes
+                       + 3.0 * scales.nbytes + _bytes(specs[3:])))
+
+
+defop("paged_cache_update_q", _paged_update_q_shape, _paged_update_q_cost,
+      doc="quantize-on-write scatter into an int8 page pool with running "
+          "per-(page, kv-head) max scales; inputs (pages (N,P,H,D) int8, "
+          "scales (N,Hk) f32, new (B,T,H,D), tables (B,MP) int32, "
+          "start (B,), n_new (B,)); outputs [pages, scales]")
+
+
+def _quantize_rows(x, scale):
+    """fp32 rows -> int8 given a broadcastable scale; scale==0 rows are
+    all-zero by construction (scale is their absmax / 127)."""
+    q = jnp.where(scale > 0, x / jnp.where(scale > 0, scale, 1.0), 0.0)
+    return jnp.clip(jnp.round(q), -_Q_MAX, _Q_MAX).astype(jnp.int8)
+
+
+def _paged_update_q_common(inputs):
+    """Shared scale bookkeeping: returns (requantized pages fp32-exact in
+    int8, new scales, int8 rows to scatter, blk, row, valid).  Order-
+    independent: scales use a scatter-max, write targets are unique."""
+    pages, scales, new, tables, start, n_new = inputs
+    n_blocks, p = pages.shape[0], pages.shape[1]
+    b, t = new.shape[0], new.shape[1]
+    blk, row = _paged_rows(tables, start, t, p, n_blocks)
+    valid = jnp.arange(t)[None, :] < jnp.asarray(n_new)[:, None]   # (B, T)
+    tgt = jnp.where(valid, blk, n_blocks)                          # (B, T)
+    # running per-(page, head) max: only written pages can grow
+    row_amax = jnp.max(jnp.abs(new), axis=-1)                      # (B, T, H)
+    row_scale = jnp.where(valid[..., None], row_amax / _Q_MAX, 0.0)
+    new_scales = jnp.asarray(scales).at[tgt.reshape(-1)].max(
+        row_scale.reshape(b * t, -1), mode="drop")
+    # requantize the pool by old/new; untouched pages have ratio exactly
+    # 1.0, so round(q * 1.0) == q and shared pages stay bit-identical
+    ratio = jnp.where(new_scales > 0, jnp.asarray(scales) / new_scales, 1.0)
+    pages_rq = jnp.clip(
+        jnp.round(pages.astype(jnp.float32) * ratio[:, None, :, None]),
+        -_Q_MAX, _Q_MAX).astype(jnp.int8)
+    # quantize the incoming rows with their target page's final scale
+    tgt_scale = jnp.take(new_scales, jnp.clip(tgt, 0, n_blocks - 1),
+                         axis=0)                                   # (B, T, H)
+    q_rows = _quantize_rows(jnp.asarray(new), tgt_scale[..., None])
+    return pages_rq, new_scales, q_rows, blk, row, valid, tgt
+
+
+@impl("paged_cache_update_q", "ref",
+      note="per-slot python loop of masked int8 row scatters after the "
+           "shared scale-growth/requantize pass (the oracle)")
+def _paged_cache_update_q_ref(inputs, attrs):
+    pages = inputs[0]
+    n_blocks = pages.shape[0]
+    b, t = inputs[2].shape[0], inputs[2].shape[1]
+    pages_rq, new_scales, q_rows, blk, row, valid, _ = \
+        _paged_update_q_common(inputs)
+    out = pages_rq
+    for bi in range(b):
+        tgt = jnp.where(valid[bi], blk[bi], n_blocks)   # OOB rows dropped
+        out = out.at[tgt, row[bi]].set(q_rows[bi], mode="drop")
+    return [out, new_scales]
+
+
+@impl("paged_cache_update_q", "xla",
+      note="one flat (B*T)-row int8 scatter; bit-identical to ref because "
+           "write targets are unique and the scale pass is a scatter-max")
+def _paged_cache_update_q_xla(inputs, attrs):
+    new = inputs[2]
+    b, t = new.shape[0], new.shape[1]
+    pages_rq, new_scales, q_rows, blk, row, valid, tgt = \
+        _paged_update_q_common(inputs)
+    out = pages_rq.at[tgt.reshape(-1), row.reshape(-1)].set(
+        q_rows.reshape((b * t,) + new.shape[2:]), mode="drop")
+    return [out, new_scales]
+
+
+def paged_cache_update_q(pages, scales, new, tables, start, n_new, *,
+                         backend: str = "ref", **kw):
+    return get_impl("paged_cache_update_q", backend)(
+        [pages, scales, new, tables, start, n_new], kw)
+
+
+# ---- paged_chunk_attention_q ---------------------------------------------- #
+# inputs (q (B,T,Hq,D), pages_k (N,P,Hk,D) i8, k_scales (N,Hk) f32,
+#         pages_v i8, v_scales, tables (B,MP) i32, start (B,))
+
+def _paged_chunk_q_shape(specs, attrs):
+    pk, ks = specs[1], specs[2]
+    if pk.dtype != "int8":
+        raise ValueError(f"quantized pages must be int8, got {pk.dtype}")
+    if ks.shape != (pk.shape[0], pk.shape[2]):
+        raise ValueError(f"k_scales {ks.shape} != (N, Hk)")
+    return [specs[0]]
+
+
+def _paged_chunk_q_cost(specs, attrs):
+    """Streams the gathered K/V once at 1 byte/elem (int8) plus the scale
+    sidecars — the whole point of quantized pages on the memory-bound
+    serving path."""
+    q, pk, tables = specs[0], specs[1], specs[5]
+    b, t, hq, d = q.shape
+    s = tables.shape[1] * pk.shape[1]
+    gathered = 2.0 * _gathered_bytes(pk, tables)      # int8 itemsize
+    return Cost(flops=4.0 * b * hq * t * s * d,
+                bytes=2.0 * q.nbytes + tables.nbytes + gathered
+                      + _scale_bytes(specs))
+
+
+defop("paged_chunk_attention_q", _paged_chunk_q_shape, _paged_chunk_q_cost,
+      doc="chunked-prefill attention over int8 pages, dequantized with "
+          "per-(page, kv-head) scales; inputs (q (B,T,Hq,D), pages_k int8, "
+          "k_scales (N,Hk), pages_v int8, v_scales, tables (B,MP) int32, "
+          "start (B,)); attrs: scale")
+
+
+def _paged_chunk_q_gather_cost(specs, attrs):
+    """Adds the materialised fp32 dequantized gather (written then re-read)
+    on top of the int8 streaming cost."""
+    q, pk, tables = specs[0], specs[1], specs[5]
+    base = _paged_chunk_q_cost(specs, attrs)
+    b, mp = tables.shape
+    n, p, h, d = pk.shape
+    dense_f32 = 4.0 * b * mp * p * h * d
+    return Cost(flops=base.flops, bytes=base.bytes + 2.0 * 2.0 * dense_f32)
+
+
+@impl("paged_chunk_attention_q", "ref", cost_fn=_paged_chunk_q_gather_cost,
+      note="dequantize after the gather, then the dense fp32 offset-causal "
+           "oracle")
+def _paged_chunk_attention_q_ref(inputs, attrs):
+    q, pk, ks, pv, vs, tables, start = inputs
+    return _chunk_attention_ref(
+        [q, _gather_pages_q(pk, ks, tables),
+         _gather_pages_q(pv, vs, tables), start], attrs)
+
+
+@impl("paged_chunk_attention_q", "xla", cost_fn=_paged_chunk_q_gather_cost,
+      note="dequantize after the gather + the GQA-grouped einsum "
+           "(repeated-KV never materialised)")
+def _paged_chunk_attention_q_xla(inputs, attrs):
+    q, pk, ks, pv, vs, tables, start = inputs
+    return _chunk_attention_xla(
+        [q, _gather_pages_q(pk, ks, tables),
+         _gather_pages_q(pv, vs, tables), start], attrs)
+
+
+def _paged_chunk_q_pallas_supports(specs, attrs):
+    """T % block_q == 0 (block clamped to T), page_size % 8 == 0 and Hq
+    divisible by Hk (whole GQA groups)."""
+    q, pk = specs[0], specs[1]
+    bq = min(int(attrs.get("block_q", 256)), q.shape[1])
+    return (q.shape[1] % bq == 0 and pk.shape[1] % 8 == 0
+            and q.shape[2] % pk.shape[2] == 0)
+
+
+@impl("paged_chunk_attention_q", "pallas",
+      supports=_paged_chunk_q_pallas_supports,
+      note="fused flash kernel: int8 K/V tiles stream through the scalar-"
+           "prefetched block table and dequantize in-register inside the "
+           "online-softmax loop (flash_paged_chunk_attention)")
+def _paged_chunk_attention_q_pallas(inputs, attrs):
+    from repro.kernels.flash_attention import flash_paged_chunk_attention
+    q, pk, ks, pv, vs, tables, start = inputs
+    return [flash_paged_chunk_attention(
+        q, pk, pv, tables, start, k_scales=ks, v_scales=vs,
+        scale=attrs.get("scale"),
+        block_q=int(attrs.get("block_q", 256)),
+        interpret=attrs.get("interpret", pallas_interpret()))]
+
+
+def paged_chunk_attention_q(q, pages_k, k_scales, pages_v, v_scales, tables,
+                            start, *, scale=None, backend: str = "ref", **kw):
+    return get_impl("paged_chunk_attention_q", backend)(
+        [q, pages_k, k_scales, pages_v, v_scales, tables, start],
+        {"scale": scale, **kw})[0]
+
+
+# ---- paged_decode_attention_q --------------------------------------------- #
+# inputs (q (B,Hq,D), pages_k (N,P,Hk,D) i8, k_scales (N,Hk) f32,
+#         pages_v i8, v_scales, tables (B,MP) i32, lengths (B,))
+
+def _paged_dec_q_shape(specs, attrs):
+    pk, ks = specs[1], specs[2]
+    if pk.dtype != "int8":
+        raise ValueError(f"quantized pages must be int8, got {pk.dtype}")
+    if ks.shape != (pk.shape[0], pk.shape[2]):
+        raise ValueError(f"k_scales {ks.shape} != (N, Hk)")
+    return [specs[0]]
+
+
+def _paged_dec_q_cost(specs, attrs):
+    """Streams the gathered K/V once at 1 byte/elem (int8) plus the
+    scale sidecars."""
+    q, pk, tables = specs[0], specs[1], specs[5]
+    b, hq, d = q.shape
+    s = tables.shape[1] * pk.shape[1]
+    gathered = 2.0 * _gathered_bytes(pk, tables)
+    return Cost(flops=4.0 * b * hq * s * d,
+                bytes=2.0 * q.nbytes + tables.nbytes + gathered
+                      + _scale_bytes(specs))
+
+
+defop("paged_decode_attention_q", _paged_dec_q_shape, _paged_dec_q_cost,
+      doc="single-token attention over int8 pages, dequantized with "
+          "per-(page, kv-head) scales; inputs (q (B,Hq,D), pages_k int8, "
+          "k_scales (N,Hk), pages_v int8, v_scales, tables (B,MP) int32, "
+          "lengths (B,)); attrs: scale")
+
+
+def _paged_dec_q_gather_cost(specs, attrs):
+    """Adds the materialised fp32 dequantized gather on top of the int8
+    streaming cost."""
+    q, pk, tables = specs[0], specs[1], specs[5]
+    base = _paged_dec_q_cost(specs, attrs)
+    b, mp = tables.shape
+    n, p, h, d = pk.shape
+    dense_f32 = 4.0 * b * mp * p * h * d
+    return Cost(flops=base.flops, bytes=base.bytes + 2.0 * 2.0 * dense_f32)
+
+
+@impl("paged_decode_attention_q", "ref", cost_fn=_paged_dec_q_gather_cost,
+      note="dequantize after the gather + the dense fp32 decode oracle")
+def _paged_decode_attention_q_ref(inputs, attrs):
+    q, pk, ks, pv, vs, tables, lengths = inputs
+    k = _gather_pages_q(pk, ks, tables)
+    v = _gather_pages_q(pv, vs, tables)
+    return [R.decode_attention_ref(q, k, v, lengths,
+                                   scale=attrs.get("scale"))]
+
+
+@impl("paged_decode_attention_q", "xla", cost_fn=_paged_dec_q_gather_cost,
+      note="dequantize after the gather + GQA-grouped einsum over the "
+           "length-masked positions")
+def _paged_decode_attention_q_xla(inputs, attrs):
+    q, pk, ks, pv, vs, tables, lengths = inputs
+    k = _gather_pages_q(pk, ks, tables)
+    v = _gather_pages_q(pv, vs, tables)
+    return [_decode_attention_xla_dense(q, k, v, lengths, attrs)]
+
+
+def _paged_dec_q_pallas_supports(specs, attrs):
+    """page_size % 8 == 0 (TPU sublane tiling of one page per KV step) and
+    Hq divisible by Hk (whole GQA groups)."""
+    q, pk = specs[0], specs[1]
+    return pk.shape[1] % 8 == 0 and q.shape[1] % pk.shape[2] == 0
+
+
+@impl("paged_decode_attention_q", "pallas",
+      supports=_paged_dec_q_pallas_supports,
+      note="fused flash decode: int8 pages stream via scalar-prefetched "
+           "table indices, per-(page, head) scales ride along in SMEM and "
+           "dequant happens in-register (flash_paged_decode)")
+def _paged_decode_attention_q_pallas(inputs, attrs):
+    from repro.kernels.flash_decode import flash_paged_decode
+    q, pk, ks, pv, vs, tables, lengths = inputs
+    return [flash_paged_decode(
+        q, pk, pv, tables, lengths, k_scales=ks, v_scales=vs,
+        scale=attrs.get("scale"),
+        interpret=attrs.get("interpret", pallas_interpret()))]
+
+
+def paged_decode_attention_q(q, pages_k, k_scales, pages_v, v_scales, tables,
+                             lengths, *, scale=None, backend: str = "ref",
+                             **kw):
+    return get_impl("paged_decode_attention_q", backend)(
+        [q, pages_k, k_scales, pages_v, v_scales, tables, lengths],
+        {"scale": scale, **kw})[0]

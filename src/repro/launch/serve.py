@@ -5,7 +5,7 @@ Program-backed engine over the graph LM.
         --requests 16 --slots 4
 
     PYTHONPATH=src python -m repro.launch.serve --engine [--int8] \
-        --requests 16 --slots 4 --chunk 8
+        [--paged] [--kv-dtype int8] --requests 16 --slots 4 --chunk 8
 
 Default mode submits a stream of random-prompt requests and runs the
 slot-based continuous batcher (prefill-on-admit, batched decode) over an
@@ -13,7 +13,9 @@ slot-based continuous batcher (prefill-on-admit, batched decode) over an
 sharded decode step from runtime/serve.py.  ``--engine`` instead serves
 compiled Programs (``repro.runtime.engine``): chunked prefill, deadlines,
 per-token streaming, EngineMetrics — and with ``--int8`` the decode and
-prefill steps are post-training-quantized Programs.
+prefill steps are post-training-quantized Programs.  ``--paged`` swaps in
+the paged KV cache; ``--kv-dtype int8`` stores its pages as int8 with
+per-(page, kv-head) scales (implies ``--paged``).
 """
 
 from __future__ import annotations
@@ -36,9 +38,11 @@ def run_engine(args) -> None:
 
     cfg = GraphLMConfig()
     cache_cap = max(args.cache_cap, args.chunk + args.max_new + 16)
+    paged = args.paged or args.kv_dtype != "float32"
     engine, _ = build_lm_serving(
         cfg, n_slots=args.slots, chunk=args.chunk, cache_cap=cache_cap,
-        quantize="int8" if args.int8 else None)
+        quantize="int8" if args.int8 else None,
+        paged=paged, kv_dtype=args.kv_dtype)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -51,8 +55,14 @@ def run_engine(args) -> None:
     engine.run(max_ticks=100_000)
     m = engine.metrics.summary()
     print(f"engine: slots={args.slots} chunk={args.chunk} "
-          f"int8={args.int8} requests={len(reqs)}")
+          f"int8={args.int8} paged={paged} kv_dtype={args.kv_dtype} "
+          f"requests={len(reqs)}")
     print(json.dumps(m, indent=1, sort_keys=True))
+    if paged:
+        s = engine.stepper.pool.stats()
+        print(f"paged pool: {s['n_blocks']} blocks x {s['page_size']} rows "
+              f"({s['kv_dtype']}, {s['page_bytes']}B/page), "
+              f"hit rate {s['hit_rate']:.0%}, CoW {s['cow_count']}")
     for r in reqs[:3]:
         print(f"  req{r.uid}: prompt[:4]={r.prompt[:4].tolist()} "
               f"-> out[:6]={r.out_tokens[:6]}")
@@ -67,6 +77,12 @@ def main() -> None:
                     help="serve compiled Programs via the serving engine")
     ap.add_argument("--int8", action="store_true",
                     help="with --engine: serve int8-quantized Programs")
+    ap.add_argument("--paged", action="store_true",
+                    help="with --engine: serve through the paged KV cache")
+    ap.add_argument("--kv-dtype", choices=("float32", "int8"),
+                    default="float32",
+                    help="with --engine: paged KV page storage dtype "
+                         "(int8 implies --paged)")
     ap.add_argument("--chunk", type=int, default=8,
                     help="with --engine: prefill chunk size")
     ap.add_argument("--requests", type=int, default=16)

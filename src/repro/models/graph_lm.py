@@ -106,24 +106,40 @@ def init_cache_inputs(cfg: GraphLMConfig, batch: int,
 
 
 def init_paged_cache_inputs(cfg: GraphLMConfig, n_blocks: int,
-                            page_size: int) -> Dict[str, np.ndarray]:
+                            page_size: int, *,
+                            kv_dtype: str = "float32") -> Dict[str, np.ndarray]:
     """Zeroed page-pool arrays matching the paged graphs' cache input
     names.  Unlike the dense layout there is no batch dimension — one
     shared pool of ``n_blocks`` fixed-size pages per layer, indexed
-    through per-sequence block tables."""
+    through per-sequence block tables.  With ``kv_dtype="int8"`` the
+    pools are int8 and each gains a ``cache_{k,v}{i}_scale`` sidecar
+    ((n_blocks, Hk) float32, all zeros = every page empty)."""
+    if kv_dtype not in ("float32", "int8"):
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
     shape = (n_blocks, page_size, cfg.n_kv_heads, cfg.d_head)
+    dt = np.int8 if kv_dtype == "int8" else np.float32
     out: Dict[str, np.ndarray] = {}
     for i in range(cfg.n_layers):
-        out[f"cache_k{i}"] = np.zeros(shape, np.float32)
-        out[f"cache_v{i}"] = np.zeros(shape, np.float32)
+        out[f"cache_k{i}"] = np.zeros(shape, dt)
+        out[f"cache_v{i}"] = np.zeros(shape, dt)
+        if kv_dtype == "int8":
+            sshape = (n_blocks, cfg.n_kv_heads)
+            out[f"cache_k{i}_scale"] = np.zeros(sshape, np.float32)
+            out[f"cache_v{i}_scale"] = np.zeros(sshape, np.float32)
     return out
 
 
 def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
               t: int, cache_cap: int, decode: bool,
-              paged: Optional[Tuple[int, int, int]] = None) -> Graph:
+              paged: Optional[Tuple[int, int, int]] = None,
+              kv_dtype: str = "float32") -> Graph:
     if t > cache_cap:
         raise ValueError(f"chunk {t} exceeds cache capacity {cache_cap}")
+    if kv_dtype not in ("float32", "int8"):
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}")
+    kv8 = kv_dtype == "int8"
+    if kv8 and paged is None:
+        raise ValueError("kv_dtype='int8' requires the paged cache layout")
     dm, dh, hq, hk = cfg.d_model, cfg.d_head, cfg.n_heads, cfg.n_kv_heads
     inputs: Dict[str, TensorSpec] = {
         "tokens": TensorSpec((batch, t), "int32"),
@@ -139,9 +155,13 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
         n_blocks, page_size, max_pages = paged
         inputs["block_tables"] = TensorSpec((batch, max_pages), "int32")
         for i in range(cfg.n_layers):
-            spec = TensorSpec((n_blocks, page_size, hk, dh), "float32")
+            spec = TensorSpec((n_blocks, page_size, hk, dh), kv_dtype)
             inputs[f"cache_k{i}"] = spec
             inputs[f"cache_v{i}"] = spec
+            if kv8:
+                sspec = TensorSpec((n_blocks, hk), "float32")
+                inputs[f"cache_k{i}_scale"] = sspec
+                inputs[f"cache_v{i}_scale"] = sspec
 
     nodes: List[Node] = [Node("embed_lookup", "embedding",
                               ["tokens", "embed"], ["x0"])]
@@ -170,6 +190,17 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
                      [f"cache_v{i}", f"{L}.v4", "start", "n_new"],
                      [f"new_cache_v{i}"]),
             ]
+        elif kv8:
+            nodes += [
+                Node(f"{L}.k_write", "paged_cache_update_q",
+                     [f"cache_k{i}", f"cache_k{i}_scale", f"{L}.k4",
+                      "block_tables", "start", "n_new"],
+                     [f"new_cache_k{i}", f"new_cache_k{i}_scale"]),
+                Node(f"{L}.v_write", "paged_cache_update_q",
+                     [f"cache_v{i}", f"cache_v{i}_scale", f"{L}.v4",
+                      "block_tables", "start", "n_new"],
+                     [f"new_cache_v{i}", f"new_cache_v{i}_scale"]),
+            ]
         else:
             nodes += [
                 Node(f"{L}.k_write", "paged_cache_update",
@@ -187,6 +218,12 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
                     f"{L}.attn", "decode_attention",
                     [f"{L}.qd", f"new_cache_k{i}", f"new_cache_v{i}", "kvlen"],
                     [f"{L}.att"]))
+            elif kv8:
+                nodes.append(Node(
+                    f"{L}.attn", "paged_decode_attention_q",
+                    [f"{L}.qd", f"new_cache_k{i}", f"new_cache_k{i}_scale",
+                     f"new_cache_v{i}", f"new_cache_v{i}_scale",
+                     "block_tables", "kvlen"], [f"{L}.att"]))
             else:
                 nodes.append(Node(
                     f"{L}.attn", "paged_decode_attention",
@@ -200,6 +237,12 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
                     f"{L}.attn", "chunk_attention",
                     [f"{L}.q4", f"new_cache_k{i}", f"new_cache_v{i}", "start"],
                     [f"{L}.att"]))
+            elif kv8:
+                nodes.append(Node(
+                    f"{L}.attn", "paged_chunk_attention_q",
+                    [f"{L}.q4", f"new_cache_k{i}", f"new_cache_k{i}_scale",
+                     f"new_cache_v{i}", f"new_cache_v{i}_scale",
+                     "block_tables", "start"], [f"{L}.att"]))
             else:
                 nodes.append(Node(
                     f"{L}.attn", "paged_chunk_attention",
@@ -232,8 +275,10 @@ def _lm_graph(cfg: GraphLMConfig, params: Dict[str, Any], *, batch: int,
     outputs = ["logits"]
     for i in range(cfg.n_layers):
         outputs += [f"new_cache_k{i}", f"new_cache_v{i}"]
+        if kv8:
+            outputs += [f"new_cache_k{i}_scale", f"new_cache_v{i}_scale"]
     mode = "decode" if decode else "prefill"
-    tag = "paged_" if paged is not None else ""
+    tag = ("paged_kv8_" if kv8 else "paged_") if paged is not None else ""
     g = Graph(name=f"graph_lm_{tag}{mode}_b{batch}_t{t}", inputs=inputs,
               outputs=outputs, nodes=nodes, params=dict(params))
     g.validate()
@@ -261,23 +306,34 @@ def build_prefill_graph(cfg: GraphLMConfig, params: Dict[str, Any], *,
 
 def build_paged_decode_graph(cfg: GraphLMConfig, params: Dict[str, Any], *,
                              batch: int, n_blocks: int, page_size: int,
-                             max_pages: int) -> Graph:
+                             max_pages: int,
+                             kv_dtype: str = "float32") -> Graph:
     """Paged decode step: the dense caches are replaced by one shared
     page pool per layer (``(n_blocks, page_size, Hk, D)``) plus an int32
     ``block_tables`` input ``(B, max_pages)`` mapping each slot's logical
     page to a physical block.  Every activation value name matches the
     dense variant, so one calibration drives int8 quantization of both
-    (the paged ops themselves are not quantized — they move cache rows)."""
+    (the paged ops themselves are not quantized — they move cache rows).
+
+    ``kv_dtype="int8"`` swaps the pools to int8 with per-(page, kv-head)
+    float32 scale sidecars (``cache_{k,v}{i}_scale`` inputs ->
+    ``new_...`` outputs) and routes writes/attention through the
+    ``*_q`` serving ops; activation value names are unchanged, so the
+    same calibration still drives these variants."""
     return _lm_graph(cfg, params, batch=batch, t=1,
                      cache_cap=max_pages * page_size, decode=True,
-                     paged=(n_blocks, page_size, max_pages))
+                     paged=(n_blocks, page_size, max_pages),
+                     kv_dtype=kv_dtype)
 
 
 def build_paged_prefill_graph(cfg: GraphLMConfig, params: Dict[str, Any], *,
                               batch: int, chunk: int, n_blocks: int,
-                              page_size: int, max_pages: int) -> Graph:
+                              page_size: int, max_pages: int,
+                              kv_dtype: str = "float32") -> Graph:
     """Paged prefill chunk — see :func:`build_paged_decode_graph` for the
-    cache layout; chunk semantics match :func:`build_prefill_graph`."""
+    cache layout (and the ``kv_dtype`` knob); chunk semantics match
+    :func:`build_prefill_graph`."""
     return _lm_graph(cfg, params, batch=batch, t=chunk,
                      cache_cap=max_pages * page_size, decode=False,
-                     paged=(n_blocks, page_size, max_pages))
+                     paged=(n_blocks, page_size, max_pages),
+                     kv_dtype=kv_dtype)

@@ -49,7 +49,7 @@ from repro.models.graph_lm import (GraphLMConfig, build_decode_graph,
                                    build_prefill_graph, init_cache_inputs,
                                    init_lm_params, init_paged_cache_inputs)
 from repro.runtime.batching import SlotScheduler
-from repro.runtime.kv_cache import BlockPool
+from repro.runtime.kv_cache import BlockPool, kv_page_bytes
 
 __all__ = [
     "EngineRequest", "EngineMetrics", "Engine", "AsyncEngine",
@@ -257,7 +257,7 @@ class PagedProgramStepper(ProgramStepper):
 
     def __init__(self, cfg: GraphLMConfig, params: Mapping[str, Any], *,
                  n_slots: int, chunk: int, page_size: int, n_blocks: int,
-                 max_pages: int,
+                 max_pages: int, kv_dtype: str = "float32",
                  policy: Optional[BackendPolicy] = None,
                  quantize: Optional[str] = None,
                  calib_ranges: Optional[Mapping[str, Any]] = None):
@@ -267,21 +267,25 @@ class PagedProgramStepper(ProgramStepper):
         self.page_size = page_size
         self.n_blocks = n_blocks
         self.max_pages = max_pages
+        self.kv_dtype = kv_dtype
         self.cache_cap = max_pages * page_size   # per-sequence logical cap
         dec_g = build_paged_decode_graph(cfg, params, batch=n_slots,
                                          n_blocks=n_blocks,
                                          page_size=page_size,
-                                         max_pages=max_pages)
+                                         max_pages=max_pages,
+                                         kv_dtype=kv_dtype)
         pre_g = build_paged_prefill_graph(cfg, params, batch=n_slots,
                                           chunk=chunk, n_blocks=n_blocks,
                                           page_size=page_size,
-                                          max_pages=max_pages)
+                                          max_pages=max_pages,
+                                          kv_dtype=kv_dtype)
         self.decode_program = compile(dec_g, policy=policy, quantize=quantize,
                                       calib_ranges=calib_ranges)
         self.prefill_program = compile(pre_g, policy=policy, quantize=quantize,
                                        calib_ranges=calib_ranges)
         self.cache_names = [v for v in dec_g.outputs[1:]]
-        cache_inputs = sorted(init_paged_cache_inputs(cfg, 1, 1))
+        cache_inputs = sorted(init_paged_cache_inputs(cfg, 1, 1,
+                                                      kv_dtype=kv_dtype))
         self._input_names = ("tokens", "start", "n_new", "block_tables",
                              *cache_inputs)
         self._dec = self.decode_program.bind(*self._input_names,
@@ -290,9 +294,12 @@ class PagedProgramStepper(ProgramStepper):
                                               donate=cache_inputs)
         self.caches: Dict[str, Any] = {
             k: jnp.asarray(v)
-            for k, v in init_paged_cache_inputs(cfg, n_blocks,
-                                                page_size).items()}
-        self.pool = BlockPool(n_blocks, page_size)
+            for k, v in init_paged_cache_inputs(cfg, n_blocks, page_size,
+                                                kv_dtype=kv_dtype).items()}
+        self.pool = BlockPool(
+            n_blocks, page_size, kv_dtype=kv_dtype,
+            page_bytes=kv_page_bytes(cfg.n_layers, cfg.n_kv_heads,
+                                     cfg.d_head, page_size, kv_dtype))
         self._slot_seq: Dict[int, int] = {}
 
     # ---------------------------- admission --------------------------- #
@@ -331,6 +338,9 @@ class PagedProgramStepper(ProgramStepper):
         if copies:
             src = jnp.asarray([c[0] for c in copies], jnp.int32)
             dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+            # axis 0 is the block id for every cache array — the int8
+            # page pools AND their (N, Hk) scale sidecars — so one gather/
+            # scatter keeps a quantized CoW copy bit-identical to its source
             for name in list(self.caches):
                 arr = self.caches[name]
                 self.caches[name] = arr.at[dst].set(arr[src])
@@ -834,6 +844,7 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                      paged: bool = False, page_size: int = 8,
                      n_blocks: Optional[int] = None,
                      max_pages: Optional[int] = None,
+                     kv_dtype: str = "float32",
                      ) -> Tuple[Engine, UnbatchedReference]:
     """Compile the serving Programs for a graph LM and return the engine
     plus its unbatched reference (sharing weights and, under int8, the
@@ -844,9 +855,14 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
     logical capacity (rounded up to whole pages of ``page_size``) and
     ``n_blocks`` sizes the shared pool — defaulting to the same total
     memory as the dense layout (``n_slots * ceil(cache_cap / page_size)``
-    pages).  The reference stays dense either way: it is the paged
-    engine's token-exactness oracle."""
+    pages).  ``kv_dtype="int8"`` (paged only) stores the pools in int8
+    with per-(page, kv-head) scale sidecars and routes the hot path
+    through the fused-dequant ``*_q`` ops; at equal pool BYTES that is
+    ~4x the page count of fp32.  The reference stays dense fp32 either
+    way: it is the paged engine's token-exactness oracle."""
     cfg = cfg or GraphLMConfig()
+    if kv_dtype != "float32" and not paged:
+        raise ValueError("kv_dtype requires paged=True")
     params = dict(params) if params is not None else init_lm_params(cfg, seed)
     ranges = None
     if quantize is not None:
@@ -857,8 +873,8 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
         nb = n_blocks if n_blocks is not None else n_slots * mp
         stepper: ProgramStepper = PagedProgramStepper(
             cfg, params, n_slots=n_slots, chunk=chunk, page_size=page_size,
-            n_blocks=nb, max_pages=mp, policy=policy, quantize=quantize,
-            calib_ranges=ranges)
+            n_blocks=nb, max_pages=mp, kv_dtype=kv_dtype, policy=policy,
+            quantize=quantize, calib_ranges=ranges)
     else:
         stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
                                  cache_cap=cache_cap, policy=policy,

@@ -54,7 +54,31 @@ from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-__all__ = ["BlockPool", "SeqState", "pages_needed"]
+__all__ = ["BlockPool", "SeqState", "pages_needed", "kv_page_bytes"]
+
+# bytes per element of the supported KV storage dtypes (kept as a plain
+# table so this module stays numpy-free)
+_KV_ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+# per-row scale-sidecar bytes: int8 pages carry one float32 scale per
+# (page, kv head) for K and V each -> 2 * 4 bytes per kv head per page
+_SCALE_BYTES = 4
+
+
+def kv_page_bytes(n_layers: int, n_kv_heads: int, d_head: int,
+                  page_size: int, kv_dtype: str = "float32") -> int:
+    """Device bytes one pool page occupies across all layers, K and V,
+    including the float32 scale sidecars for quantized dtypes.  This is
+    the number honest equal-memory comparisons must use: an int8 pool
+    with the same *page count* as an fp32 pool is ~4x smaller, not equal.
+    """
+    if kv_dtype not in _KV_ITEMSIZE:
+        raise ValueError(f"unsupported kv_dtype {kv_dtype!r}; "
+                         f"known: {sorted(_KV_ITEMSIZE)}")
+    per_kv = n_layers * 2 * page_size * n_kv_heads * d_head
+    total = per_kv * _KV_ITEMSIZE[kv_dtype]
+    if kv_dtype == "int8":
+        total += n_layers * 2 * n_kv_heads * _SCALE_BYTES
+    return total
 
 
 def pages_needed(prompt_len: int, max_new_tokens: int, page_size: int) -> int:
@@ -89,11 +113,22 @@ class BlockPool:
     """Fixed-size page pool with refcounting, prefix index, CoW and LRU
     reclamation of cached (refcount-0 but indexed) blocks."""
 
-    def __init__(self, n_blocks: int, page_size: int):
+    def __init__(self, n_blocks: int, page_size: int, *,
+                 kv_dtype: str = "float32",
+                 page_bytes: Optional[int] = None):
         if n_blocks < 1 or page_size < 1:
             raise ValueError("need n_blocks >= 1 and page_size >= 1")
+        if kv_dtype not in _KV_ITEMSIZE:
+            raise ValueError(f"unsupported kv_dtype {kv_dtype!r}; "
+                             f"known: {sorted(_KV_ITEMSIZE)}")
         self.n_blocks = n_blocks
         self.page_size = page_size
+        # storage dtype of the device page arrays this pool describes,
+        # and the per-page device footprint (scale sidecars included) —
+        # pure metadata here, but it makes ``stats()`` report bytes so
+        # equal-memory comparisons across kv dtypes stay honest
+        self.kv_dtype = kv_dtype
+        self.page_bytes = page_bytes
         self._blocks = [_Block(i) for i in range(n_blocks)]
         self._free: deque = deque(range(n_blocks))
         self._evictable: "OrderedDict[int, None]" = OrderedDict()  # LRU
@@ -367,9 +402,14 @@ class BlockPool:
         live = [b for b in self._blocks if b.ref > 0]
         used_rows = sum(len(b.tokens) for b in live)
         cap_rows = len(live) * self.page_size
+        pb = self.page_bytes
         return {
             "n_blocks": self.n_blocks,
             "page_size": self.page_size,
+            "kv_dtype": self.kv_dtype,
+            "page_bytes": pb,
+            "pool_bytes": None if pb is None else pb * self.n_blocks,
+            "live_bytes": None if pb is None else pb * len(live),
             "free_blocks": len(self._free),
             "cached_blocks": len(self._evictable),
             "live_blocks": len(live),

@@ -48,7 +48,9 @@ _MARKER_RE = re.compile(
 # dense and paged — the §6 reference table documents exactly these
 SERVING_OPS = ("embedding", "cache_update", "chunk_attention",
                "decode_attention", "paged_cache_update",
-               "paged_chunk_attention", "paged_decode_attention")
+               "paged_chunk_attention", "paged_decode_attention",
+               "paged_cache_update_q", "paged_chunk_attention_q",
+               "paged_decode_attention_q")
 
 
 def _first_line(text: str) -> str:

@@ -153,31 +153,54 @@ def backend_table(records: Sequence[Tuple[str, Dict]]) -> str:
     return "\n".join(out)
 
 
+def _bytes_per_token(pg: Dict) -> str:
+    """KV bytes per cached token for one paged section (page_bytes spread
+    over the page_size rows it stores — includes int8 scale sidecars)."""
+    pb, ps = pg.get("page_bytes"), pg.get("page_size")
+    return f"{pb / ps:.0f}" if pb and ps else "-"
+
+
 def paged_table(records: Sequence[Tuple[str, Dict]]) -> str:
     """Markdown paged-KV-cache table from serve_bench JSON records (the
-    ``"paged"`` section): concurrent-request capacity at equal memory
-    (dense vs paged), prefix-hit vs cold TTFT with the deterministic
-    prefill-tick counts, prefix hit rate, CoW count and internal
-    fragmentation of the block pool."""
-    out = ["| config | page x blocks | concurrent (dense -> paged) | "
-           "ttft cold | ttft hit | prefill ticks (cold -> hit) | "
-           "hit rate | CoW | frag | exact |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+    ``"paged"`` and ``"paged_kv8"`` sections): KV dtype and bytes/token,
+    concurrent-request capacity at equal memory (dense vs paged for fp32
+    rows; fp32-paged vs int8-paged at equal pool bytes for kv8 rows),
+    prefix-hit vs cold TTFT with the deterministic prefill-tick counts,
+    prefix hit rate, CoW count and internal fragmentation of the pool."""
+    out = ["| config | kv dtype | page x blocks | B/token | "
+           "concurrent (at equal memory) | ttft cold | ttft hit | "
+           "prefill ticks (cold -> hit) | hit rate | CoW | frag | exact |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for label, rec in records:
-        pg = rec.get("paged")
-        if not pg:
-            continue
-        cap, pre, pool = pg["capacity"], pg["prefix"], pg.get("pool", {})
-        out.append(
-            f"| {label} | {pg['page_size']} x {pg['n_blocks']} | "
-            f"{cap['dense_concurrent']} -> {cap['paged_concurrent']} "
-            f"({cap['ratio']:.1f}x) | "
-            f"{_fmt_s(pre.get('ttft_cold_s') or 0)} | "
-            f"{_fmt_s(pre.get('ttft_hit_s') or 0)} | "
-            f"{pre['prefill_ticks_cold']} -> {pre['prefill_ticks_hit']} | "
-            f"{pool.get('hit_rate', 0):.0%} | {pool.get('cow_count', 0)} | "
-            f"{pool.get('fragmentation', 0):.0%} | "
-            f"{'yes' if pg.get('token_exact') else 'NO'} |")
+        for key in ("paged", "paged_kv8"):
+            pg = rec.get(key)
+            if not pg:
+                continue
+            cap, pre = pg["capacity"], pg["prefix"]
+            pool = pg.get("pool", {})
+            if key == "paged":
+                conc = (f"dense {cap['dense_concurrent']} -> "
+                        f"paged {cap['paged_concurrent']} "
+                        f"({cap['ratio']:.1f}x)")
+                ticks = (f"{pre['prefill_ticks_cold']} -> "
+                         f"{pre['prefill_ticks_hit']}")
+                cold_s = _fmt_s(pre.get("ttft_cold_s") or 0)
+                hit_s = _fmt_s(pre.get("ttft_hit_s") or 0)
+                exact = bool(pg.get("token_exact"))
+            else:
+                r = cap.get("equal_memory_vs_fp32_paged", 0.0)
+                conc = (f"fp32 {cap['fp32_paged_concurrent']} -> "
+                        f"int8 {cap['paged_concurrent']} ({r:.1f}x)")
+                ticks = cold_s = hit_s = "-"
+                exact = bool(pg.get("token_exact", {}).get("all"))
+            out.append(
+                f"| {label} | {pg.get('kv_dtype', 'float32')} | "
+                f"{pg['page_size']} x {pg['n_blocks']} | "
+                f"{_bytes_per_token(pg)} | {conc} | {cold_s} | {hit_s} | "
+                f"{ticks} | {pool.get('hit_rate', 0):.0%} | "
+                f"{pool.get('cow_count', 0)} | "
+                f"{pool.get('fragmentation', 0):.0%} | "
+                f"{'yes' if exact else 'NO'} |")
     return "\n".join(out)
 
 
@@ -256,7 +279,7 @@ def main() -> None:
             print("## Serving-op backends (serve_bench backend sweep)\n")
             print(backend_table(serve))
             print()
-        if any("paged" in rec for _, rec in serve):
+        if any("paged" in rec or "paged_kv8" in rec for _, rec in serve):
             print("## Paged KV cache (serve_bench paged section)\n")
             print(paged_table(serve))
             print()
