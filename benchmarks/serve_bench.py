@@ -16,6 +16,11 @@ Measures, on the example graph LM:
   each registered backend, normalised against ``ref``;
 * an autotune pass: the serving Programs compiled under ``AutotunePolicy``
   with measurements persisted to the on-disk autotune cache;
+* trace-driven load (``"load"`` JSON section): a seeded bursty trace with
+  priority tiers and shared prefix populations (``repro.runtime.loadgen``)
+  against a paged self-healing engine with bounded admission — goodput
+  under SLO (p99 TTFT + p99 inter-token gap in deterministic ticks),
+  overload shedding and per-tier breakdowns;
 * the paged KV cache (``"paged"`` JSON section): max concurrent requests
   at equal memory, dense vs paged; prefix-hit vs cold TTFT (wall time AND
   deterministic prefill-tick counts) on a shared-prefix workload;
@@ -34,7 +39,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,9 +52,26 @@ from repro.tools.docgen import SERVING_OPS
 from repro.tools.report import _fmt_assignment
 
 # bump when the JSON record's shape changes incompatibly (BENCH_serve.json
-# is a tracked trajectory — downstream tooling keys on this)
-SCHEMA_VERSION = 2
+# is a tracked trajectory — downstream tooling keys on this).
+# v3: added the "load" section (trace-driven SLO goodput) and the
+# engine summary's "self_heal" sub-record; every v2 section is unchanged.
+SCHEMA_VERSION = 3
 DEFAULT_JSON = "BENCH_serve.json"
+
+# section -> required keys; ``validate_record`` (and CI, via --validate)
+# checks the record's shape before it is uploaded as a trajectory artifact
+REQUIRED_SECTIONS: Dict[str, Tuple[str, ...]] = {
+    "config": ("smoke", "n_slots", "chunk", "model"),
+    "engine": ("tokens_per_s", "latency_s", "ttft_s", "self_heal"),
+    "unbatched": ("tokens_per_s",),
+    "prefill_gap": ("max_gap_chunked_s", "gap_bounded"),
+    "dispatch": ("call_us", "bind_us"),
+    "paged": ("capacity", "prefix", "token_exact", "pool"),
+    "paged_kv8": ("capacity", "token_exact", "pool"),
+    "load": ("slo", "trace", "overall", "tiers"),
+    "backend_sweep": (),
+    "autotune": ("assignment",),
+}
 
 SMOKE_CFG = GraphLMConfig(vocab=61, d_model=32, n_layers=1, n_heads=4,
                           n_kv_heads=2, d_ff=64)
@@ -438,6 +460,46 @@ def _paged_kv8_experiment(cfg, *, chunk, cache_cap, page_size, quantize,
     }
 
 
+def _load_experiment(cfg, *, n_slots, chunk, cache_cap, quantize,
+                     seed: int, smoke: bool) -> Dict[str, Any]:
+    """Trace-driven load: a seeded bursty trace (priority tiers + shared
+    prefix populations) against a paged self-healing engine with bounded
+    admission, scored for goodput under SLO (see repro.runtime.loadgen).
+    The tick-denominated numbers (goodput counts, shed/drop, ttft/gap
+    percentiles in ticks) are deterministic for a given seed; wall-second
+    figures ride along for operators."""
+    from repro.runtime.loadgen import (SLO, PrefixPopulation, TierSpec,
+                                       TraceConfig, generate_trace, run_load)
+    trace_cfg = TraceConfig(
+        seed=seed,
+        n_requests=24 if smoke else 96,
+        vocab=cfg.vocab,
+        mean_interarrival_ticks=3.0,
+        arrival="gamma",
+        burstiness=4.0,
+        prompt_len_mean=8.0, prompt_len_sigma=0.5,
+        prompt_len_max=max(16, cache_cap // 3),
+        new_tokens_mean=5.0, new_tokens_sigma=0.5, new_tokens_max=10,
+        tiers=(TierSpec("interactive", priority=1, weight=0.6,
+                        deadline_ticks=600),
+               TierSpec("batch", priority=0, weight=0.4)),
+        prefix_populations=(PrefixPopulation("sys_prompt", prefix_len=8),),
+        prefix_share_p=0.5)
+    trace = generate_trace(trace_cfg)
+    slo = SLO(ttft_ticks=60, gap_ticks=8)
+    engine, _ = build_lm_serving(
+        cfg, n_slots=n_slots, chunk=chunk, cache_cap=cache_cap,
+        paged=True, page_size=8, quantize=quantize,
+        max_queue=4 * n_slots, self_heal=True)
+    # warm the Programs so wall-clock goodput measures steady state
+    warm = EngineRequest(uid=-1, prompt=trace.requests[0].prompt,
+                         max_new_tokens=2)
+    engine.submit(warm)
+    engine.run()
+    engine.reset_metrics()
+    return run_load(engine, trace, slo)
+
+
 def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
                        ) -> Dict[str, float]:
     """µs/call of the kwargs Program path vs the bind() fast path on the
@@ -502,6 +564,9 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["paged_kv8"] = _paged_kv8_experiment(
         cfg, chunk=chunk, cache_cap=cache_cap, page_size=8,
         quantize=quantize, seed=seed, fp32_paged=result["paged"])
+    result["load"] = _load_experiment(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        quantize=quantize, seed=seed, smoke=smoke)
     params = init_lm_params(cfg, 0)
     result["backend_sweep"] = _backend_sweep(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
@@ -510,6 +575,41 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         reps=2 if smoke else 3, cache_path=autotune_cache, params=params)
     return result
+
+
+def validate_record(rec: Dict[str, Any]) -> List[str]:
+    """Schema check for a BENCH_serve.json record; returns the list of
+    problems (empty = valid).  CI runs this (``--validate``) before the
+    record is uploaded as a trajectory artifact, so a benchmark refactor
+    that silently drops a section fails the build instead of poisoning
+    the trend history."""
+    problems: List[str] = []
+    if rec.get("schema_version") != SCHEMA_VERSION:
+        problems.append(f"schema_version {rec.get('schema_version')!r} "
+                        f"!= {SCHEMA_VERSION}")
+    for section, keys in REQUIRED_SECTIONS.items():
+        body = rec.get(section)
+        if not isinstance(body, dict):
+            problems.append(f"missing section {section!r}")
+            continue
+        for k in keys:
+            if k not in body:
+                problems.append(f"section {section!r} missing key {k!r}")
+    load = rec.get("load")
+    if isinstance(load, dict):
+        ov = load.get("overall", {})
+        for k in ("n_offered", "n_finished", "n_shed", "n_dropped",
+                  "n_slo_met", "goodput_requests_per_s", "ttft_ticks",
+                  "gap_ticks"):
+            if k not in ov:
+                problems.append(f"load.overall missing key {k!r}")
+        accounted = sum(ov.get(k, 0) for k in
+                        ("n_finished", "n_shed", "n_dropped", "n_incomplete"))
+        if accounted != ov.get("n_offered"):
+            problems.append("load.overall conservation violated: "
+                            f"{accounted} accounted vs "
+                            f"{ov.get('n_offered')} offered")
+    return problems
 
 
 def main(argv=None) -> int:
@@ -527,7 +627,20 @@ def main(argv=None) -> int:
                     help="write the schema-versioned JSON record here "
                          f"instead of stdout (bare --json: {DEFAULT_JSON} "
                          "at the repo root)")
+    ap.add_argument("--validate", metavar="PATH", default=None,
+                    help="validate an existing JSON record against the "
+                         "current schema and exit (no benchmark run)")
     args = ap.parse_args(argv)
+
+    if args.validate is not None:
+        with open(args.validate) as f:
+            rec = json.load(f)
+        problems = validate_record(rec)
+        for p in problems:
+            print(f"INVALID: {p}")
+        if not problems:
+            print(f"# {args.validate}: valid schema v{SCHEMA_VERSION}")
+        return 1 if problems else 0
 
     rec = run(smoke=args.smoke, quantize="int8" if args.int8 else None,
               n_slots=args.slots, chunk=args.chunk,
@@ -564,6 +677,16 @@ def main(argv=None) -> int:
           f"({k8c['equal_memory_vs_fp32_paged']:.1f}x at equal memory); "
           f"cow copies {k8['prefix']['cow_copies']}; "
           f"exact={k8['token_exact']['all']}")
+    ld = rec["load"]
+    ov = ld["overall"]
+    print(f"# load    : {ov['n_offered']} offered -> "
+          f"{ov['n_finished']} finished, {ov['n_shed']} shed, "
+          f"{ov['n_dropped']} dropped; "
+          f"{ov['n_slo_met']} met SLO (ttft<={ld['slo']['ttft_ticks']}t, "
+          f"gap<={ld['slo']['gap_ticks']}t) -> "
+          f"{ov['goodput_requests_per_s']:.1f} req/s goodput; "
+          f"ttft p99 {ov['ttft_ticks']['p99']:.0f}t, "
+          f"gap p99 {ov['gap_ticks']['p99']:.0f}t")
     for label, row in rec["backend_sweep"].items():
         print(f"# sweep[{label:>6}]: prefill {row['prefill_tok_s']:,.0f} tok/s "
               f"({row['prefill_vs_ref']:.2f}x ref), "

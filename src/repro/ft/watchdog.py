@@ -65,6 +65,10 @@ class HangDetector:
         self.fired = False
 
     def __enter__(self):
+        # re-armable: one detector can guard many steps (the serving
+        # engine arms it around every tick), so each arm starts clean
+        self.fired = False
+
         def fire():
             self.fired = True
             self.on_hang()
@@ -75,6 +79,10 @@ class HangDetector:
         return self
 
     def __exit__(self, *exc):
+        # disarm; if the timer already fired this is a no-op (cancel() on
+        # a completed Timer does nothing), so the callback runs at most
+        # once per arm — there is no disarm/fire double-report race
         if self._timer is not None:
             self._timer.cancel()
+            self._timer = None
         return False

@@ -1,12 +1,16 @@
-"""Runtime: train/serve step factories, continuous batching, and the
-Program-backed serving engine."""
+"""Runtime: train/serve step factories, continuous batching, the
+Program-backed serving engine, and trace-driven load generation."""
 
 from repro.runtime.batching import ContinuousBatcher, Request, SlotScheduler
-from repro.runtime.engine import (AsyncEngine, Engine, EngineMetrics,
+from repro.runtime.engine import (AsyncEngine, CheckpointSlot, Engine,
+                                  EngineCheckpoint, EngineMetrics,
                                   EngineRequest, PagedProgramStepper,
-                                  ProgramStepper, UnbatchedReference,
-                                  build_lm_serving)
+                                  ProgramStepper, TickFailure,
+                                  UnbatchedReference, build_lm_serving)
 from repro.runtime.kv_cache import BlockPool
+from repro.runtime.loadgen import (SLO, PrefixPopulation, TierSpec, Trace,
+                                   TraceConfig, TraceRequest, generate_trace,
+                                   run_load)
 from repro.runtime.serve import make_decode_step, make_prefill_step, serve_shardings
 from repro.runtime.train import make_train_step, train_state_shardings
 
@@ -14,5 +18,8 @@ __all__ = ["ContinuousBatcher", "Request", "SlotScheduler",
            "AsyncEngine", "Engine", "EngineMetrics", "EngineRequest",
            "ProgramStepper", "PagedProgramStepper", "UnbatchedReference",
            "BlockPool", "build_lm_serving",
+           "EngineCheckpoint", "CheckpointSlot", "TickFailure",
+           "SLO", "TierSpec", "PrefixPopulation", "Trace", "TraceConfig",
+           "TraceRequest", "generate_trace", "run_load",
            "make_decode_step", "make_prefill_step", "serve_shardings",
            "make_train_step", "train_state_shardings"]

@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +61,7 @@ class SlotScheduler:
         self.max_queue = max_queue
         self.active: List[Optional[Any]] = [None] * n_slots
         self._heap: List[Tuple[int, int, Any]] = []   # (-priority, seq, req)
+        self._active_seq: Dict[int, int] = {}         # slot -> submit seq
         self._seq = 0
         self.n_submitted = 0
         self.n_rejected = 0
@@ -117,10 +118,23 @@ class SlotScheduler:
             if self.active[slot] is None and self._heap:
                 if can_admit is not None and not can_admit(self._heap[0][2]):
                     break
-                _, _, req = heapq.heappop(self._heap)
+                _, seq, req = heapq.heappop(self._heap)
                 self.active[slot] = req
+                self._active_seq[slot] = seq
                 out.append((slot, req))
         return out
+
+    def preempt(self, slot: int) -> Any:
+        """Evict ``slot``'s request back into the queue at its ORIGINAL
+        submit position (the self-healing engine requeues every in-flight
+        request after a crashed tick).  Not a terminal state: no counter
+        moves (busy -> queued keeps conservation), and ``max_queue`` is
+        not applied — already-admitted work is never shed by its own
+        recovery."""
+        seq = self._active_seq[slot]
+        req = self._release(slot)
+        heapq.heappush(self._heap, (-getattr(req, "priority", 0), seq, req))
+        return req
 
     def finish(self, slot: int) -> Any:
         """Release ``slot``, counting its request as finished."""
@@ -140,6 +154,7 @@ class SlotScheduler:
         if req is None:
             raise ValueError(f"slot {slot} is not active")
         self.active[slot] = None
+        self._active_seq.pop(slot, None)
         return req
 
     def drop_queued(self, pred: Callable[[Any], bool]) -> List[Any]:

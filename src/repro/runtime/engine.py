@@ -29,6 +29,23 @@ Programs.  For int8 this requires every Program variant to share one set
 of calibrated activation scales (see :func:`build_lm_serving`), because
 dynamic per-batch scales would make a request's tokens depend on its
 batch neighbours.
+
+Self-healing (``self_heal=True``): every tick's Program call runs under
+the :mod:`repro.ft` watchdogs — a :class:`~repro.ft.watchdog.HangDetector`
+deadline (``hang_timeout``) and a :class:`~repro.ft.watchdog.StepWatchdog`
+straggler tracker.  A tick that raises, or that overruns the hang
+deadline, is DISCARDED: the engine restores the block pool to the
+checkpoint taken at the start of the tick (:meth:`Engine.checkpoint` —
+per-slot prompt + generated tokens + block table, plus a
+:meth:`~repro.runtime.kv_cache.BlockPool.snapshot`), tears the slots
+down, and requeues every in-flight request at its original queue
+position.  A requeued request resumes by prefilling its token stream
+(prompt + tokens generated so far); on the paged stepper it keeps its
+sequence and block tables, so prefill fast-forwards past every row that
+was already written — only the failed tick's work is recomputed.  The
+exactness contract extends across recovery: greedy output after a crash
+or hang is token-identical to an uninterrupted run, and no token is ever
+re-emitted to a streaming callback (``tests/test_fault_injection.py``).
 """
 
 from __future__ import annotations
@@ -43,6 +60,8 @@ import numpy as np
 
 from repro.core.program import compile
 from repro.core.selector import BackendPolicy
+from repro.ft.coordinator import Coordinator
+from repro.ft.watchdog import HangDetector, StepWatchdog
 from repro.models.graph_lm import (GraphLMConfig, build_decode_graph,
                                    build_paged_decode_graph,
                                    build_paged_prefill_graph,
@@ -55,6 +74,7 @@ __all__ = [
     "EngineRequest", "EngineMetrics", "Engine", "AsyncEngine",
     "ProgramStepper", "PagedProgramStepper", "UnbatchedReference",
     "build_lm_serving", "padded_len",
+    "EngineCheckpoint", "CheckpointSlot", "TickFailure",
 ]
 
 
@@ -77,6 +97,7 @@ class EngineRequest:
     prompt: np.ndarray                      # (prompt_len,) int32
     max_new_tokens: int
     priority: int = 0
+    tier: Optional[str] = None              # workload tier label (loadgen)
     deadline_tick: Optional[int] = None     # absolute engine tick to finish by
     on_token: Optional[Callable[["EngineRequest", int], None]] = None
     on_finish: Optional[Callable[["EngineRequest"], None]] = None
@@ -87,11 +108,14 @@ class EngineRequest:
     submit_tick: int = -1
     first_token_tick: Optional[int] = None
     finish_tick: Optional[int] = None
+    n_requeues: int = 0                     # times recovery preempted us
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
     max_gap_s: float = 0.0                  # max wall gap between our tokens
+    max_gap_ticks: int = 0                  # same, in deterministic ticks
     _t_last_token: Optional[float] = None
+    _last_token_tick: Optional[int] = None
 
     @property
     def latency_s(self) -> Optional[float]:
@@ -101,9 +125,27 @@ class EngineRequest:
     def ttft_s(self) -> Optional[float]:
         return None if self.t_first is None else self.t_first - self.t_submit
 
+    @property
+    def ttft_ticks(self) -> Optional[int]:
+        """Deterministic TTFT: engine ticks from submit to first token.
+        A prefix hit shrinks this (prefill fast-forwards past the reused
+        rows), which is how the paged cache's latency win is asserted
+        without wall-clock noise."""
+        return (None if self.first_token_tick is None
+                else self.first_token_tick - self.submit_tick)
+
 
 def _pct(xs: Sequence[float], q: float) -> float:
+    """Percentile of a sample list; 0.0 for an empty window (a report of
+    "no data" must not crash the summary).  Single-sample and all-equal
+    windows return that value for every q (linear interpolation over one
+    distinct point) — edge cases pinned by ``tests/test_engine_metrics.py``.
+    """
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def _pct_dict(xs: Sequence[float]) -> Dict[str, float]:
+    return {"p50": _pct(xs, 50), "p95": _pct(xs, 95), "p99": _pct(xs, 99)}
 
 
 @dataclass
@@ -124,6 +166,13 @@ class EngineMetrics:
     latencies_s: List[float] = field(default_factory=list)
     ttfts_s: List[float] = field(default_factory=list)
     max_intertoken_gap_s: float = 0.0
+    # self-healing counters (all zero when self_heal is off)
+    failed_ticks: int = 0       # discarded ticks (crash + hang)
+    n_crash_failures: int = 0
+    n_hang_failures: int = 0
+    n_recoveries: int = 0
+    requeued_requests: int = 0  # slot preemptions summed over recoveries
+    straggler_ticks: int = 0    # StepWatchdog rolling-median flags
 
     @property
     def busy_slot_fraction(self) -> float:
@@ -145,11 +194,17 @@ class EngineMetrics:
             "wall_s": self.wall_s,
             "tokens_per_s": self.tokens_per_s,
             "busy_slot_fraction": self.busy_slot_fraction,
-            "latency_s": {"p50": _pct(self.latencies_s, 50),
-                          "p95": _pct(self.latencies_s, 95)},
-            "ttft_s": {"p50": _pct(self.ttfts_s, 50),
-                       "p95": _pct(self.ttfts_s, 95)},
+            "latency_s": _pct_dict(self.latencies_s),
+            "ttft_s": _pct_dict(self.ttfts_s),
             "max_intertoken_gap_s": self.max_intertoken_gap_s,
+            "self_heal": {
+                "failed_ticks": self.failed_ticks,
+                "n_crash_failures": self.n_crash_failures,
+                "n_hang_failures": self.n_hang_failures,
+                "n_recoveries": self.n_recoveries,
+                "requeued_requests": self.requeued_requests,
+                "straggler_ticks": self.straggler_ticks,
+            },
         }
 
 
@@ -370,10 +425,70 @@ class PagedProgramStepper(ProgramStepper):
 @dataclass
 class _SlotState:
     req: EngineRequest
-    pos: int = 0          # prompt tokens prefilled so far
+    pos: int = 0          # stream tokens prefilled so far
     length: int = 0       # valid cache entries
     next_token: int = 0
     decoding: bool = False
+    # the token stream prefill walks: the request's prompt, or — for a
+    # request requeued by recovery — prompt + tokens generated before the
+    # failure (re-prefilling them rebuilds the cache rows; argmax at the
+    # final position is the NEXT token, so nothing is re-emitted)
+    stream: Optional[np.ndarray] = None
+
+    @property
+    def prompt(self) -> np.ndarray:
+        return self.req.prompt if self.stream is None else self.stream
+
+
+class TickFailure(RuntimeError):
+    """A guarded tick crashed or overran the hang deadline.  With
+    ``self_heal`` the engine recovers internally; this escapes only when
+    recovery is disabled or ``max_recoveries`` consecutive failures give
+    up (a deterministic crash loop is not something to retry forever)."""
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+@dataclass
+class CheckpointSlot:
+    """In-flight state of one slot, sufficient to rebuild it: the original
+    request identity, every token generated so far (the resume stream is
+    ``prompt + out_tokens``), and — paged — the sequence id and block
+    table whose pages survive recovery."""
+
+    slot: int
+    uid: int
+    prompt: np.ndarray
+    out_tokens: List[int]
+    sid: Optional[int] = None
+    block_table: List[int] = field(default_factory=list)
+
+    @property
+    def stream(self) -> np.ndarray:
+        return np.concatenate(
+            [np.asarray(self.prompt, np.int32),
+             np.asarray(self.out_tokens, np.int32)])
+
+
+@dataclass
+class EngineCheckpoint:
+    """Host-side engine state captured at the start of a guarded tick —
+    everything recovery needs (queued requests stay in the scheduler and
+    are only mutated between ticks, so they need no snapshot)."""
+
+    tick: int
+    slots: List[CheckpointSlot]
+    pool: Optional[Dict[str, Any]] = None    # BlockPool.snapshot()
+
+
+@dataclass
+class _Resume:
+    """Pending resume of a requeued in-flight request (keyed by uid)."""
+
+    stream: np.ndarray
+    sid: Optional[int] = None
 
 
 class Engine:
@@ -387,7 +502,12 @@ class Engine:
     """
 
     def __init__(self, stepper: ProgramStepper, *, eos_id: int = -1,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 self_heal: bool = False,
+                 hang_timeout: Optional[float] = None,
+                 max_recoveries: int = 8,
+                 coordinator: Optional[Coordinator] = None,
+                 host_id: str = "engine"):
         self.stepper = stepper
         self.n_slots = stepper.n_slots
         self.chunk = stepper.chunk
@@ -406,6 +526,19 @@ class Engine:
         # skips re-running the prefix lookup every tick while nothing that
         # could free blocks has happened
         self._gate_blocked: Optional[Tuple[int, int]] = None
+        # ---- self-healing (ft/ watchdogs wired into the tick loop) ----
+        self.self_heal = self_heal
+        self.hang_timeout = hang_timeout
+        self.max_recoveries = max_recoveries
+        self._watchdog = StepWatchdog()
+        self._hang = (HangDetector(hang_timeout, lambda: None)
+                      if hang_timeout is not None else None)
+        self._resume: Dict[int, _Resume] = {}      # uid -> pending resume
+        self._consec_failures = 0
+        self.coordinator = coordinator
+        self.host_id = host_id
+        if coordinator is not None:
+            coordinator.register(host_id)
 
     # ------------------------------------------------------------------ #
     def submit(self, req: EngineRequest) -> bool:
@@ -465,6 +598,10 @@ class Engine:
             self.metrics.max_intertoken_gap_s = max(
                 self.metrics.max_intertoken_gap_s, gap)
         req._t_last_token = now
+        if req._last_token_tick is not None:
+            req.max_gap_ticks = max(req.max_gap_ticks,
+                                    self.tick - req._last_token_tick)
+        req._last_token_tick = self.tick
         if req.on_token is not None:
             req.on_token(req, tok)
 
@@ -499,6 +636,11 @@ class Engine:
             lambda r: r.deadline_tick is not None and self.tick >= r.deadline_tick)
         for req in expired:
             req.dropped = "deadline"
+            # a requeued in-flight request still owns its pool sequence;
+            # expiring in the queue must return those blocks
+            res = self._resume.pop(req.uid, None)
+            if res is not None and res.sid is not None:
+                self.stepper.pool.release(res.sid, register=False)
             self.dropped.append(req)
             self.metrics.n_dropped += 1
             self._finalize(req)
@@ -527,15 +669,30 @@ class Engine:
                 refused: List[EngineRequest] = []
 
                 def gate(req: EngineRequest) -> bool:
-                    res = self.stepper.try_admit(req.prompt,
-                                                 req.max_new_tokens)
-                    if res is None:
+                    res = self._resume.get(req.uid)
+                    if res is not None and res.sid is not None:
+                        # requeued in-flight request: it kept its sequence
+                        # (blocks + reservations) across recovery, so no
+                        # pool admission is needed — or possible
+                        return True
+                    admitted = self.stepper.try_admit(req.prompt,
+                                                      req.max_new_tokens)
+                    if admitted is None:
                         refused.append(req)
                         return False
-                    claims[id(req)] = res
+                    claims[id(req)] = admitted
                     return True
 
                 for slot, req in self.sched.admit(gate):
+                    res = self._resume.pop(req.uid, None)
+                    if res is not None and res.sid is not None:
+                        # resume from the surviving block table: prefill
+                        # fast-forwards past every row already in the pool
+                        self.stepper.attach(slot, res.sid)
+                        done = self.stepper.pool.sequence(res.sid).n_tokens
+                        self.slots[slot] = _SlotState(req=req, pos=done,
+                                                      stream=res.stream)
+                        continue
                     sid, reused = claims[id(req)]
                     self.stepper.attach(slot, sid)
                     # a prefix hit fast-forwards prefill past the reused rows
@@ -547,18 +704,66 @@ class Engine:
                                       if refused else None)
         else:
             for slot, req in self.sched.admit():
-                self.slots[slot] = _SlotState(req=req)
+                res = self._resume.pop(req.uid, None)
+                # dense recovery re-prefills the whole stream from row 0
+                # (per-slot caches are positional; the request may land in
+                # a different slot, so no rows can be trusted)
+                self.slots[slot] = _SlotState(
+                    req=req, stream=None if res is None else res.stream)
         prefill = [i for i, st in enumerate(self.slots)
                    if st is not None and not st.decoding]
         decode = [i for i, st in enumerate(self.slots)
                   if st is not None and st.decoding]
-        if prefill and (not decode or not self._last_was_prefill):
-            self._prefill_tick(prefill)
-            self._last_was_prefill = True
-        elif decode:
-            self._decode_tick(decode)
-            self._last_was_prefill = False
+        ckpt = (self.checkpoint() if self.self_heal and (prefill or decode)
+                else None)
+        try:
+            if prefill and (not decode or not self._last_was_prefill):
+                self._prefill_tick(prefill)
+                self._last_was_prefill = True
+            elif decode:
+                self._decode_tick(decode)
+                self._last_was_prefill = False
+            self._consec_failures = 0
+            if self.coordinator is not None:
+                self.coordinator.heartbeat(self.host_id)
+        except TickFailure as failure:
+            if not self.self_heal:
+                raise
+            self._recover(ckpt, failure)
         self.metrics.wall_s = time.perf_counter() - self._t0
+
+    def _guarded_call(self, fn, *args) -> np.ndarray:
+        """One stepper Program call under the ft/ watchdogs.
+
+        With ``self_heal``, a raised exception becomes a
+        :class:`TickFailure` ("crash"), and a call that returns after the
+        :class:`~repro.ft.watchdog.HangDetector` deadline fired is treated
+        as hung — its result is DISCARDED by raising before any slot state
+        or emission is touched.  (A real hung device call never returns;
+        in this single-process simulation "returns too late" is the
+        observable equivalent, and either way the recovery path is
+        identical: restore the pre-tick checkpoint and requeue.)  The
+        :class:`~repro.ft.watchdog.StepWatchdog` rolling median flags
+        straggler ticks into the metrics either way."""
+        self._watchdog.start()
+        try:
+            if self.self_heal and self._hang is not None:
+                with self._hang as hd:
+                    out = fn(*args)
+                if hd.fired:
+                    raise TickFailure("hang")
+            else:
+                out = fn(*args)
+        except TickFailure:
+            raise
+        except Exception as e:
+            if self.self_heal:
+                raise TickFailure(f"crash: {type(e).__name__}: {e}") from e
+            raise
+        finally:
+            if self._watchdog.stop():
+                self.metrics.straggler_ticks += 1
+        return out
 
     def _prefill_tick(self, slots: List[int]) -> None:
         b, c = self.n_slots, self.chunk
@@ -567,20 +772,21 @@ class Engine:
         n_new = np.zeros((b,), np.int32)
         for s in slots:
             st = self.slots[s]
-            n = min(c, len(st.req.prompt) - st.pos)
-            tokens[s, :n] = st.req.prompt[st.pos:st.pos + n]
+            stream = st.prompt
+            n = min(c, len(stream) - st.pos)
+            tokens[s, :n] = stream[st.pos:st.pos + n]
             start[s] = st.pos
             n_new[s] = n
-        logits = self.stepper.prefill(tokens, start, n_new)
+        logits = self._guarded_call(self.stepper.prefill, tokens, start, n_new)
         self.metrics.prefill_ticks += 1
         self.metrics.busy_slot_ticks += len(slots)
         for s in slots:
             st = self.slots[s]
             n = int(n_new[s])
             st.pos += n
-            if st.pos >= len(st.req.prompt):
+            if st.pos >= len(st.prompt):
                 st.decoding = True
-                st.length = len(st.req.prompt)
+                st.length = len(st.prompt)
                 first = int(np.argmax(logits[s, n - 1]))
                 st.next_token = first
                 self._emit(st, first)
@@ -596,7 +802,7 @@ class Engine:
             tokens[s, 0] = st.next_token
             start[s] = st.length
             n_new[s] = 1
-        logits = self.stepper.decode(tokens, start, n_new)
+        logits = self._guarded_call(self.stepper.decode, tokens, start, n_new)
         self.metrics.decode_ticks += 1
         self.metrics.busy_slot_ticks += len(slots)
         for s in slots:
@@ -611,6 +817,70 @@ class Engine:
         st = self.slots[slot]
         if tok == self.eos_id or len(st.req.out_tokens) >= st.req.max_new_tokens:
             self._finish_slot(slot)
+
+    # ------------------------------------------------------------------ #
+    # self-healing: checkpoint / recover
+    # ------------------------------------------------------------------ #
+    def checkpoint(self) -> EngineCheckpoint:
+        """In-flight state as of now: per-slot prompt + generated tokens
+        (+ sequence id and block table when paged) and a full
+        :meth:`~repro.runtime.kv_cache.BlockPool.snapshot`.  Taken at the
+        start of every guarded tick; host-side slot state is only mutated
+        after a successful Program call, so the checkpoint stays valid
+        through any failure of the tick it guards."""
+        slots: List[CheckpointSlot] = []
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            entry = CheckpointSlot(slot=slot, uid=st.req.uid,
+                                   prompt=st.req.prompt,
+                                   out_tokens=list(st.req.out_tokens))
+            if self.paged:
+                sid = self.stepper._slot_seq[slot]
+                entry.sid = sid
+                entry.block_table = self.stepper.pool.block_table(sid)
+            slots.append(entry)
+        pool = self.stepper.pool.snapshot() if self.paged else None
+        return EngineCheckpoint(tick=self.tick, slots=slots, pool=pool)
+
+    def _recover(self, ckpt: EngineCheckpoint, failure: TickFailure) -> None:
+        """Discard the failed tick and rebuild from ``ckpt``: restore the
+        pool (bookkeeping back in lockstep with the device pages — the
+        failed tick's recorded-but-unwritten rows and index entries
+        vanish), preempt every slot back into the queue at its original
+        position, and stage each request's resume stream.  The next ticks
+        re-admit them FIFO; paged requests keep their sequence, so prefill
+        fast-forwards past every surviving row."""
+        self.metrics.failed_ticks += 1
+        if failure.reason == "hang":
+            self.metrics.n_hang_failures += 1
+        else:
+            self.metrics.n_crash_failures += 1
+        self._consec_failures += 1
+        if self._consec_failures > self.max_recoveries:
+            raise TickFailure(
+                f"giving up after {self._consec_failures} consecutive "
+                f"tick failures (last: {failure.reason})") from failure
+        if self.paged:
+            self.stepper.pool.restore(ckpt.pool)   # ends in check_integrity
+            self.stepper._slot_seq.clear()
+        for entry in ckpt.slots:
+            req = self.sched.preempt(entry.slot)
+            assert req.uid == entry.uid, \
+                f"slot {entry.slot}: checkpoint uid {entry.uid}, live {req.uid}"
+            req.n_requeues += 1
+            self._resume[req.uid] = _Resume(stream=entry.stream,
+                                            sid=entry.sid)
+            self.slots[entry.slot] = None
+            self.metrics.requeued_requests += 1
+        self._gate_blocked = None
+        self._last_was_prefill = False
+        self.metrics.n_recoveries += 1
+        if self.coordinator is not None:
+            # a hang past the membership deadline shows up as a death;
+            # re-registering is the "restarted engine" membership event
+            self.coordinator.sweep()
+            self.coordinator.register(self.host_id)
 
     # ------------------------------------------------------------------ #
     def reset_metrics(self) -> None:
@@ -845,6 +1115,10 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                      n_blocks: Optional[int] = None,
                      max_pages: Optional[int] = None,
                      kv_dtype: str = "float32",
+                     self_heal: bool = False,
+                     hang_timeout: Optional[float] = None,
+                     max_recoveries: int = 8,
+                     coordinator: Optional[Coordinator] = None,
                      ) -> Tuple[Engine, UnbatchedReference]:
     """Compile the serving Programs for a graph LM and return the engine
     plus its unbatched reference (sharing weights and, under int8, the
@@ -879,7 +1153,9 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
         stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
                                  cache_cap=cache_cap, policy=policy,
                                  quantize=quantize, calib_ranges=ranges)
-    engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue)
+    engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue,
+                    self_heal=self_heal, hang_timeout=hang_timeout,
+                    max_recoveries=max_recoveries, coordinator=coordinator)
     reference = UnbatchedReference(cfg, params,
                                    cache_cap=max(cache_cap,
                                                  stepper.cache_cap),

@@ -323,6 +323,72 @@ class BlockPool:
         return out
 
     # ------------------------------------------------------------------ #
+    # snapshot / restore (engine self-healing)
+    # ------------------------------------------------------------------ #
+    def snapshot(self) -> Dict[str, Any]:
+        """Full pure-python copy of the pool's bookkeeping state.
+
+        The self-healing engine captures one at the start of every guarded
+        tick: a tick that crashes or hangs mid-flight may have recorded
+        appends (and registered full pages in the prefix index) whose
+        device writes never happened — :meth:`restore` rolls the pool back
+        to the pre-tick state so bookkeeping matches the device arrays
+        again.  Blocks are append-only and frozen blocks are never
+        rewritten, so every row the restored state considers written is
+        still bit-valid on device; rows written by the failed tick become
+        garbage past each sequence's length, which the attention masking
+        already ignores."""
+        return {
+            "blocks": [(b.ref, b.frozen, list(b.tokens), b.index_key)
+                       for b in self._blocks],
+            "free": list(self._free),
+            "evictable": list(self._evictable),
+            "full": dict(self._full),
+            "partial": {k: dict(v) for k, v in self._partial.items()},
+            "seqs": {sid: (list(s.table), list(s.tokens), s.reserved)
+                     for sid, s in self._seqs.items()},
+            "next_sid": self._next_sid,
+            "reserved_total": self._reserved_total,
+            "pending_copies": list(self.pending_copies),
+            "version": self.version,
+            "counters": (self.n_admitted, self.n_admit_deferred,
+                         self.hit_tokens, self.lookup_tokens,
+                         self.cow_count, self.evictions),
+        }
+
+    def restore(self, snap: Dict[str, Any]) -> None:
+        """Restore state captured by :meth:`snapshot` (in place, so
+        steppers holding a reference keep it).  Deep-copies out of the
+        snapshot — the same snapshot can be restored repeatedly (a
+        recovered engine may crash again).  Ends with
+        :meth:`check_integrity`: a restore that does not satisfy every
+        pool invariant is an error, not a latent corruption."""
+        if len(snap["blocks"]) != self.n_blocks:
+            raise ValueError(f"snapshot has {len(snap['blocks'])} blocks, "
+                             f"pool has {self.n_blocks}")
+        for blk, (ref, frozen, tokens, key) in zip(self._blocks,
+                                                   snap["blocks"]):
+            blk.ref, blk.frozen = ref, frozen
+            blk.tokens = list(tokens)
+            blk.index_key = key
+        self._free = deque(snap["free"])
+        self._evictable = OrderedDict((bid, None)
+                                      for bid in snap["evictable"])
+        self._full = dict(snap["full"])
+        self._partial = {k: dict(v) for k, v in snap["partial"].items()}
+        self._seqs = {
+            sid: SeqState(sid=sid, table=list(table), tokens=list(tokens),
+                          n_tokens=len(tokens), reserved=reserved)
+            for sid, (table, tokens, reserved) in snap["seqs"].items()}
+        self._next_sid = snap["next_sid"]
+        self._reserved_total = snap["reserved_total"]
+        self.pending_copies = list(snap["pending_copies"])
+        self.version = snap["version"]
+        (self.n_admitted, self.n_admit_deferred, self.hit_tokens,
+         self.lookup_tokens, self.cow_count, self.evictions) = snap["counters"]
+        self.check_integrity()
+
+    # ------------------------------------------------------------------ #
     # internals
     # ------------------------------------------------------------------ #
     def _register_full(self, seq: SeqState, pi: int, bid: int) -> None:

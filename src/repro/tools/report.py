@@ -24,7 +24,7 @@ import numpy as np
 
 __all__ = ["load_records", "roofline_table", "dryrun_table",
            "weight_bytes", "activation_bytes", "footprint_table",
-           "serving_table", "backend_table", "paged_table"]
+           "serving_table", "backend_table", "paged_table", "load_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -204,6 +204,34 @@ def paged_table(records: Sequence[Tuple[str, Dict]]) -> str:
     return "\n".join(out)
 
 
+def load_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown SLO-goodput table from serve_bench JSON records (the
+    ``"load"`` section): one row per (config, tier) plus an overall row —
+    offered/finished/shed/dropped counts, SLO attainment, goodput in
+    requests/s, and the deterministic p99 TTFT and inter-token gap in
+    engine ticks against the SLO bounds."""
+    out = ["| config | tier | offered | finished | shed | dropped | "
+           "SLO met | attainment | goodput req/s | ttft p99 (ticks) | "
+           "gap p99 (ticks) |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for label, rec in records:
+        ld = rec.get("load")
+        if not ld:
+            continue
+        slo = ld.get("slo", {})
+        rows = [("overall", ld["overall"])]
+        rows += sorted(ld.get("tiers", {}).items())
+        for tier, tr in rows:
+            out.append(
+                f"| {label} | {tier} | {tr['n_offered']} | "
+                f"{tr['n_finished']} | {tr['n_shed']} | {tr['n_dropped']} | "
+                f"{tr['n_slo_met']} | {tr['slo_attainment']:.0%} | "
+                f"{tr['goodput_requests_per_s']:.1f} | "
+                f"{tr['ttft_ticks']['p99']:.0f} / {slo.get('ttft_ticks', '-')} | "
+                f"{tr['gap_ticks']['p99']:.0f} / {slo.get('gap_ticks', '-')} |")
+    return "\n".join(out)
+
+
 def roofline_table(recs: List[Dict], mesh: str = "single") -> str:
     rows = [r for r in recs if r["mesh"] == mesh]
     out = ["| arch | shape | compute | memory | collective | bottleneck | "
@@ -282,6 +310,10 @@ def main() -> None:
         if any("paged" in rec or "paged_kv8" in rec for _, rec in serve):
             print("## Paged KV cache (serve_bench paged section)\n")
             print(paged_table(serve))
+            print()
+        if any("load" in rec for _, rec in serve):
+            print("## SLO goodput (serve_bench load section)\n")
+            print(load_table(serve))
             print()
     recs = load_records(args.dir)
     print("## Summary\n")

@@ -1,0 +1,121 @@
+"""EngineMetrics edge cases: percentile math on degenerate windows, the
+p50/p95/p99 summary shape, and deterministic TTFT-tick accounting —
+including under the paged cache's prefix-hit fast-forward, where the
+first token arrives in fewer ticks because prefill skips reused rows.
+"""
+
+import numpy as np
+import pytest
+
+from repro.models.graph_lm import GraphLMConfig
+from repro.runtime.engine import (EngineMetrics, EngineRequest, _pct,
+                                  _pct_dict, build_lm_serving)
+
+TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
+                     n_kv_heads=2, d_ff=64)
+
+
+# --------------------------------------------------------------------------- #
+# percentile edge cases
+# --------------------------------------------------------------------------- #
+
+def test_pct_empty_window_is_zero_not_crash():
+    for q in (0, 50, 95, 99, 100):
+        assert _pct([], q) == 0.0
+
+
+def test_pct_single_sample_every_quantile():
+    for q in (0, 50, 95, 99, 100):
+        assert _pct([3.25], q) == 3.25
+
+
+def test_pct_all_equal_window():
+    xs = [7.0] * 40
+    for q in (50, 95, 99):
+        assert _pct(xs, q) == 7.0
+
+
+def test_pct_interpolates_and_orders():
+    xs = list(np.arange(1.0, 101.0))      # 1..100
+    assert _pct(xs, 50) == pytest.approx(50.5)
+    assert _pct(xs, 0) == 1.0 and _pct(xs, 100) == 100.0
+    assert _pct(xs, 50) <= _pct(xs, 95) <= _pct(xs, 99)
+    # order-invariant
+    rng = np.random.default_rng(0)
+    shuffled = list(rng.permutation(xs))
+    for q in (50, 95, 99):
+        assert _pct(shuffled, q) == pytest.approx(_pct(xs, q))
+
+
+def test_pct_dict_shape():
+    d = _pct_dict([1.0, 2.0, 3.0])
+    assert set(d) == {"p50", "p95", "p99"}
+    assert d["p50"] <= d["p95"] <= d["p99"]
+    assert _pct_dict([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+
+
+def test_summary_has_p99_and_self_heal():
+    m = EngineMetrics(n_slots=2)
+    m.latencies_s = [0.1, 0.2, 0.9]
+    m.ttfts_s = [0.05]
+    s = m.summary()
+    for key in ("latency_s", "ttft_s"):
+        assert set(s[key]) == {"p50", "p95", "p99"}
+    assert s["ttft_s"]["p99"] == 0.05          # single sample
+    sh = s["self_heal"]
+    assert set(sh) == {"failed_ticks", "n_crash_failures", "n_hang_failures",
+                       "n_recoveries", "requeued_requests", "straggler_ticks"}
+    assert all(v == 0 for v in sh.values())    # zero when self_heal is off
+
+
+# --------------------------------------------------------------------------- #
+# deterministic TTFT ticks, with and without prefix fast-forward
+# --------------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    return build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=48,
+                            paged=True, page_size=4)[0]
+
+
+def _run_one(engine, prompt, uid):
+    req = EngineRequest(uid=uid, prompt=np.asarray(prompt, np.int32),
+                        max_new_tokens=3)
+    assert engine.submit(req), req.dropped
+    engine.run(max_ticks=engine.tick + 10_000)
+    assert req.done
+    return req
+
+
+def test_ttft_ticks_accounting(paged_engine):
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, TINY.vocab, size=10).astype(np.int32)
+    req = _run_one(paged_engine, prompt, uid=1)
+    # 10 prompt tokens at chunk 4 on an idle engine: 3 prefill ticks, the
+    # last of which emits the first token — plus the submit->admit tick
+    assert req.first_token_tick is not None
+    assert req.ttft_ticks == req.first_token_tick - req.submit_tick
+    assert req.ttft_ticks >= 3
+
+
+def test_ttft_shrinks_under_prefix_hit(paged_engine):
+    rng = np.random.default_rng(5)
+    prefix = rng.integers(0, TINY.vocab, size=16).astype(np.int32)
+    cold = _run_one(paged_engine, np.concatenate(
+        [prefix, rng.integers(0, TINY.vocab, size=2).astype(np.int32)]),
+        uid=2)
+    warm = _run_one(paged_engine, np.concatenate(
+        [prefix, rng.integers(0, TINY.vocab, size=2).astype(np.int32)]),
+        uid=3)
+    assert cold.ttft_ticks is not None and warm.ttft_ticks is not None
+    # the warm request's prefill fast-forwards past the shared prefix
+    # pages, so its first token arrives in strictly fewer ticks
+    assert warm.ttft_ticks < cold.ttft_ticks, (warm.ttft_ticks,
+                                               cold.ttft_ticks)
+    assert paged_engine.stepper.pool.hit_tokens >= len(prefix)
+
+
+def test_unsubmitted_request_has_no_ttft():
+    req = EngineRequest(uid=0, prompt=np.ones(2, np.int32), max_new_tokens=1)
+    assert req.ttft_ticks is None and req.ttft_s is None
+    assert req.latency_s is None

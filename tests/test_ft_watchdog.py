@@ -1,0 +1,141 @@
+"""Direct unit tests for the ft/ watchdogs the serving engine arms around
+every tick: StepWatchdog's rolling-median straggler detection (window
+eviction, threshold boundary) and HangDetector's arm/disarm/fire-once
+semantics.  Wall-clock-sensitive paths drive a monkeypatched
+``time.perf_counter`` so the assertions are exact, not probabilistic.
+"""
+
+import threading
+import time
+
+import pytest
+
+from repro.ft.watchdog import HangDetector, StepWatchdog
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture
+def clock(monkeypatch):
+    c = _FakeClock()
+    monkeypatch.setattr("repro.ft.watchdog.time.perf_counter", c)
+    return c
+
+
+def _step(wd, clock, dt):
+    wd.start()
+    clock.t += dt
+    return wd.stop()
+
+
+# --------------------------------------------------------------------------- #
+# StepWatchdog
+# --------------------------------------------------------------------------- #
+
+def test_no_flag_before_five_samples(clock):
+    wd = StepWatchdog(threshold=2.0)
+    for _ in range(4):
+        assert not _step(wd, clock, 1.0)
+    assert not _step(wd, clock, 100.0)      # 5th step: history still < 5
+    assert wd.stragglers == []
+    assert _step(wd, clock, 100.0)          # now the median exists
+    assert wd.stragglers == [6]
+
+
+def test_threshold_boundary_is_strict(clock):
+    wd = StepWatchdog(threshold=2.0)
+    for _ in range(5):
+        _step(wd, clock, 1.0)
+    assert not _step(wd, clock, 2.0)        # dt == threshold * median: no
+    assert _step(wd, clock, 2.0 + 1e-9)     # strictly above: yes
+    assert wd.stragglers == [7]
+
+
+def test_window_eviction_shifts_median(clock):
+    wd = StepWatchdog(window=6, threshold=2.0)
+    for _ in range(6):
+        _step(wd, clock, 1.0)
+    assert wd.median == 1.0
+    # fill the window with 10x steps; the 1.0s must be evicted
+    for _ in range(6):
+        _step(wd, clock, 10.0)
+    assert wd.median == 10.0
+    assert len(wd._times) == 6              # bounded by window
+    # 10.0 is ordinary against the new median (would have been a
+    # straggler against the evicted history)
+    assert not _step(wd, clock, 10.0)
+
+
+def test_start_required_before_stop(clock):
+    wd = StepWatchdog()
+    with pytest.raises(AssertionError):
+        wd.stop()
+
+
+def test_step_numbering_across_flags(clock):
+    wd = StepWatchdog(threshold=2.0)
+    for _ in range(5):
+        _step(wd, clock, 1.0)
+    _step(wd, clock, 5.0)
+    for _ in range(3):
+        _step(wd, clock, 1.0)
+    _step(wd, clock, 5.0)
+    assert wd.stragglers == [6, 10]
+
+
+# --------------------------------------------------------------------------- #
+# HangDetector
+# --------------------------------------------------------------------------- #
+
+def test_fires_once_when_deadline_overrun():
+    fired = []
+    hd = HangDetector(0.02, lambda: fired.append(1))
+    with hd:
+        time.sleep(0.1)
+    assert hd.fired
+    time.sleep(0.05)                        # no second callback later
+    assert fired == [1]
+
+
+def test_disarm_before_deadline_never_fires():
+    fired = []
+    hd = HangDetector(0.05, lambda: fired.append(1))
+    with hd:
+        pass                                # returns well inside deadline
+    time.sleep(0.12)                        # past where the timer would be
+    assert not hd.fired
+    assert fired == []
+    assert hd._timer is None                # fully disarmed
+
+
+def test_rearm_resets_fired_flag():
+    """One detector guards many ticks (the engine arms it per tick): a
+    fired flag from a hung step must not leak into the next arm."""
+    fired = []
+    hd = HangDetector(0.02, lambda: fired.append(1))
+    with hd:
+        time.sleep(0.1)
+    assert hd.fired and fired == [1]
+    with hd:
+        pass                                # fast step
+    assert not hd.fired, "fired flag leaked across re-arm"
+    assert fired == [1]
+
+
+def test_exit_after_fire_is_clean():
+    """Disarm racing the callback: __exit__ after the timer fired must
+    not double-report or raise — cancel() on a completed Timer is a
+    no-op, so the callback count stays exactly one per overrun arm."""
+    calls = []
+    hd = HangDetector(0.01, lambda: calls.append(threading.get_ident()))
+    for _ in range(3):
+        with hd:
+            time.sleep(0.05)
+        assert hd.fired
+    assert len(calls) == 3                  # once per arm, never double

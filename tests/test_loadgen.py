@@ -1,0 +1,279 @@
+"""Trace-driven load generator properties (repro.runtime.loadgen).
+
+* determinism — the same :class:`TraceConfig` yields a byte-identical
+  trace (equal sha256 digests, equal prompt arrays), for both arrival
+  processes; different seeds diverge;
+* distribution shape — empirical interarrival / prompt-length /
+  output-length means land within a CLT-scaled tolerance of the
+  configured means (hypothesis sweeps seeds and burstiness);
+* conservation through the scheduler — every trace request reaches
+  exactly one terminal state; tier and population counts are preserved;
+  FIFO among equal priorities; shed requests are reported, not lost;
+* SLO scoring and the ``run_load`` report: per-tier sections sum to the
+  overall section, goodput counts only SLO-met requests.
+"""
+
+import numpy as np
+import pytest
+
+from repro.models.graph_lm import GraphLMConfig
+from repro.runtime.batching import SlotScheduler
+from repro.runtime.engine import EngineRequest, build_lm_serving
+from repro.runtime.loadgen import (SLO, PrefixPopulation, TierSpec, Trace,
+                                   TraceConfig, generate_trace, run_load)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
+                     n_kv_heads=2, d_ff=64)
+
+CFG = TraceConfig(
+    seed=3, n_requests=40, mean_interarrival_ticks=2.0,
+    prompt_len_mean=8.0, prompt_len_max=24,
+    new_tokens_mean=5.0, new_tokens_max=10,
+    tiers=(TierSpec("interactive", priority=1, weight=0.6,
+                    deadline_ticks=500),
+           TierSpec("batch", priority=0, weight=0.4)),
+    prefix_populations=(PrefixPopulation("sys", prefix_len=8),
+                        PrefixPopulation("fewshot", prefix_len=12)),
+    prefix_share_p=0.5)
+
+
+# --------------------------------------------------------------------------- #
+# determinism
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("arrival", ["gamma", "mmpp"])
+def test_same_seed_byte_identical(arrival):
+    cfg = TraceConfig(seed=11, n_requests=64, arrival=arrival,
+                      prefix_populations=CFG.prefix_populations,
+                      prefix_share_p=0.4)
+    a, b = generate_trace(cfg), generate_trace(cfg)
+    assert a.digest() == b.digest()
+    for ra, rb in zip(a.requests, b.requests):
+        assert ra.arrival_tick == rb.arrival_tick
+        assert ra.tier == rb.tier and ra.population == rb.population
+        assert np.array_equal(ra.prompt, rb.prompt)
+    for name in a.prefixes:
+        assert np.array_equal(a.prefixes[name], b.prefixes[name])
+
+
+def test_different_seeds_diverge():
+    a = generate_trace(TraceConfig(seed=0, n_requests=32))
+    b = generate_trace(TraceConfig(seed=1, n_requests=32))
+    assert a.digest() != b.digest()
+
+
+def test_digest_covers_prompts():
+    t = generate_trace(TraceConfig(seed=5, n_requests=8))
+    mutated = Trace(config=t.config, requests=list(t.requests),
+                    prefixes=t.prefixes)
+    r0 = mutated.requests[0]
+    bent = np.array(r0.prompt, np.int32)
+    bent[0] = (bent[0] + 1) % 61
+    mutated.requests[0] = type(r0)(
+        uid=r0.uid, arrival_tick=r0.arrival_tick, prompt=bent,
+        max_new_tokens=r0.max_new_tokens, tier=r0.tier,
+        priority=r0.priority, deadline_ticks=r0.deadline_ticks,
+        population=r0.population)
+    assert mutated.digest() != t.digest()
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="tier"):
+        generate_trace(TraceConfig(tiers=()))
+    with pytest.raises(ValueError, match="arrival"):
+        generate_trace(TraceConfig(arrival="nope"))
+
+
+# --------------------------------------------------------------------------- #
+# distribution shape
+# --------------------------------------------------------------------------- #
+
+def _shape_ok(cfg):
+    trace = generate_trace(cfg)
+    s = trace.stats()
+    n = cfg.n_requests
+    # CLT bound on the sample mean of gamma interarrivals: relative sd is
+    # sqrt(cv^2 / n); mmpp's per-state cv is 1 but state runs correlate,
+    # so give it the same burstiness-scaled slack
+    tol = 6.0 * np.sqrt(max(cfg.burstiness, cfg.mmpp_burst_factor) / n)
+    assert abs(s["mean_interarrival_ticks"] - cfg.mean_interarrival_ticks) \
+        <= max(tol * cfg.mean_interarrival_ticks, 1.0), s
+    # int-rounding + clipping shift lognormal means a little; 25% covers it
+    assert abs(s["mean_prompt_len"] - cfg.prompt_len_mean) \
+        <= 0.25 * cfg.prompt_len_mean + 6.0 / np.sqrt(n), s
+    assert abs(s["mean_new_tokens"] - cfg.new_tokens_mean) \
+        <= 0.25 * cfg.new_tokens_mean + 6.0 / np.sqrt(n), s
+    # every request landed in a configured tier
+    assert sum(s["tiers"].values()) == n
+    assert set(s["tiers"]) <= {t.name for t in cfg.tiers}
+    assert s["shared_prefix_requests"] == sum(s["populations"].values())
+
+
+def test_distribution_means_default():
+    _shape_ok(TraceConfig(seed=0, n_requests=600))
+    _shape_ok(TraceConfig(seed=1, n_requests=600, arrival="mmpp"))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 10_000),
+           burst=st.floats(1.0, 6.0),
+           mean=st.floats(0.5, 8.0),
+           arrival=st.sampled_from(["gamma", "mmpp"]))
+    def test_distribution_means_property(seed, burst, mean, arrival):
+        _shape_ok(TraceConfig(seed=seed, n_requests=600, arrival=arrival,
+                              burstiness=burst,
+                              mean_interarrival_ticks=mean))
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000), share=st.floats(0.0, 1.0))
+    def test_population_membership_property(seed, share):
+        cfg = TraceConfig(seed=seed, n_requests=120,
+                          prefix_populations=CFG.prefix_populations,
+                          prefix_share_p=share)
+        trace = generate_trace(cfg)
+        for r in trace.requests:
+            if r.population is not None:
+                head = trace.prefixes[r.population]
+                assert np.array_equal(r.prompt[:len(head)], head)
+            assert len(r.prompt) >= 1
+            assert r.max_new_tokens >= 1
+
+
+# --------------------------------------------------------------------------- #
+# conservation through SlotScheduler (no model — pure scheduling)
+# --------------------------------------------------------------------------- #
+
+def _to_engine_req(tr):
+    return EngineRequest(uid=tr.uid, prompt=tr.prompt,
+                         max_new_tokens=tr.max_new_tokens,
+                         priority=tr.priority, tier=tr.tier)
+
+
+def test_trace_conserved_through_scheduler():
+    """Feed a whole trace through SlotScheduler with a synthetic service
+    loop: nothing lost, nothing duplicated, tier counts preserved, and
+    shed (queue-full) requests are visible — not silently gone."""
+    trace = generate_trace(CFG)
+    sched = SlotScheduler(n_slots=3, max_queue=6)
+    accepted, shed = [], []
+    for tr in trace.requests:
+        req = _to_engine_req(tr)
+        (accepted if sched.submit(req) else shed).append(req)
+        # drain one admission + completion round every few submissions so
+        # the queue oscillates around the cap
+        if tr.uid % 3 == 0:
+            for slot, _ in sched.admit():
+                sched.finish(slot)
+    while sched.has_work():
+        admitted = sched.admit()
+        if not admitted:
+            break
+        for slot, _ in admitted:
+            sched.finish(slot)
+    sched.check_conservation()
+    assert len(accepted) + len(shed) == len(trace.requests)
+    assert sched.n_rejected == len(shed)
+    assert sched.n_finished == len(accepted)
+    # tier conservation across the accepted/shed split
+    want = trace.stats()["tiers"]
+    got = {}
+    for r in accepted + shed:
+        got[r.tier] = got.get(r.tier, 0) + 1
+    assert got == want
+
+
+def test_fifo_among_equal_priority():
+    trace = generate_trace(TraceConfig(
+        seed=9, n_requests=30, tiers=(TierSpec("only", priority=0),)))
+    sched = SlotScheduler(n_slots=1)
+    for tr in trace.requests:
+        assert sched.submit(_to_engine_req(tr))
+    served = []
+    while sched.has_work():
+        for slot, req in sched.admit():
+            served.append(req.uid)
+            sched.finish(slot)
+    assert served == sorted(served), "equal-priority FIFO violated"
+
+
+def test_priority_tiers_preempt_queue_order():
+    """Interactive (priority 1) requests queued after batch ones are still
+    admitted first; FIFO holds within each tier."""
+    sched = SlotScheduler(n_slots=1)
+    batch = [EngineRequest(uid=i, prompt=np.ones(1, np.int32),
+                           max_new_tokens=1, priority=0) for i in range(3)]
+    inter = [EngineRequest(uid=10 + i, prompt=np.ones(1, np.int32),
+                           max_new_tokens=1, priority=1) for i in range(3)]
+    for r in batch + inter:
+        sched.submit(r)
+    served = []
+    while sched.has_work():
+        for slot, req in sched.admit():
+            served.append(req.uid)
+            sched.finish(slot)
+    assert served == [10, 11, 12, 0, 1, 2]
+
+
+# --------------------------------------------------------------------------- #
+# run_load end-to-end (one tiny engine)
+# --------------------------------------------------------------------------- #
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    return build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=48,
+                            paged=True, max_queue=3)[0]
+
+
+def test_run_load_report(paged_engine):
+    cfg = TraceConfig(
+        seed=21, n_requests=18, mean_interarrival_ticks=1.0, burstiness=5.0,
+        prompt_len_mean=7.0, prompt_len_max=20,
+        new_tokens_mean=4.0, new_tokens_max=8,
+        tiers=CFG.tiers,
+        prefix_populations=(PrefixPopulation("sys", prefix_len=8),),
+        prefix_share_p=0.5)
+    trace = generate_trace(cfg)
+    slo = SLO(ttft_ticks=30, gap_ticks=6)
+    report = run_load(paged_engine, trace, slo)
+    ov = report["overall"]
+    assert ov["n_offered"] == cfg.n_requests
+    # conservation: asserted inside run_load too, re-checked here
+    assert (ov["n_finished"] + ov["n_shed"] + ov["n_dropped"]
+            + ov["n_incomplete"] == ov["n_offered"])
+    # a 1-tick-mean burst against 2 slots + queue of 3 must shed
+    assert ov["n_shed"] > 0, "overload did not shed — queue bound inert"
+    # per-tier sections partition the overall one
+    for key in ("n_offered", "n_finished", "n_shed", "n_dropped",
+                "n_slo_met"):
+        assert sum(t[key] for t in report["tiers"].values()) == ov[key], key
+    assert ov["n_slo_met"] <= ov["n_finished"]
+    if ov["n_finished"]:
+        assert 0.0 <= ov["slo_attainment"] <= 1.0
+    assert report["pool"]["hit_rate"] > 0, "prefix population never hit"
+    assert report["trace"]["digest"] == trace.digest()
+    # goodput counts SLO-met requests only
+    if report["wall_s"] > 0:
+        assert ov["goodput_requests_per_s"] == pytest.approx(
+            ov["n_slo_met"] / report["wall_s"])
+
+
+def test_slo_met_logic():
+    r = EngineRequest(uid=0, prompt=np.ones(1, np.int32), max_new_tokens=4)
+    slo = SLO(ttft_ticks=10, gap_ticks=3)
+    assert not slo.met(r)                      # not done
+    r.done = True
+    r.submit_tick, r.first_token_tick = 5, 14  # ttft 9 <= 10
+    r.max_gap_ticks = 3
+    assert slo.met(r)
+    r.max_gap_ticks = 4
+    assert not slo.met(r)
+    r.first_token_tick = 16                    # ttft 11 > 10
+    r.max_gap_ticks = 0
+    assert not slo.met(r)
