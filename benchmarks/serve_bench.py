@@ -25,7 +25,13 @@ Measures, on the example graph LM:
   at equal memory, dense vs paged; prefix-hit vs cold TTFT (wall time AND
   deterministic prefill-tick counts) on a shared-prefix workload;
   token-exactness of the paged engine vs the dense reference; block-pool
-  stats (hit rate, CoW count, fragmentation).
+  stats (hit rate, CoW count, fragmentation);
+* speculative decoding (``"spec"`` JSON section): a decode-heavy workload
+  on the engine with greedy draft/verify speculation (one unrolled draft
+  Program call plus one batched-verify call per tick) against the same
+  engine with speculation off — draft acceptance rate, decode tokens/s
+  speculative vs baseline, and the token-exactness flag vs the unbatched
+  reference.
 
 Emits a JSON record (p50/p95 latency, TTFT, busy-slot fraction, tokens/s,
 gaps, dispatch) to stdout or ``--json``; ``--smoke`` is the fast CI
@@ -55,7 +61,11 @@ from repro.tools.report import _fmt_assignment
 # is a tracked trajectory — downstream tooling keys on this).
 # v3: added the "load" section (trace-driven SLO goodput) and the
 # engine summary's "self_heal" sub-record; every v2 section is unchanged.
-SCHEMA_VERSION = 3
+# v4: added the "spec" section (speculative decoding: accept rate, decode
+# tokens/s speculative vs baseline, token_exact) and the engine summary's
+# "spec" sub-record; percentile dicts now carry "n_samples" and report
+# empty windows as null instead of 0.0.
+SCHEMA_VERSION = 4
 DEFAULT_JSON = "BENCH_serve.json"
 
 # section -> required keys; ``validate_record`` (and CI, via --validate)
@@ -68,6 +78,8 @@ REQUIRED_SECTIONS: Dict[str, Tuple[str, ...]] = {
     "dispatch": ("call_us", "bind_us"),
     "paged": ("capacity", "prefix", "token_exact", "pool"),
     "paged_kv8": ("capacity", "token_exact", "pool"),
+    "spec": ("spec_k", "draft_layers", "accept_rate", "decode_tok_s_spec",
+             "decode_tok_s_base", "decode_speedup", "token_exact"),
     "load": ("slo", "trace", "overall", "tiers"),
     "backend_sweep": (),
     "autotune": ("assignment",),
@@ -460,6 +472,95 @@ def _paged_kv8_experiment(cfg, *, chunk, cache_cap, page_size, quantize,
     }
 
 
+def _spec_experiment(cfg, *, n_slots, chunk, cache_cap, quantize,
+                     seed: int, smoke: bool) -> Dict[str, Any]:
+    """Speculative decoding on a decode-heavy workload: the SAME engine
+    shape with and without greedy draft/verify speculation, scored on
+    decode tokens/s (the engine metrics' decode-phase wall clock, prefill
+    excluded on both sides so the ratio isolates the decode loop).
+
+    The draft model is the early-exit self-speculative half of the target
+    (``max(1, n_layers // 2)`` layers).  On the one-layer smoke model that
+    degenerates to the full model — acceptance rate exactly 1.0 — which is
+    precisely what makes the smoke number a dispatch-overhead measurement:
+    every tick commits spec_k+1 tokens for two Program calls (one unrolled
+    draft, one batched verify) where the baseline pays one call per token.
+    The acceptance bar (>= 1.5x decode tokens/s in smoke) rides on that
+    call-count ratio, not on kernel speed; smoke uses a wide K (the
+    all-accept draft makes extra width free) and each engine's rate is
+    the best of ``reps`` identical bursts, because a single burst on this
+    box has enough scheduler noise to swamp the ratio.
+
+    Token-exactness of the speculative engine vs the unbatched reference
+    AND vs the non-speculative engine on every burst is recorded as
+    ``token_exact`` (greedy speculation is lossless; False here is a bug,
+    and report.spec_table renders it loudly)."""
+    spec_k = 7 if smoke else 4
+    draft_layers = max(1, cfg.n_layers // 2)
+    max_new = 32
+    n_requests = 12
+    reps = 5 if smoke else 3
+    rng = np.random.default_rng(seed + 7)
+    workload = [(rng.integers(0, cfg.vocab,
+                              size=int(rng.integers(2, 11))).astype(np.int32),
+                 max_new) for _ in range(n_requests)]
+
+    def run_one(k: int):
+        """Best steady-state decode rate over ``reps`` bursts, the last
+        burst's summary, and every burst's requests (outputs are
+        deterministic, so all bursts must agree token-for-token)."""
+        engine, ref = build_lm_serving(
+            cfg, n_slots=n_slots, chunk=chunk, cache_cap=cache_cap,
+            quantize=quantize, spec_k=k,
+            draft_layers=draft_layers if k else None)
+        warm = EngineRequest(uid=-1, prompt=workload[0][0], max_new_tokens=2)
+        engine.submit(warm)
+        engine.run()                       # compile outside the timed region
+        best, summary, all_reqs = 0.0, None, []
+        for rep in range(reps):
+            engine.reset_metrics()
+            reqs = [EngineRequest(uid=100 * rep + i, prompt=p,
+                                  max_new_tokens=m)
+                    for i, (p, m) in enumerate(workload)]
+            for r in reqs:
+                assert engine.submit(r), r.dropped
+            engine.run(max_ticks=engine.tick + 100_000)
+            summary = engine.metrics.summary()
+            best = max(best, summary["spec"]["decode_tokens_per_s"])
+            all_reqs.extend(reqs)
+        return best, summary, all_reqs, ref
+
+    base_rate, _, base_reqs, _ = run_one(0)
+    spec_rate, spec_summary, spec_reqs, ref = run_one(spec_k)
+
+    ref_chunk = max(padded_len(len(p), chunk) for p, _ in workload)
+    oracle = [ref.generate(p, m, chunk=ref_chunk) for p, m in workload]
+    exact = all(
+        r.out_tokens == oracle[i % n_requests]
+        for i, r in enumerate(spec_reqs))
+    # and identical to the non-speculative engine on the same bursts —
+    # speculation must be invisible in the tokens, not just close
+    exact = exact and all(a.out_tokens == b.out_tokens
+                          for a, b in zip(spec_reqs, base_reqs))
+
+    sp = spec_summary["spec"]
+    return {
+        "spec_k": spec_k,
+        "draft_layers": draft_layers,
+        "n_layers": cfg.n_layers,
+        "workload": {"n_requests": n_requests, "max_new": max_new,
+                     "reps": reps},
+        "spec_ticks": sp["spec_ticks"],
+        "proposed": sp["proposed"],
+        "accepted": sp["accepted"],
+        "accept_rate": sp["accept_rate"],
+        "decode_tok_s_spec": spec_rate,
+        "decode_tok_s_base": base_rate,
+        "decode_speedup": spec_rate / base_rate if base_rate else 0.0,
+        "token_exact": bool(exact),
+    }
+
+
 def _load_experiment(cfg, *, n_slots, chunk, cache_cap, quantize,
                      seed: int, smoke: bool) -> Dict[str, Any]:
     """Trace-driven load: a seeded bursty trace (priority tiers + shared
@@ -564,6 +665,9 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["paged_kv8"] = _paged_kv8_experiment(
         cfg, chunk=chunk, cache_cap=cache_cap, page_size=8,
         quantize=quantize, seed=seed, fp32_paged=result["paged"])
+    result["spec"] = _spec_experiment(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        quantize=quantize, seed=seed, smoke=smoke)
     result["load"] = _load_experiment(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         quantize=quantize, seed=seed, smoke=smoke)
@@ -595,6 +699,49 @@ def validate_record(rec: Dict[str, Any]) -> List[str]:
         for k in keys:
             if k not in body:
                 problems.append(f"section {section!r} missing key {k!r}")
+
+    def check_pct(where: str, d: Any) -> None:
+        # v4 percentile contract: every percentile dict says how many
+        # samples it saw, and "no data" is null on every quantile — an
+        # empty window must never score as a perfect 0.0
+        if not isinstance(d, dict):
+            problems.append(f"{where} is not a percentile dict")
+            return
+        if "n_samples" not in d:
+            problems.append(f"{where} missing 'n_samples'")
+            return
+        empty = d["n_samples"] == 0
+        for q in ("p50", "p95", "p99"):
+            if q not in d:
+                problems.append(f"{where} missing {q!r}")
+            elif empty and d[q] is not None:
+                problems.append(f"{where}.{q} is {d[q]!r} on an empty "
+                                "window (must be null)")
+            elif not empty and d[q] is None:
+                problems.append(f"{where}.{q} is null despite "
+                                f"{d['n_samples']} samples")
+
+    eng = rec.get("engine")
+    if isinstance(eng, dict):
+        for k in ("latency_s", "ttft_s"):
+            if k in eng:
+                check_pct(f"engine.{k}", eng[k])
+    spec = rec.get("spec")
+    if isinstance(spec, dict):
+        rate = spec.get("accept_rate")
+        if not (isinstance(rate, (int, float)) and 0.0 <= rate <= 1.0):
+            problems.append(f"spec.accept_rate {rate!r} outside [0, 1]")
+        if not isinstance(spec.get("token_exact"), bool):
+            problems.append("spec.token_exact is not a bool")
+        base = spec.get("decode_tok_s_base")
+        fast = spec.get("decode_tok_s_spec")
+        ratio = spec.get("decode_speedup")
+        if (isinstance(base, (int, float)) and base > 0
+                and isinstance(fast, (int, float))
+                and isinstance(ratio, (int, float))
+                and abs(ratio - fast / base) > 1e-6 * max(1.0, ratio)):
+            problems.append(f"spec.decode_speedup {ratio!r} inconsistent "
+                            f"with {fast!r} / {base!r}")
     load = rec.get("load")
     if isinstance(load, dict):
         ov = load.get("overall", {})
@@ -603,6 +750,9 @@ def validate_record(rec: Dict[str, Any]) -> List[str]:
                   "gap_ticks"):
             if k not in ov:
                 problems.append(f"load.overall missing key {k!r}")
+        for k in ("ttft_ticks", "gap_ticks"):
+            if k in ov:
+                check_pct(f"load.overall.{k}", ov[k])
         accounted = sum(ov.get(k, 0) for k in
                         ("n_finished", "n_shed", "n_dropped", "n_incomplete"))
         if accounted != ov.get("n_offered"):
@@ -647,11 +797,20 @@ def main(argv=None) -> int:
               autotune_cache=args.autotune_cache)
     eng, unb = rec["engine"], rec["unbatched"]
     gap = rec["prefill_gap"]
+
+    # empty percentile windows are null in the record (schema v4); render
+    # them as an em dash instead of crashing the format spec
+    def _ms(x: Optional[float]) -> str:
+        return "—" if x is None else f"{x*1e3:.0f}ms"
+
+    def _ticks(x: Optional[float]) -> str:
+        return "—" if x is None else f"{x:.0f}t"
+
     print(f"# engine  : {eng['tokens_per_s']:,.0f} tok/s "
           f"(busy {eng['busy_slot_fraction']:.0%}, "
-          f"p50 {eng['latency_s']['p50']*1e3:.0f}ms, "
-          f"p95 {eng['latency_s']['p95']*1e3:.0f}ms, "
-          f"ttft p50 {eng['ttft_s']['p50']*1e3:.0f}ms)")
+          f"p50 {_ms(eng['latency_s']['p50'])}, "
+          f"p95 {_ms(eng['latency_s']['p95'])}, "
+          f"ttft p50 {_ms(eng['ttft_s']['p50'])})")
     print(f"# unbatched: {unb['tokens_per_s']:,.0f} tok/s -> "
           f"speedup {rec['speedup']:.2f}x")
     print(f"# prefill gap: chunked {gap['max_gap_chunked_s']*1e3:.1f}ms vs "
@@ -677,6 +836,12 @@ def main(argv=None) -> int:
           f"({k8c['equal_memory_vs_fp32_paged']:.1f}x at equal memory); "
           f"cow copies {k8['prefix']['cow_copies']}; "
           f"exact={k8['token_exact']['all']}")
+    sp = rec["spec"]
+    print(f"# spec    : K={sp['spec_k']}, draft {sp['draft_layers']}/"
+          f"{sp['n_layers']} layers; accept {sp['accept_rate']:.0%}; "
+          f"decode {sp['decode_tok_s_spec']:,.0f} tok/s vs base "
+          f"{sp['decode_tok_s_base']:,.0f} ({sp['decode_speedup']:.2f}x); "
+          f"exact={sp['token_exact']}")
     ld = rec["load"]
     ov = ld["overall"]
     print(f"# load    : {ov['n_offered']} offered -> "
@@ -685,8 +850,8 @@ def main(argv=None) -> int:
           f"{ov['n_slo_met']} met SLO (ttft<={ld['slo']['ttft_ticks']}t, "
           f"gap<={ld['slo']['gap_ticks']}t) -> "
           f"{ov['goodput_requests_per_s']:.1f} req/s goodput; "
-          f"ttft p99 {ov['ttft_ticks']['p99']:.0f}t, "
-          f"gap p99 {ov['gap_ticks']['p99']:.0f}t")
+          f"ttft p99 {_ticks(ov['ttft_ticks']['p99'])}, "
+          f"gap p99 {_ticks(ov['gap_ticks']['p99'])}")
     for label, row in rec["backend_sweep"].items():
         print(f"# sweep[{label:>6}]: prefill {row['prefill_tok_s']:,.0f} tok/s "
               f"({row['prefill_vs_ref']:.2f}x ref), "

@@ -52,7 +52,7 @@ from __future__ import annotations
 
 import asyncio
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -63,9 +63,15 @@ from repro.core.selector import BackendPolicy
 from repro.ft.coordinator import Coordinator
 from repro.ft.watchdog import HangDetector, StepWatchdog
 from repro.models.graph_lm import (GraphLMConfig, build_decode_graph,
+                                   build_draft_graph,
                                    build_paged_decode_graph,
                                    build_paged_prefill_graph,
-                                   build_prefill_graph, init_cache_inputs,
+                                   build_paged_verify_graph,
+                                   build_paged_verify_seq_graph,
+                                   build_prefill_graph,
+                                   build_spec_commit_graph,
+                                   build_verify_graph,
+                                   expand_spec_ranges, init_cache_inputs,
                                    init_lm_params, init_paged_cache_inputs)
 from repro.runtime.batching import SlotScheduler
 from repro.runtime.kv_cache import BlockPool, kv_page_bytes
@@ -135,17 +141,23 @@ class EngineRequest:
                 else self.first_token_tick - self.submit_tick)
 
 
-def _pct(xs: Sequence[float], q: float) -> float:
-    """Percentile of a sample list; 0.0 for an empty window (a report of
-    "no data" must not crash the summary).  Single-sample and all-equal
-    windows return that value for every q (linear interpolation over one
-    distinct point) — edge cases pinned by ``tests/test_engine_metrics.py``.
+def _pct(xs: Sequence[float], q: float) -> Optional[float]:
+    """Percentile of a sample list; ``None`` for an empty window.  A run
+    with zero finished requests has NO latency data — serializing that as
+    0.0 would report a perfect p99, so "no data" is ``null`` in the JSON
+    record and rendered as "—" by ``repro.tools.report``.  Single-sample
+    and all-equal windows return that value for every q (linear
+    interpolation over one distinct point) — edge cases pinned by
+    ``tests/test_engine_metrics.py``.
     """
-    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else None
 
 
-def _pct_dict(xs: Sequence[float]) -> Dict[str, float]:
-    return {"p50": _pct(xs, 50), "p95": _pct(xs, 95), "p99": _pct(xs, 99)}
+def _pct_dict(xs: Sequence[float]) -> Dict[str, Any]:
+    """p50/p95/p99 plus ``n_samples`` so a consumer can tell "fast" from
+    "no data" (percentiles are ``None`` iff ``n_samples == 0``)."""
+    return {"p50": _pct(xs, 50), "p95": _pct(xs, 95), "p99": _pct(xs, 99),
+            "n_samples": len(xs)}
 
 
 @dataclass
@@ -173,6 +185,15 @@ class EngineMetrics:
     n_recoveries: int = 0
     requeued_requests: int = 0  # slot preemptions summed over recoveries
     straggler_ticks: int = 0    # StepWatchdog rolling-median flags
+    # speculative decoding (all zero when spec_k == 0)
+    spec_ticks: int = 0         # draft+verify ticks (counted in decode_ticks)
+    spec_proposed: int = 0      # draft tokens offered to verification
+    spec_accepted: int = 0      # draft tokens the target model agreed with
+    # decode-phase throughput: tokens emitted by decode/spec ticks over the
+    # wall time spent inside those ticks — the honest numerator/denominator
+    # for a speculative-vs-baseline speedup (prefill is identical in both)
+    decode_tokens: int = 0
+    decode_wall_s: float = 0.0
 
     @property
     def busy_slot_fraction(self) -> float:
@@ -181,6 +202,16 @@ class EngineMetrics:
     @property
     def tokens_per_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def accept_rate(self) -> float:
+        return (self.spec_accepted / self.spec_proposed
+                if self.spec_proposed > 0 else 0.0)
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        return (self.decode_tokens / self.decode_wall_s
+                if self.decode_wall_s > 0 else 0.0)
 
     def summary(self) -> Dict[str, Any]:
         return {
@@ -205,6 +236,15 @@ class EngineMetrics:
                 "requeued_requests": self.requeued_requests,
                 "straggler_ticks": self.straggler_ticks,
             },
+            "spec": {
+                "spec_ticks": self.spec_ticks,
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "accept_rate": self.accept_rate,
+                "decode_tokens": self.decode_tokens,
+                "decode_wall_s": self.decode_wall_s,
+                "decode_tokens_per_s": self.decode_tokens_per_s,
+            },
         }
 
 
@@ -227,7 +267,8 @@ class ProgramStepper:
                  n_slots: int, chunk: int, cache_cap: int,
                  policy: Optional[BackendPolicy] = None,
                  quantize: Optional[str] = None,
-                 calib_ranges: Optional[Mapping[str, Any]] = None):
+                 calib_ranges: Optional[Mapping[str, Any]] = None,
+                 spec_k: int = 0, draft_layers: Optional[int] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.chunk = chunk
@@ -242,6 +283,7 @@ class ProgramStepper:
                                        calib_ranges=calib_ranges)
         self.cache_names = [v for v in dec_g.outputs[1:]]   # new_cache_*
         cache_inputs = sorted(init_cache_inputs(cfg, 1, 1))
+        self._cache_input_names = cache_inputs
         self._input_names = ("tokens", "start", "n_new", *cache_inputs)
         # caches are threaded call-to-call and never reused -> donate them
         # (aliased in place on backends that support it)
@@ -252,6 +294,14 @@ class ProgramStepper:
         self.caches: Dict[str, Any] = {
             k: jnp.asarray(v)
             for k, v in init_cache_inputs(cfg, n_slots, cache_cap).items()}
+        verify_g = None
+        if spec_k > 0:
+            verify_g = build_verify_graph(cfg, params, batch=n_slots,
+                                          width=spec_k + 1,
+                                          cache_cap=cache_cap)
+        self._init_spec(params, policy=policy, quantize=quantize,
+                        calib_ranges=calib_ranges, spec_k=spec_k,
+                        draft_layers=draft_layers, verify_graph=verify_g)
 
     def _call(self, fn, tokens, start, n_new, *extra):
         cache_args = [self.caches[n] for n in sorted(self.caches)]
@@ -262,14 +312,95 @@ class ProgramStepper:
             self.caches[name.replace("new_", "")] = arr
         return logits
 
+    def _init_spec(self, params: Mapping[str, Any], *,
+                   policy: Optional[BackendPolicy],
+                   quantize: Optional[str],
+                   calib_ranges: Optional[Mapping[str, Any]],
+                   spec_k: int, draft_layers: Optional[int],
+                   verify_graph, verify_donate: bool = True,
+                   verify_bind_names: Optional[Tuple[str, ...]] = None,
+                   verify_spec_ranges: bool = False) -> None:
+        """Compile the speculative-decoding Programs (shared by the dense
+        and paged steppers; ``verify_graph`` is the flavor-specific
+        batched-verify variant of the target model).
+
+        The DRAFT model is early-exit self-speculative: the target's
+        first ``draft_layers`` layers plus its embedding and head, so no
+        second set of weights exists and — because layer value names
+        match the target's lower layers — the one shared calibration
+        covers it (:func:`~repro.models.graph_lm.expand_spec_ranges`
+        maps the ranges onto the unrolled step-suffixed names).  Its
+        caches are PRIVATE per-slot dense buffers sized
+        ``cache_cap + spec_k + 1`` (a draft call writes up to spec_k+1
+        rows past the committed length and is never rolled back — stale
+        rows are simply overwritten by the next catch-up or draft call,
+        and draft attention never reads past its kv length)."""
+        self.spec_k = spec_k
+        if spec_k == 0:
+            return
+        cfg = self.cfg
+        dl = (draft_layers if draft_layers is not None
+              else max(1, cfg.n_layers // 2))
+        if not 1 <= dl <= cfg.n_layers:
+            raise ValueError(f"draft_layers {dl} outside "
+                             f"[1, {cfg.n_layers}]")
+        self.draft_layers = dl
+        draft_cfg = replace(cfg, n_layers=dl)
+        self.draft_cap = self.cache_cap + spec_k + 1
+        draft_ranges = (expand_spec_ranges(dict(calib_ranges), spec_k)
+                        if calib_ranges is not None else None)
+        draft_g = build_draft_graph(draft_cfg, dict(params),
+                                    batch=self.n_slots,
+                                    cache_cap=self.draft_cap, spec_k=spec_k)
+        draft_pre_g = build_prefill_graph(draft_cfg, dict(params),
+                                          batch=self.n_slots,
+                                          chunk=self.chunk,
+                                          cache_cap=self.draft_cap)
+        self.draft_program = compile(draft_g, policy=policy,
+                                     quantize=quantize,
+                                     calib_ranges=draft_ranges)
+        self.draft_prefill_program = compile(draft_pre_g, policy=policy,
+                                             quantize=quantize,
+                                             calib_ranges=calib_ranges)
+        # the kv8 seq verify's value names are step-suffixed like the
+        # draft's, so it needs the expanded calibration to see the same
+        # static scales the decode Program uses
+        self.verify_program = compile(
+            verify_graph, policy=policy, quantize=quantize,
+            calib_ranges=draft_ranges if verify_spec_ranges
+            else calib_ranges)
+        draft_cache_inputs = sorted(init_cache_inputs(draft_cfg, 1, 1))
+        names = ("tokens", "start", "n_new", *draft_cache_inputs)
+        self._draft = self.draft_program.bind(*names,
+                                              donate=draft_cache_inputs)
+        self._draft_pre = self.draft_prefill_program.bind(
+            *names, donate=draft_cache_inputs)
+        # the kv8 verify program only READS the pages (its cache inputs
+        # are not threaded back out), so donating them would invalidate
+        # live buffers — the commit program gets the donation instead
+        self._ver = self.verify_program.bind(
+            *(verify_bind_names if verify_bind_names is not None
+              else self._input_names),
+            donate=self._cache_input_names if verify_donate else ())
+        self._draft_cache_names = [v for v in draft_g.outputs[spec_k:]]
+        self.draft_caches: Dict[str, Any] = {
+            k: jnp.asarray(v)
+            for k, v in init_cache_inputs(draft_cfg, self.n_slots,
+                                          self.draft_cap).items()}
+
     def backend_summary(self) -> Dict[str, Dict[str, Dict[str, int]]]:
         """Per-phase, per-op backend assignment counts — what the policy
         actually chose for the serving hot path.  Shape:
-        ``{"prefill"|"decode": {op: {backend: node_count}}}``; rendered by
-        ``serve_bench --json`` and ``repro.tools.report.backend_table``."""
+        ``{"prefill"|"decode"[|"verify"|"draft"]: {op: {backend:
+        node_count}}}``; rendered by ``serve_bench --json`` and
+        ``repro.tools.report.backend_table``."""
+        phases = [("prefill", self.prefill_program),
+                  ("decode", self.decode_program)]
+        if self.spec_k:
+            phases += [("verify", self.verify_program),
+                       ("draft", self.draft_program)]
         out: Dict[str, Dict[str, Dict[str, int]]] = {}
-        for phase, prog in (("prefill", self.prefill_program),
-                            ("decode", self.decode_program)):
+        for phase, prog in phases:
             per_op: Dict[str, Dict[str, int]] = {}
             assignment = prog.assignment
             for node in prog.graph.nodes:
@@ -288,6 +419,43 @@ class ProgramStepper:
                n_new: np.ndarray) -> np.ndarray:
         """tokens (B, 1) → logits (B, V); caches advance."""
         return self._call(self._dec, tokens, start, n_new)
+
+    def verify(self, tokens: np.ndarray, start: np.ndarray,
+               n_new: np.ndarray) -> np.ndarray:
+        """tokens (B, spec_k+1) — committed next token + draft proposals —
+        → per-position logits (B, spec_k+1, V); MAIN caches advance by
+        ``n_new[b]`` rows (rejected rows are garbage past the committed
+        length the engine rolls the bookkeeping back to)."""
+        return self._call(self._ver, tokens, start, n_new)
+
+    def _draft_cache_args(self) -> List[Any]:
+        return [self.draft_caches[n] for n in sorted(self.draft_caches)]
+
+    def draft_prefill(self, tokens: np.ndarray, start: np.ndarray,
+                      n_new: np.ndarray) -> np.ndarray:
+        """Advance the private draft caches over already-committed tokens
+        (cold start, prefix-hit fast-forward and post-recovery resume are
+        all just ``draft_len < length`` catch-up).  Logits are returned
+        for symmetry but unused — drafting starts from the committed next
+        token, not from these."""
+        outs = self._draft_pre(jnp.asarray(tokens), jnp.asarray(start),
+                               jnp.asarray(n_new), *self._draft_cache_args())
+        for name, arr in zip(self._draft_cache_names, outs[1:]):
+            self.draft_caches[name.replace("new_", "")] = arr
+        return np.asarray(outs[0])
+
+    def draft(self, tokens: np.ndarray, start: np.ndarray,
+              n_new: np.ndarray) -> np.ndarray:
+        """One unrolled draft call: tokens (B, 1) — the committed next
+        token — → (B, spec_k) greedy proposals; draft caches advance
+        spec_k+1 rows (the final row makes a full accept need no
+        catch-up before the next draft)."""
+        outs = self._draft(jnp.asarray(tokens), jnp.asarray(start),
+                           jnp.asarray(n_new), *self._draft_cache_args())
+        k = self.spec_k
+        for name, arr in zip(self._draft_cache_names, outs[k:]):
+            self.draft_caches[name.replace("new_", "")] = arr
+        return np.concatenate([np.asarray(o) for o in outs[:k]], axis=1)
 
 
 class PagedProgramStepper(ProgramStepper):
@@ -315,7 +483,8 @@ class PagedProgramStepper(ProgramStepper):
                  max_pages: int, kv_dtype: str = "float32",
                  policy: Optional[BackendPolicy] = None,
                  quantize: Optional[str] = None,
-                 calib_ranges: Optional[Mapping[str, Any]] = None):
+                 calib_ranges: Optional[Mapping[str, Any]] = None,
+                 spec_k: int = 0, draft_layers: Optional[int] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.chunk = chunk
@@ -341,6 +510,7 @@ class PagedProgramStepper(ProgramStepper):
         self.cache_names = [v for v in dec_g.outputs[1:]]
         cache_inputs = sorted(init_paged_cache_inputs(cfg, 1, 1,
                                                       kv_dtype=kv_dtype))
+        self._cache_input_names = cache_inputs
         self._input_names = ("tokens", "start", "n_new", "block_tables",
                              *cache_inputs)
         self._dec = self.decode_program.bind(*self._input_names,
@@ -356,6 +526,48 @@ class PagedProgramStepper(ProgramStepper):
             page_bytes=kv_page_bytes(cfg.n_layers, cfg.n_kv_heads,
                                      cfg.d_head, page_size, kv_dtype))
         self._slot_seq: Dict[int, int] = {}
+        verify_g = None
+        ver_bind: Optional[Tuple[str, ...]] = None
+        w = spec_k + 1
+        if spec_k > 0 and kv_dtype == "int8":
+            # quantize-on-write makes int8 page bytes history-dependent,
+            # so the kv8 verify is the decode step unrolled width times in
+            # one Program (bit-identical logits to plain decode) rather
+            # than the chunk-shaped batched verify the fp32 flavors use
+            verify_g = build_paged_verify_seq_graph(
+                cfg, params, batch=n_slots, width=w, n_blocks=n_blocks,
+                page_size=page_size, max_pages=max_pages)
+            ver_bind = ("start", "block_tables",
+                        *[f"tokens.s{j}" for j in range(w)],
+                        *[f"n_new.s{j}" for j in range(w)],
+                        *cache_inputs)
+        elif spec_k > 0:
+            verify_g = build_paged_verify_graph(cfg, params, batch=n_slots,
+                                                width=w,
+                                                n_blocks=n_blocks,
+                                                page_size=page_size,
+                                                max_pages=max_pages,
+                                                kv_dtype=kv_dtype)
+        self._init_spec(params, policy=policy, quantize=quantize,
+                        calib_ranges=calib_ranges, spec_k=spec_k,
+                        draft_layers=draft_layers, verify_graph=verify_g,
+                        verify_donate=kv_dtype != "int8",
+                        verify_bind_names=ver_bind,
+                        verify_spec_ranges=kv_dtype == "int8")
+        if spec_k > 0 and kv_dtype == "int8":
+            commit_g = build_spec_commit_graph(
+                cfg, batch=n_slots, width=w, n_blocks=n_blocks,
+                page_size=page_size, max_pages=max_pages)
+            self.spec_commit_program = compile(commit_g, policy=policy)
+            # j-major, i-minor: the exact order the seq verify graph
+            # emits its per-stage fp32 rows in
+            kv_names = [x for j in range(w) for i in range(cfg.n_layers)
+                        for x in (f"k_new{i}.s{j}", f"v_new{i}.s{j}")]
+            self._commit = self.spec_commit_program.bind(
+                "start", "block_tables",
+                *[f"n_new.s{j}" for j in range(w)], *kv_names,
+                *cache_inputs, donate=cache_inputs)
+            self._pending_kv: Optional[List[Any]] = None
 
     # ---------------------------- admission --------------------------- #
     def try_admit(self, prompt: np.ndarray,
@@ -417,6 +629,61 @@ class PagedProgramStepper(ProgramStepper):
         self._record_writes(tokens, start, n_new)
         return self._call(self._dec, tokens, start, n_new, self._tables())
 
+    def verify(self, tokens: np.ndarray, start: np.ndarray,
+               n_new: np.ndarray) -> np.ndarray:
+        """fp32 pages: speculative rows go through the normal paged write
+        path and the engine calls :meth:`BlockPool.truncate` afterward to
+        roll the rejected tail back (pages past the committed length are
+        appended-to-only this tick, the same argument
+        ``BlockPool.snapshot`` relies on for recovery — and fp32 page
+        writes are exact, so rejected rows leave no residue).
+
+        int8 pages: the verify program is the decode step unrolled
+        ``n_new``-wide with its quantize-on-write page state threaded
+        INTERNALLY and then discarded — each stage's logits are
+        bit-identical to what plain decode would produce at that
+        position, but the live pages are left untouched (a rejected
+        row raising a page scale would lossily requantize its committed
+        neighbours).  Pool bookkeeping + CoW still happen up front so
+        the block tables cover the speculative rows; the per-stage fp32
+        K/V rows come back and are stashed for :meth:`commit_spec` to
+        replay after acceptance."""
+        if self.kv_dtype == "int8":
+            self._record_writes(tokens, start, n_new)
+            w = self.spec_k + 1
+            cols = [jnp.asarray(tokens[:, j:j + 1]) for j in range(w)]
+            masks = [jnp.asarray((n_new > j).astype(np.int32))
+                     for j in range(w)]
+            cache_args = [self.caches[n] for n in sorted(self.caches)]
+            outs = self._ver(jnp.asarray(start),
+                             jnp.asarray(self._tables()),
+                             *cols, *masks, *cache_args)
+            self._pending_kv = list(outs[w:])
+            return np.stack([np.asarray(o) for o in outs[:w]], axis=1)
+        self._record_writes(tokens, start, n_new)
+        return self._call(self._ver, tokens, start, n_new, self._tables())
+
+    def commit_spec(self, start: np.ndarray, n_acc: np.ndarray) -> None:
+        """kv8 only: replay the accepted prefix (``n_acc[b]`` rows) of the
+        verify call's write sequence against the live pages.  The pool
+        already covers these rows (recorded before the verify call, then
+        :meth:`BlockPool.truncate`\\ d back to the accepted length), so
+        there is no pool work here — just the write-chain Program.
+        Replaying a write that already happened is bit-idempotent
+        (identical rows quantize to identical bytes and never raise a
+        page scale), which is what makes a crashed-and-retried or
+        hang-discarded commit recoverable."""
+        w = self.spec_k + 1
+        masks = [jnp.asarray((n_acc > j).astype(np.int32))
+                 for j in range(w)]
+        cache_args = [self.caches[n] for n in sorted(self.caches)]
+        outs = self._commit(jnp.asarray(start),
+                            jnp.asarray(self._tables()),
+                            *masks, *self._pending_kv, *cache_args)
+        for name, arr in zip(self.cache_names, outs):
+            self.caches[name.replace("new_", "")] = arr
+        self._pending_kv = None
+
 
 # --------------------------------------------------------------------------- #
 # The engine
@@ -429,6 +696,11 @@ class _SlotState:
     length: int = 0       # valid cache entries
     next_token: int = 0
     decoding: bool = False
+    # committed rows present in the PRIVATE draft cache (speculative
+    # engines only).  Starts at 0 — cold start, prefix-hit fast-forward
+    # and post-recovery resume are all the same "draft_len < length"
+    # catch-up, which is why recovery never has to roll draft caches back
+    draft_len: int = 0
     # the token stream prefill walks: the request's prompt, or — for a
     # request requeued by recovery — prompt + tokens generated before the
     # failure (re-prefilling them rebuilds the cache rows; argmax at the
@@ -513,6 +785,7 @@ class Engine:
         self.chunk = stepper.chunk
         self.cache_cap = stepper.cache_cap
         self.paged = stepper.paged
+        self.spec_k = getattr(stepper, "spec_k", 0)
         self.eos_id = eos_id
         self.sched = SlotScheduler(self.n_slots, max_queue=max_queue)
         self.slots: List[Optional[_SlotState]] = [None] * self.n_slots
@@ -721,7 +994,10 @@ class Engine:
                 self._prefill_tick(prefill)
                 self._last_was_prefill = True
             elif decode:
-                self._decode_tick(decode)
+                if self.spec_k:
+                    self._spec_decode_tick(decode)
+                else:
+                    self._decode_tick(decode)
                 self._last_was_prefill = False
             self._consec_failures = 0
             if self.coordinator is not None:
@@ -793,6 +1069,7 @@ class Engine:
                 self._maybe_finish(s, first)
 
     def _decode_tick(self, slots: List[int]) -> None:
+        t_begin = time.perf_counter()
         b = self.n_slots
         tokens = np.zeros((b, 1), np.int32)
         start = np.zeros((b,), np.int32)
@@ -812,6 +1089,131 @@ class Engine:
             st.next_token = tok
             self._emit(st, tok)
             self._maybe_finish(s, tok)
+        self.metrics.decode_tokens += len(slots)
+        self.metrics.decode_wall_s += time.perf_counter() - t_begin
+
+    def _draft_catch_up(self, slots: List[int]) -> None:
+        """Bring every slot's private draft cache up to its committed
+        length with batched draft-prefill chunks over the committed token
+        stream (original prompt + all generated tokens — the resume
+        stream plus post-resume emissions collapse to exactly that)."""
+        b, c = self.n_slots, self.chunk
+        while True:
+            behind = [s for s in slots
+                      if self.slots[s].draft_len < self.slots[s].length]
+            if not behind:
+                return
+            tokens = np.zeros((b, c), np.int32)
+            start = np.zeros((b,), np.int32)
+            n_new = np.zeros((b,), np.int32)
+            for s in behind:
+                st = self.slots[s]
+                full = np.concatenate(
+                    [np.asarray(st.req.prompt, np.int32),
+                     np.asarray(st.req.out_tokens, np.int32)])
+                n = min(c, st.length - st.draft_len)
+                tokens[s, :n] = full[st.draft_len:st.draft_len + n]
+                start[s] = st.draft_len
+                n_new[s] = n
+            self._guarded_call(self.stepper.draft_prefill,
+                               tokens, start, n_new)
+            for s in behind:
+                self.slots[s].draft_len += int(n_new[s])
+
+    def _spec_decode_tick(self, slots: List[int]) -> None:
+        """Speculative decode tick: one draft call proposes ``spec_k``
+        greedy tokens per slot, one verify call scores all of them (plus
+        the committed next token) against the target in a single
+        prefill-shaped Program call, and the greedy acceptance walk emits
+        every proposal that matches the target's own argmax — so the
+        emitted stream is token-identical to plain decode, just produced
+        in fewer Program calls.  Rejected speculative cache rows are
+        rolled back with :meth:`BlockPool.truncate` (paged) or simply
+        overwritten by the next write at the committed position (dense:
+        ``cache_update`` writes are positional)."""
+        t_begin = time.perf_counter()
+        b, k = self.n_slots, self.spec_k
+        width = k + 1
+        self._draft_catch_up(slots)
+        tokens = np.zeros((b, 1), np.int32)
+        start = np.zeros((b,), np.int32)
+        n_new = np.zeros((b,), np.int32)
+        for s in slots:
+            st = self.slots[s]
+            tokens[s, 0] = st.next_token
+            start[s] = st.length
+            n_new[s] = 1
+        draft_toks = self._guarded_call(self.stepper.draft,
+                                        tokens, start, n_new)
+        vtokens = np.zeros((b, width), np.int32)
+        vstart = np.zeros((b,), np.int32)
+        vn_new = np.zeros((b,), np.int32)
+        for s in slots:
+            st = self.slots[s]
+            remaining = st.req.max_new_tokens - len(st.req.out_tokens)
+            n = min(width, remaining)   # never write past the request cap
+            vtokens[s, 0] = st.next_token
+            vtokens[s, 1:n] = draft_toks[s, :n - 1]
+            vstart[s] = st.length
+            vn_new[s] = n
+        logits = self._guarded_call(self.stepper.verify,
+                                    vtokens, vstart, vn_new)
+        self.metrics.decode_ticks += 1
+        self.metrics.spec_ticks += 1
+        self.metrics.busy_slot_ticks += len(slots)
+        # greedy acceptance walk: position i's argmax is what plain decode
+        # would emit after vtokens[:i+1]; keep walking while the next fed
+        # draft token IS that argmax.  Walk every slot BEFORE touching any
+        # state — the kv8 commit below is one batched (guarded) call.
+        emits: Dict[int, List[int]] = {}
+        for s in slots:
+            st = self.slots[s]
+            n = int(vn_new[s])
+            emit: List[int] = []
+            for i in range(n):
+                g = int(np.argmax(logits[s, i]))
+                emit.append(g)
+                if g == self.eos_id or \
+                        len(st.req.out_tokens) + len(emit) \
+                        >= st.req.max_new_tokens:
+                    break
+                if i + 1 < n and int(vtokens[s, i + 1]) == g:
+                    continue
+                break
+            emits[s] = emit         # len >= 1: position 0 re-scores the
+            #                         committed token, so it always emits
+        if self.paged:
+            # roll back the rejected speculative rows; rows
+            # 0..length+e-1 hold exactly the committed stream
+            for s in slots:
+                sid = self.stepper._slot_seq[s]
+                self.stepper.pool.truncate(
+                    sid, self.slots[s].length + len(emits[s]))
+        if self.paged and getattr(self.stepper, "kv_dtype", None) == "int8":
+            # the kv8 verify left the live pages untouched; replay the
+            # accepted prefix of its write chain now that the block
+            # tables are truncated back to exactly those rows
+            commit_n = np.zeros((b,), np.int32)
+            for s in slots:
+                commit_n[s] = len(emits[s])
+            self._guarded_call(self.stepper.commit_spec, vstart, commit_n)
+        emitted_total = 0
+        for s in slots:
+            st = self.slots[s]
+            emit = emits[s]
+            e = len(emit)
+            n = int(vn_new[s])
+            self.metrics.spec_proposed += n - 1
+            self.metrics.spec_accepted += e - 1
+            st.length += e
+            st.draft_len = st.length   # accepted rows == draft-cache rows
+            st.next_token = emit[-1]
+            for tok in emit:
+                self._emit(st, tok)
+            emitted_total += e
+            self._maybe_finish(s, emit[-1])
+        self.metrics.decode_tokens += emitted_total
+        self.metrics.decode_wall_s += time.perf_counter() - t_begin
 
     def _maybe_finish(self, slot: int, tok: int) -> None:
         st = self.slots[slot]
@@ -1119,6 +1521,8 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                      hang_timeout: Optional[float] = None,
                      max_recoveries: int = 8,
                      coordinator: Optional[Coordinator] = None,
+                     spec_k: int = 0,
+                     draft_layers: Optional[int] = None,
                      ) -> Tuple[Engine, UnbatchedReference]:
     """Compile the serving Programs for a graph LM and return the engine
     plus its unbatched reference (sharing weights and, under int8, the
@@ -1133,7 +1537,14 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
     with per-(page, kv-head) scale sidecars and routes the hot path
     through the fused-dequant ``*_q`` ops; at equal pool BYTES that is
     ~4x the page count of fp32.  The reference stays dense fp32 either
-    way: it is the paged engine's token-exactness oracle."""
+    way: it is the paged engine's token-exactness oracle.
+
+    ``spec_k > 0`` turns on greedy speculative decoding: every decode
+    tick drafts ``spec_k`` tokens with an early-exit draft model (the
+    target's first ``draft_layers`` layers, default ``n_layers // 2``)
+    and verifies them in one batched call — output stays token-identical
+    to plain decode; only the number of Program calls per emitted token
+    changes."""
     cfg = cfg or GraphLMConfig()
     if kv_dtype != "float32" and not paged:
         raise ValueError("kv_dtype requires paged=True")
@@ -1148,11 +1559,13 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
         stepper: ProgramStepper = PagedProgramStepper(
             cfg, params, n_slots=n_slots, chunk=chunk, page_size=page_size,
             n_blocks=nb, max_pages=mp, kv_dtype=kv_dtype, policy=policy,
-            quantize=quantize, calib_ranges=ranges)
+            quantize=quantize, calib_ranges=ranges,
+            spec_k=spec_k, draft_layers=draft_layers)
     else:
         stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
                                  cache_cap=cache_cap, policy=policy,
-                                 quantize=quantize, calib_ranges=ranges)
+                                 quantize=quantize, calib_ranges=ranges,
+                                 spec_k=spec_k, draft_layers=draft_layers)
     engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue,
                     self_heal=self_heal, hang_timeout=hang_timeout,
                     max_recoveries=max_recoveries, coordinator=coordinator)

@@ -260,6 +260,61 @@ class BlockPool:
             if len(blk.tokens) == page:
                 self._register_full(seq, pi, bid)
 
+    def truncate(self, sid: int, n_keep: int) -> None:
+        """Roll a sequence back to its first ``n_keep`` rows — the
+        speculative-decoding reject path.  A verify step appends the
+        committed next token plus K draft proposals in one write; after
+        acceptance the rejected tail rows must vanish from the
+        bookkeeping (their device rows become garbage past the
+        sequence's length, which attention masking already ignores —
+        the same append-only-page argument :meth:`snapshot` relies on).
+
+        Only rows the sequence itself appended can be dropped: every row
+        past ``n_keep`` was written after admission (a frozen or shared
+        page would have been copied-on-write first), so dropped blocks
+        are private (``ref == 1``).  A block the speculative write
+        filled — and therefore registered in the prefix index — is
+        de-indexed before it is dropped or trimmed: its content encodes
+        rejected tokens and must not be donated.  Whole dropped blocks
+        return to the free list and their allocation is re-credited to
+        the sequence's reservation (it may regrow to the same worst
+        case it was admitted for)."""
+        seq = self._seqs[sid]
+        if not 0 <= n_keep <= seq.n_tokens:
+            raise ValueError(f"truncate to {n_keep} outside "
+                             f"[0, {seq.n_tokens}]")
+        if n_keep == seq.n_tokens:
+            return
+        page = self.page_size
+        n_before = seq.n_tokens
+        keep_blocks = -(-n_keep // page)
+        for bid in seq.table[keep_blocks:]:
+            blk = self._blocks[bid]
+            assert blk.ref == 1, \
+                f"truncate dropping shared block {bid} (ref {blk.ref})"
+            if blk.index_key is not None:
+                self._drop_index(bid)
+            self._decref(bid)
+            seq.reserved += 1
+            self._reserved_total += 1
+        del seq.table[keep_blocks:]
+        if keep_blocks:
+            bid = seq.table[-1]
+            blk = self._blocks[bid]
+            row_keep = n_keep - (keep_blocks - 1) * page
+            # rows of OURS in the tail block; blk.tokens may hold more
+            # (a shared donor tail we only reused a prefix of) — those
+            # are not ours to trim, and none of our rows live past them
+            our_rows = min(page, n_before - (keep_blocks - 1) * page)
+            if our_rows > row_keep:
+                assert blk.ref == 1, \
+                    f"truncate trimming shared block {bid} (ref {blk.ref})"
+                if blk.index_key is not None:
+                    self._drop_index(bid)
+                del blk.tokens[row_keep:]
+        del seq.tokens[n_keep:]
+        seq.n_tokens = n_keep
+
     def fork(self, sid: int, max_new_tokens: int) -> Optional[int]:
         """Clone a sequence sharing every block (beam/speculative-style
         divergence): both copies keep reading the shared pages; the first

@@ -44,13 +44,16 @@ _MARKER_RE = re.compile(
     r"<!-- BEGIN GENERATED: ([\w-]+) -->.*?<!-- END GENERATED: \1 -->",
     re.DOTALL)
 
-# ops on the serving hot path (the engine's prefill/decode Programs),
-# dense and paged — the §6 reference table documents exactly these
+# ops on the serving hot path (the engine's prefill/decode Programs plus
+# the speculative draft/verify Programs), dense and paged — the §6
+# reference table documents exactly these
 SERVING_OPS = ("embedding", "cache_update", "chunk_attention",
-               "decode_attention", "paged_cache_update",
+               "decode_attention", "verify_attention", "greedy_token",
+               "paged_cache_update",
                "paged_chunk_attention", "paged_decode_attention",
+               "paged_verify_attention",
                "paged_cache_update_q", "paged_chunk_attention_q",
-               "paged_decode_attention_q")
+               "paged_decode_attention_q", "paged_verify_attention_q")
 
 
 def _first_line(text: str) -> str:

@@ -24,7 +24,8 @@ import numpy as np
 
 __all__ = ["load_records", "roofline_table", "dryrun_table",
            "weight_bytes", "activation_bytes", "footprint_table",
-           "serving_table", "backend_table", "paged_table", "load_table"]
+           "serving_table", "backend_table", "paged_table", "load_table",
+           "spec_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -34,7 +35,11 @@ def load_records(dirpath: str) -> List[Dict]:
     return recs
 
 
-def _fmt_s(x: float) -> str:
+def _fmt_s(x) -> str:
+    # None = "no samples" (empty metric windows serialize as null +
+    # n_samples=0, never as a perfect-looking 0.0) -> render an em dash
+    if x is None:
+        return "—"
     if x == 0:
         return "-"
     if x >= 0.1:
@@ -42,6 +47,12 @@ def _fmt_s(x: float) -> str:
     if x >= 1e-4:
         return f"{x*1e3:.2f}ms"
     return f"{x*1e6:.0f}us"
+
+
+def _fmt_count(x, spec: str = ".0f") -> str:
+    """Format a percentile value that is ``None`` when the window had no
+    samples."""
+    return "—" if x is None else f"{x:{spec}}"
 
 
 # --------------------------------------------------------------------------- #
@@ -116,6 +127,28 @@ def serving_table(records: Sequence[Tuple[str, Dict]]) -> str:
             f"{eng['busy_slot_fraction']:.0%} | "
             f"{_fmt_s(gap.get('max_gap_chunked_s', 0))} | "
             f"{_fmt_s(gap.get('full_prefill_s', 0))} |")
+    return "\n".join(out)
+
+
+def spec_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown speculative-decoding table from serve_bench JSON records
+    (the ``"spec"`` section): draft depth and width, accept rate, decode
+    tokens/s speculative vs baseline with the measured speedup, and the
+    token-exactness flag against the unbatched reference."""
+    out = ["| config | draft layers | K | accept rate | decode tok/s "
+           "(spec) | decode tok/s (base) | speedup | exact |",
+           "|---|---|---|---|---|---|---|---|"]
+    for label, rec in records:
+        sp = rec.get("spec")
+        if not sp:
+            continue
+        out.append(
+            f"| {label} | {sp['draft_layers']}/{sp['n_layers']} | "
+            f"{sp['spec_k']} | {sp['accept_rate']:.0%} | "
+            f"{sp['decode_tok_s_spec']:,.0f} | "
+            f"{sp['decode_tok_s_base']:,.0f} | "
+            f"{sp['decode_speedup']:.2f}x | "
+            f"{'yes' if sp.get('token_exact') else 'NO'} |")
     return "\n".join(out)
 
 
@@ -227,8 +260,10 @@ def load_table(records: Sequence[Tuple[str, Dict]]) -> str:
                 f"{tr['n_finished']} | {tr['n_shed']} | {tr['n_dropped']} | "
                 f"{tr['n_slo_met']} | {tr['slo_attainment']:.0%} | "
                 f"{tr['goodput_requests_per_s']:.1f} | "
-                f"{tr['ttft_ticks']['p99']:.0f} / {slo.get('ttft_ticks', '-')} | "
-                f"{tr['gap_ticks']['p99']:.0f} / {slo.get('gap_ticks', '-')} |")
+                f"{_fmt_count(tr['ttft_ticks']['p99'])} / "
+                f"{slo.get('ttft_ticks', '-')} | "
+                f"{_fmt_count(tr['gap_ticks']['p99'])} / "
+                f"{slo.get('gap_ticks', '-')} |")
     return "\n".join(out)
 
 
@@ -310,6 +345,10 @@ def main() -> None:
         if any("paged" in rec or "paged_kv8" in rec for _, rec in serve):
             print("## Paged KV cache (serve_bench paged section)\n")
             print(paged_table(serve))
+            print()
+        if any("spec" in rec for _, rec in serve):
+            print("## Speculative decoding (serve_bench spec section)\n")
+            print(spec_table(serve))
             print()
         if any("load" in rec for _, rec in serve):
             print("## SLO goodput (serve_bench load section)\n")

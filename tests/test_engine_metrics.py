@@ -19,9 +19,13 @@ TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
 # percentile edge cases
 # --------------------------------------------------------------------------- #
 
-def test_pct_empty_window_is_zero_not_crash():
+def test_pct_empty_window_is_none_not_zero():
+    """Regression (ISSUE 8): an empty window used to report 0.0 — a run
+    with zero finished requests then scored a perfect p99 TTFT of 0.0 in
+    serve_bench/run_load JSON.  "No data" must be None (serialized as
+    null, rendered as an em dash), never a best-possible number."""
     for q in (0, 50, 95, 99, 100):
-        assert _pct([], q) == 0.0
+        assert _pct([], q) is None
 
 
 def test_pct_single_sample_every_quantile():
@@ -49,9 +53,12 @@ def test_pct_interpolates_and_orders():
 
 def test_pct_dict_shape():
     d = _pct_dict([1.0, 2.0, 3.0])
-    assert set(d) == {"p50", "p95", "p99"}
+    assert set(d) == {"p50", "p95", "p99", "n_samples"}
+    assert d["n_samples"] == 3
     assert d["p50"] <= d["p95"] <= d["p99"]
-    assert _pct_dict([]) == {"p50": 0.0, "p95": 0.0, "p99": 0.0}
+    # empty window: every percentile is null and the sample count says why
+    assert _pct_dict([]) == {"p50": None, "p95": None, "p99": None,
+                             "n_samples": 0}
 
 
 def test_summary_has_p99_and_self_heal():
@@ -60,12 +67,18 @@ def test_summary_has_p99_and_self_heal():
     m.ttfts_s = [0.05]
     s = m.summary()
     for key in ("latency_s", "ttft_s"):
-        assert set(s[key]) == {"p50", "p95", "p99"}
+        assert set(s[key]) == {"p50", "p95", "p99", "n_samples"}
     assert s["ttft_s"]["p99"] == 0.05          # single sample
+    assert s["ttft_s"]["n_samples"] == 1
     sh = s["self_heal"]
     assert set(sh) == {"failed_ticks", "n_crash_failures", "n_hang_failures",
                        "n_recoveries", "requeued_requests", "straggler_ticks"}
     assert all(v == 0 for v in sh.values())    # zero when self_heal is off
+    sp = s["spec"]
+    assert set(sp) == {"spec_ticks", "proposed", "accepted", "accept_rate",
+                       "decode_tokens", "decode_wall_s",
+                       "decode_tokens_per_s"}
+    assert all(v == 0 for v in sp.values())    # zero when spec_k == 0
 
 
 # --------------------------------------------------------------------------- #

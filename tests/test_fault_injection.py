@@ -198,6 +198,52 @@ def test_int8_kv_crash_recovery_token_identical():
     assert run(inject=False) == run(inject=True)
 
 
+def test_recovery_requeue_never_sheds_admitted_requests(baseline):
+    """Bounded-queue interaction with recovery (ISSUE 8 audit):
+    ``_recover()`` requeues every in-flight request via
+    ``SlotScheduler.preempt()``, which pushes straight into the heap and
+    deliberately does NOT apply ``max_queue`` — admission control is for
+    NEW work only, and a request the engine already accepted must never
+    bounce off its own recovery.  Run a burst larger than ``max_queue``
+    with crashes timed so slots are busy and the queue is full at
+    recovery: everything admitted still finishes, nothing is rejected
+    after submit time, and conservation holds."""
+    _, outputs = baseline
+    engine, _ = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=48,
+                                 self_heal=True, max_queue=2)
+    reqs, streams = [], []
+    for i, p in enumerate(PROMPTS):
+        toks = []
+        req = EngineRequest(uid=i, prompt=p, max_new_tokens=MAX_NEW,
+                            on_token=lambda r, t, toks=toks: toks.append(t))
+        if engine.submit(req):
+            reqs.append(req)
+            streams.append(toks)
+        else:
+            # over-bound submits reject immediately at SUBMIT time — the
+            # only place admission control is allowed to bite
+            assert req.dropped == "queue_full"
+        if i == 1:
+            # drain the first two into slots so the next two fill the
+            # queue again: busy slots + full queue at crash time is the
+            # worst case for the preempt() requeue
+            engine.step()
+    rejected0 = engine.metrics.n_rejected
+    assert rejected0 >= 1, "burst did not exceed max_queue"
+    assert len(reqs) >= 4
+    assert engine.sched.queue_len == 2 and engine.sched.busy_slots == 2
+    # crash early ticks: 2 busy slots + a full queue get preempt()ed
+    _inject_crash(engine.stepper, {2, 4, 7})
+    engine.run()
+    assert engine.metrics.n_recoveries >= 1
+    assert engine.metrics.requeued_requests >= 1
+    # recovery never sheds admitted work: the rejected count is frozen at
+    # its submit-time value and every admitted request finishes intact
+    assert engine.metrics.n_rejected == rejected0
+    _check_identical(reqs, streams, outputs)
+    engine.sched.check_conservation()
+
+
 def test_recovery_is_a_membership_event(baseline):
     stepper, outputs = baseline
     coord = Coordinator(deadline=60.0)

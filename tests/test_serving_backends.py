@@ -251,3 +251,132 @@ def test_engine_runs_under_fixed_pallas_policy():
         assert engine.submit(r)
     engine.run(max_ticks=500)
     assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
+
+
+# --------------------------------------------------------------------------- #
+# verify_attention family (speculative decoding) — backend parity and the
+# explicit-zero attr sweep (the PR 4 `attrs.get(...) or default` bug class)
+# --------------------------------------------------------------------------- #
+
+def _paged_verify_case(*, b=2, t=4, n_blocks=8, page=4, mp=4, hq=4, hk=2,
+                       d=8, start=(0, 7)):
+    """int8 pages under a scrambled block layout + this call's fp32 rows,
+    plus the patched DENSE fp32 equivalent the two-source op must match."""
+    rng = _rng()
+    start = np.asarray(start, np.int32)
+    tables = rng.permutation(n_blocks)[:b * mp].reshape(b, mp).astype(np.int32)
+    dense = rng.standard_normal((n_blocks, page, hk, d)).astype(np.float32)
+    amax = np.abs(dense).max(axis=(1, 3))
+    scales = (amax / 127.0).astype(np.float32)
+    pages = np.clip(np.round(dense / np.where(scales > 0, scales, 1.0)
+                             [:, None, :, None]), -127, 127).astype(np.int8)
+    deq = pages.astype(np.float32) * scales[:, None, :, None]
+    q = rng.standard_normal((b, t, hq, d)).astype(np.float32)
+    k_new = rng.standard_normal((b, t, hk, d)).astype(np.float32)
+    v_new = rng.standard_normal((b, t, hk, d)).astype(np.float32)
+    k_dense = np.stack([deq[tables[bi]].reshape(mp * page, hk, d)
+                        for bi in range(b)])
+    v_dense = k_dense.copy()
+    for bi in range(b):
+        for ti in range(t):
+            k_dense[bi, start[bi] + ti] = k_new[bi, ti]
+            v_dense[bi, start[bi] + ti] = v_new[bi, ti]
+    return (q, pages, scales, pages.copy(), scales.copy(), tables, start,
+            k_new, v_new, k_dense, v_dense)
+
+
+@pytest.mark.parametrize("scale", [None, 0.0, 2.0])
+def test_verify_attention_matches_chunk_attention(scale):
+    """verify_attention IS offset-causal chunk attention at T = K+1 — and
+    an explicit scale=0.0 must survive to every backend (not be swallowed
+    by a falsy-default fallback)."""
+    from repro.kernels.serving_ops import verify_attention
+    rng = _rng()
+    q = rng.standard_normal((2, 4, 4, 8)).astype(np.float32)
+    k = rng.standard_normal((2, 16, 2, 8)).astype(np.float32)
+    v = rng.standard_normal((2, 16, 2, 8)).astype(np.float32)
+    start = np.asarray([0, 12], np.int32)
+    want = np.asarray(chunk_attention(q, k, v, start, scale=scale,
+                                      backend="ref"))
+    for backend in ("ref", "xla", "pallas"):
+        assert backend in backends_for("verify_attention")
+        out = np.asarray(verify_attention(q, k, v, start, scale=scale,
+                                          backend=backend, interpret=True))
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"{backend} scale={scale}")
+    if scale == 0.0:
+        dflt = np.asarray(verify_attention(q, k, v, start, backend="ref"))
+        assert not np.allclose(want, dflt), \
+            "scale=0.0 was swallowed by a falsy default"
+
+
+@pytest.mark.parametrize("scale", [None, 0.0])
+def test_paged_verify_attention_backend_parity(scale):
+    from repro.kernels.serving_ops import paged_verify_attention
+    rng = _rng()
+    b, t, n_blocks, page, mp, hq, hk, d = 2, 4, 8, 4, 4, 4, 2, 8
+    q = rng.standard_normal((b, t, hq, d)).astype(np.float32)
+    pk = rng.standard_normal((n_blocks, page, hk, d)).astype(np.float32)
+    pv = rng.standard_normal((n_blocks, page, hk, d)).astype(np.float32)
+    tables = rng.permutation(n_blocks).reshape(b, mp).astype(np.int32)
+    start = np.asarray([0, 7], np.int32)
+    # dense oracle: gather each sequence's pages then offset-causal chunk
+    kd = np.stack([pk[tables[bi]].reshape(mp * page, hk, d)
+                   for bi in range(b)])
+    vd = np.stack([pv[tables[bi]].reshape(mp * page, hk, d)
+                   for bi in range(b)])
+    want = np.asarray(chunk_attention(q, kd, vd, start, scale=scale,
+                                      backend="ref"))
+    for backend in ("ref", "xla", "pallas"):
+        assert backend in backends_for("paged_verify_attention")
+        out = np.asarray(paged_verify_attention(
+            q, pk, pv, tables, start, scale=scale, backend=backend,
+            interpret=True))
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"{backend} scale={scale}")
+
+
+@pytest.mark.parametrize("scale", [None, 0.0])
+def test_paged_verify_attention_q_two_source_parity(scale):
+    """The two-source kv8 verify op: committed prefix dequantized from the
+    int8 pages, this call's K+1 rows patched in from fp32 — all backends
+    must match the patched-dense fp32 oracle, scale=0.0 included."""
+    from repro.kernels.serving_ops import paged_verify_attention_q
+    (q, pk, ks, pv, vs, tables, start, k_new, v_new,
+     k_dense, v_dense) = _paged_verify_case()
+    want = np.asarray(chunk_attention(q, k_dense, v_dense, start,
+                                      scale=scale, backend="ref"))
+    for backend in ("ref", "xla", "pallas"):
+        assert backend in backends_for("paged_verify_attention_q")
+        out = np.asarray(paged_verify_attention_q(
+            q, pk, ks, pv, vs, tables, start, k_new, v_new, scale=scale,
+            backend=backend, interpret=True))
+        np.testing.assert_allclose(out, want, rtol=2e-5, atol=2e-5,
+                                   err_msg=f"{backend} scale={scale}")
+
+
+def test_verify_attention_pallas_supports_guards():
+    """Ragged T must filter the pallas paths out, never crash them."""
+    from repro.core.ir import TensorSpec
+    # T=3 with block_q=2: 3 % 2 != 0
+    dense = [TensorSpec((1, 3, 2, 8)), TensorSpec((1, 16, 1, 8)),
+             TensorSpec((1, 16, 1, 8)), TensorSpec((1,), "int32")]
+    avail = backends_for("verify_attention", dense, {"block_q": 2})
+    assert "pallas" not in avail and {"ref", "xla"} <= set(avail)
+    qspecs = [TensorSpec((1, 3, 2, 8)), TensorSpec((8, 4, 1, 8), "int8"),
+              TensorSpec((8, 1)), TensorSpec((8, 4, 1, 8), "int8"),
+              TensorSpec((8, 1)), TensorSpec((1, 4), "int32"),
+              TensorSpec((1,), "int32"), TensorSpec((1, 3, 1, 8)),
+              TensorSpec((1, 3, 1, 8))]
+    avail = backends_for("paged_verify_attention_q", qspecs, {"block_q": 2})
+    assert "pallas" not in avail and {"ref", "xla"} <= set(avail)
+
+
+def test_greedy_token_argmax():
+    from repro.kernels.serving_ops import greedy_token
+    rng = _rng()
+    logits = rng.standard_normal((3, 37)).astype(np.float32)
+    out = np.asarray(greedy_token(logits))
+    # (B, 1) int32 — shaped to feed straight back as the next tokens column
+    assert out.shape == (3, 1) and out.dtype == np.int32
+    np.testing.assert_array_equal(out[:, 0], np.argmax(logits, axis=-1))

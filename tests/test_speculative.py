@@ -1,0 +1,390 @@
+"""Speculative decoding: draft/verify Programs inside the serving engine.
+
+The correctness bar (ISSUE 8 / ROADMAP open item 4): greedy output with
+speculation ON must be token-identical to the fp32 dense
+:class:`~repro.runtime.engine.UnbatchedReference` for the dense,
+paged-fp32 and paged-int8 engines — cold, across prefix hits, and under
+injected faults — because acceptance re-checks every draft proposal
+against the target model's own argmax.  For int8 KV pages the stronger
+structural invariant is pinned too: the speculative engine's output is
+BITWISE equal to the non-speculative kv8 engine's on any seed, because
+the unrolled verify replays plain decode's quantize-on-write history
+exactly (see ``build_paged_verify_seq_graph``).  Rejected speculative
+rows must vanish from the pool bookkeeping (``BlockPool.truncate``)
+without corrupting shared or indexed pages.
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+import repro  # noqa: F401  (registers every op/backend)
+from repro.models.graph_lm import GraphLMConfig
+from repro.runtime.engine import Engine, EngineRequest, build_lm_serving
+from repro.runtime.kv_cache import BlockPool
+
+TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
+                     n_kv_heads=2, d_ff=64)
+
+
+def _reqs(seed, n=7, plo=1, phi=13, mlo=1, mhi=7):
+    rng = np.random.default_rng(seed)
+    return [EngineRequest(
+        uid=i, prompt=rng.integers(0, TINY.vocab,
+                                   size=int(rng.integers(plo, phi)))
+        .astype(np.int32),
+        max_new_tokens=int(rng.integers(mlo, mhi))) for i in range(n)]
+
+
+def _exact(engine, ref, reqs):
+    for r in reqs:
+        assert engine.submit(r), r.dropped
+    engine.run(max_ticks=engine.tick + 4000)
+    for r in reqs:
+        assert r.done and r.dropped is None, (r.uid, r.dropped)
+        want = ref.generate(r.prompt, r.max_new_tokens)
+        assert r.out_tokens == want, (r.uid, r.out_tokens, want)
+    engine.sched.check_conservation()
+    if engine.paged:
+        engine.stepper.pool.check_integrity()
+
+
+# --------------------------------------------------------------------------- #
+# token-exactness vs the unbatched reference (all three engine flavors)
+# --------------------------------------------------------------------------- #
+
+def test_spec_dense_token_exact():
+    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                   spec_k=3)
+    assert engine.spec_k == 3
+    _exact(engine, ref, _reqs(21))
+    m = engine.metrics
+    assert m.spec_ticks > 0 and m.spec_ticks == m.decode_ticks
+    assert 0 <= m.spec_accepted <= m.spec_proposed
+
+
+def test_spec_paged_fp32_token_exact_cold_and_prefix_hit():
+    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                   paged=True, page_size=8, spec_k=3)
+    _exact(engine, ref, _reqs(21))
+    assert engine.stepper.pool.stats()["live_blocks"] == 0
+    # a warm request sharing a long prefix: speculation must compose with
+    # prefix reuse (draft caches start cold and catch up; target pages
+    # start at the reused length)
+    rng = np.random.default_rng(22)
+    prefix = rng.integers(0, TINY.vocab, size=24).astype(np.int32)
+    cold = EngineRequest(uid=100, prompt=np.concatenate(
+        [prefix, rng.integers(0, TINY.vocab, size=3).astype(np.int32)]),
+        max_new_tokens=5)
+    _exact(engine, ref, [cold])
+    hits0 = engine.stepper.pool.hit_tokens
+    warm = EngineRequest(uid=101, prompt=np.concatenate(
+        [prefix, rng.integers(0, TINY.vocab, size=2).astype(np.int32)]),
+        max_new_tokens=5)
+    _exact(engine, ref, [warm])
+    assert engine.stepper.pool.hit_tokens - hits0 >= 24
+
+
+def test_spec_kv8_token_exact_cold():
+    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                   paged=True, page_size=8,
+                                   kv_dtype="int8", spec_k=3)
+    _exact(engine, ref, _reqs(21))
+    assert engine.stepper.pool.stats()["live_blocks"] == 0
+
+
+def test_spec_kv8_prefix_hit_exact():
+    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                   paged=True, page_size=8,
+                                   kv_dtype="int8", spec_k=3)
+    rng = np.random.default_rng(22)
+    prefix = rng.integers(0, TINY.vocab, size=24).astype(np.int32)
+    cold = EngineRequest(uid=100, prompt=np.concatenate(
+        [prefix, rng.integers(0, TINY.vocab, size=3).astype(np.int32)]),
+        max_new_tokens=5)
+    _exact(engine, ref, [cold])
+    hits0 = engine.stepper.pool.hit_tokens
+    warm = EngineRequest(uid=101, prompt=np.concatenate(
+        [prefix, rng.integers(0, TINY.vocab, size=2).astype(np.int32)]),
+        max_new_tokens=5)
+    _exact(engine, ref, [warm])
+    assert engine.stepper.pool.hit_tokens - hits0 >= 24
+
+
+def test_spec_composes_with_int8_weight_programs():
+    """quantize="int8" (weights) + kv_dtype="int8" (pages) + speculation,
+    against the int8-Program dense reference."""
+    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
+                                   paged=True, page_size=8,
+                                   kv_dtype="int8", quantize="int8",
+                                   spec_k=2)
+    _exact(engine, ref, _reqs(24, n=4, phi=11, mhi=5))
+
+
+@pytest.mark.parametrize("seed", [0, 24])
+def test_spec_kv8_bitwise_matches_nonspec_engine(seed):
+    """The structural invariant that makes kv8 speculation safe on ANY
+    seed: the unrolled verify + replay commit reproduce plain decode's
+    quantize-on-write history exactly, so the speculative kv8 engine's
+    output is bit-identical to the non-speculative kv8 engine's — even
+    on seeds where int8 dequant noise makes BOTH diverge from the fp32
+    reference (these two seeds do, with longer outputs than the
+    reference-exactness tests pin)."""
+    def run(spec_k):
+        engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                     paged=True, page_size=8,
+                                     kv_dtype="int8", spec_k=spec_k)
+        reqs = _reqs(seed, n=6, mlo=1, mhi=9)
+        for r in reqs:
+            assert engine.submit(r)
+        engine.run(max_ticks=engine.tick + 4000)
+        for r in reqs:
+            assert r.done and r.dropped is None
+        engine.stepper.pool.check_integrity()
+        return {r.uid: list(r.out_tokens) for r in reqs}
+
+    assert run(spec_k=3) == run(spec_k=0)
+
+
+# --------------------------------------------------------------------------- #
+# acceptance metrics + config validation
+# --------------------------------------------------------------------------- #
+
+def test_full_model_draft_accepts_everything():
+    """draft_layers == n_layers makes the draft the target: every proposal
+    matches the target's argmax, so the accept rate is exactly 1.0 and
+    each request finishes in ~ceil(new/width) spec ticks — the upper
+    bound the serve_bench speedup smoke leans on."""
+    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=48,
+                                   spec_k=3, draft_layers=TINY.n_layers)
+    reqs = [EngineRequest(uid=i, prompt=np.asarray([3 + i, 5, 7], np.int32),
+                          max_new_tokens=12) for i in range(2)]
+    _exact(engine, ref, reqs)
+    m = engine.metrics
+    assert m.spec_proposed > 0
+    assert m.spec_accepted == m.spec_proposed     # accept_rate == 1.0
+    assert m.accept_rate == 1.0
+    # 2 requests x 12 tokens at width 4 -> 3 spec ticks each if batched
+    # perfectly; generous bound just pins "way fewer ticks than tokens"
+    assert m.spec_ticks <= 8
+    spec = m.summary()["spec"]
+    assert spec["accept_rate"] == 1.0
+    assert spec["proposed"] == m.spec_proposed
+    # 12 tokens per request, minus the one the prefill tick emits
+    assert spec["decode_tokens"] == 22
+
+
+def test_spec_metrics_zero_when_disabled():
+    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32)
+    _exact(engine, ref, _reqs(5, n=3, phi=8, mhi=4))
+    m = engine.metrics
+    assert m.spec_ticks == 0 and m.spec_proposed == 0
+    assert m.accept_rate == 0.0
+    assert m.decode_tokens > 0 and m.decode_wall_s > 0
+
+
+def test_draft_layers_validation():
+    with pytest.raises(ValueError, match="draft_layers"):
+        build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
+                         spec_k=2, draft_layers=TINY.n_layers + 1)
+    with pytest.raises(ValueError, match="draft_layers"):
+        build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
+                         spec_k=2, draft_layers=0)
+
+
+# --------------------------------------------------------------------------- #
+# BlockPool.truncate — the reject path's bookkeeping
+# --------------------------------------------------------------------------- #
+
+def test_truncate_drops_tail_blocks_and_recredits_reservation():
+    pool = BlockPool(8, 4)
+    sid, reused = pool.admit([1, 2, 3], max_new_tokens=9)
+    assert reused == 0
+    pool.append(sid, [1, 2, 3])
+    # speculative write crosses two page boundaries: rows 3..9
+    pool.append(sid, [10, 11, 12, 13, 14, 15, 16])
+    assert len(pool.block_table(sid)) == 3
+    reserved0 = pool.sequence(sid).reserved
+    pool.truncate(sid, 5)          # keep rows 0..4: drop block 2, trim 1
+    seq = pool.sequence(sid)
+    assert seq.n_tokens == 5 and seq.tokens == [1, 2, 3, 10, 11]
+    assert len(pool.block_table(sid)) == 2
+    assert seq.reserved == reserved0 + 1    # dropped block re-credited
+    pool.check_integrity()
+    # the sequence may regrow to the worst case it was admitted for
+    pool.append(sid, [20, 21, 22, 23, 24])
+    assert pool.sequence(sid).n_tokens == 10
+    pool.check_integrity()
+    pool.release(sid)
+    assert pool.stats()["live_blocks"] == 0
+
+
+def test_truncate_deindexes_speculatively_registered_pages():
+    """A speculative write that fills a page registers it in the prefix
+    index; rejecting those rows must also pull the page out of the index
+    (its content encodes rejected tokens and must never be donated)."""
+    pool = BlockPool(8, 4)
+    sid, _ = pool.admit([1, 2, 3, 4], max_new_tokens=6)
+    pool.append(sid, [1, 2, 3, 4])
+    pool.append(sid, [5, 6, 7, 8])      # fills page 1 -> indexed
+    idx0 = pool.stats()["indexed_full_pages"]
+    assert idx0 >= 1
+    pool.truncate(sid, 5)               # rows 5..7 were speculative
+    assert pool.stats()["indexed_full_pages"] == idx0 - 1
+    pool.check_integrity()
+    # a fresh prompt matching the REJECTED chain must not prefix-hit it
+    sid2, reused = pool.admit([1, 2, 3, 4, 5, 6, 7, 8], max_new_tokens=2)
+    assert reused <= 4
+    pool.release(sid2, register=False)
+    pool.release(sid, register=False)
+    pool.check_integrity()
+
+
+def test_truncate_bounds_checked():
+    pool = BlockPool(4, 4)
+    sid, _ = pool.admit([1, 2], max_new_tokens=2)
+    pool.append(sid, [1, 2])
+    with pytest.raises(ValueError):
+        pool.truncate(sid, 3)
+    pool.truncate(sid, 2)               # no-op at current length
+    assert pool.sequence(sid).n_tokens == 2
+    pool.check_integrity()
+
+
+# --------------------------------------------------------------------------- #
+# fault injection through the speculative phases (satellite: recovery)
+# --------------------------------------------------------------------------- #
+
+SPEC_PHASES = ("prefill", "draft_prefill", "draft", "verify")
+
+
+def _inject_crash(stepper, fail_calls, phases):
+    calls = [0]
+    for phase in phases:
+        orig = getattr(stepper, phase)
+
+        def wrapped(*args, _orig=orig):
+            calls[0] += 1
+            if calls[0] in fail_calls:
+                raise RuntimeError(f"injected fault at call {calls[0]}")
+            return _orig(*args)
+
+        setattr(stepper, phase, wrapped)
+    return calls
+
+
+def _inject_hang(stepper, hang_calls, sleep_s, phases):
+    calls = [0]
+    for phase in phases:
+        orig = getattr(stepper, phase)
+
+        def wrapped(*args, _orig=orig):
+            calls[0] += 1
+            out = _orig(*args)
+            if calls[0] in hang_calls:
+                time.sleep(sleep_s)     # overrun the deadline, then return
+            return out
+
+        setattr(stepper, phase, wrapped)
+    return calls
+
+
+def _run_burst(engine, seed=42):
+    reqs, streams = [], []
+    for i, r in enumerate(_reqs(seed, n=6, phi=10, mlo=4, mhi=7)):
+        toks = []
+        r.on_token = lambda _r, t, toks=toks: toks.append(t)
+        assert engine.submit(r)
+        reqs.append(r)
+        streams.append(toks)
+    engine.run(max_ticks=engine.tick + 4000)
+    for r, toks in zip(reqs, streams):
+        assert r.done and r.dropped is None, (r.uid, r.dropped)
+        assert toks == r.out_tokens, (
+            f"request {r.uid}: stream saw {toks}, request holds "
+            f"{r.out_tokens} (dup or skip)")
+    return {r.uid: list(r.out_tokens) for r in reqs}
+
+
+def _spec_engine(self_heal=False, hang_timeout=None, **kw):
+    engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                 spec_k=3, self_heal=self_heal,
+                                 hang_timeout=hang_timeout, **kw)
+    return engine
+
+
+@pytest.mark.parametrize("kw", [
+    {},                                              # dense
+    {"paged": True, "page_size": 8},                 # paged fp32
+    {"paged": True, "page_size": 8, "kv_dtype": "int8"},
+], ids=["dense", "paged", "kv8"])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_spec_crash_recovery_token_identical(kw, seed):
+    """Crashes landing in prefill / draft-catch-up / draft / verify: the
+    accepted-but-uncommitted draft tokens of the failed tick must be
+    neither duplicated nor lost after recovery."""
+    want = _run_burst(_spec_engine(**kw))
+    engine = _spec_engine(self_heal=True, **kw)
+    rng = np.random.default_rng(seed)
+    fails = set(int(c) for c in rng.choice(np.arange(2, 20), size=3,
+                                           replace=False))
+    _inject_crash(engine.stepper, fails, SPEC_PHASES)
+    got = _run_burst(engine)
+    assert engine.metrics.n_recoveries >= 1
+    assert got == want
+    engine.sched.check_conservation()
+    if engine.paged:
+        engine.stepper.pool.check_integrity()
+        assert engine.stepper.pool.live_sequences == 0
+
+
+@pytest.mark.parametrize("kw", [
+    {},
+    {"paged": True, "page_size": 8},
+    {"paged": True, "page_size": 8, "kv_dtype": "int8"},
+], ids=["dense", "paged", "kv8"])
+def test_spec_hang_recovery_token_identical(kw):
+    """Hangs (the call completes but overruns the deadline, so its result
+    is discarded): draft-cache and fp32 page writes of the discarded tick
+    are overwritten identically on retry; the kv8 verify leaves the live
+    pages untouched, so its discarded tick leaves no residue at all."""
+    want = _run_burst(_spec_engine(**kw))
+    engine = _spec_engine(self_heal=True, hang_timeout=0.25, **kw)
+    _inject_hang(engine.stepper, {3, 9}, sleep_s=0.6, phases=SPEC_PHASES)
+    got = _run_burst(engine)
+    assert engine.metrics.n_hang_failures >= 2
+    assert engine.metrics.n_recoveries >= 2
+    assert got == want
+    if engine.paged:
+        engine.stepper.pool.check_integrity()
+
+
+def test_spec_kv8_commit_crash_recovery_token_identical():
+    """A crash on the spec-commit call itself: the tick's pool bookkeeping
+    rolls back to the checkpoint, the retried verify re-reads the
+    untouched pages, and the replayed commit lands the same rows."""
+    kw = {"paged": True, "page_size": 8, "kv_dtype": "int8"}
+    want = _run_burst(_spec_engine(**kw))
+    engine = _spec_engine(self_heal=True, **kw)
+    _inject_crash(engine.stepper, {1, 3}, phases=("commit_spec",))
+    got = _run_burst(engine)
+    assert engine.metrics.n_recoveries >= 2
+    assert got == want
+    engine.stepper.pool.check_integrity()
+    assert engine.stepper.pool.live_sequences == 0
+
+
+def test_spec_kv8_commit_hang_recovery_token_identical():
+    """A hang on the spec-commit call: the write chain completed on
+    device before being discarded, and the retried commit replays the
+    identical single-row writes — identical rows quantize to identical
+    bytes and never raise a page scale, so the replay is idempotent."""
+    kw = {"paged": True, "page_size": 8, "kv_dtype": "int8"}
+    want = _run_burst(_spec_engine(**kw))
+    engine = _spec_engine(self_heal=True, hang_timeout=0.25, **kw)
+    _inject_hang(engine.stepper, {2}, sleep_s=0.6, phases=("commit_spec",))
+    got = _run_burst(engine)
+    assert engine.metrics.n_hang_failures >= 1
+    assert got == want
+    engine.stepper.pool.check_integrity()
