@@ -65,7 +65,12 @@ from repro.tools.report import _fmt_assignment
 # tokens/s speculative vs baseline, token_exact) and the engine summary's
 # "spec" sub-record; percentile dicts now carry "n_samples" and report
 # empty windows as null instead of 0.0.
-SCHEMA_VERSION = 4
+# v5: added the "sharded" section (tensor-parallel serving: decode tok/s
+# and peak concurrent requests at TP=1 vs TP=2, token_exact).  Always
+# present; ``{"enabled": false, "reason": ...}`` when not requested
+# (--sharded) or when the process has a single device — the TP run needs
+# XLA_FLAGS=--xla_force_host_platform_device_count (or real devices).
+SCHEMA_VERSION = 5
 DEFAULT_JSON = "BENCH_serve.json"
 
 # section -> required keys; ``validate_record`` (and CI, via --validate)
@@ -83,6 +88,7 @@ REQUIRED_SECTIONS: Dict[str, Tuple[str, ...]] = {
     "load": ("slo", "trace", "overall", "tiers"),
     "backend_sweep": (),
     "autotune": ("assignment",),
+    "sharded": ("enabled",),
 }
 
 SMOKE_CFG = GraphLMConfig(vocab=61, d_model=32, n_layers=1, n_heads=4,
@@ -601,6 +607,69 @@ def _load_experiment(cfg, *, n_slots, chunk, cache_cap, quantize,
     return run_load(engine, trace, slo)
 
 
+def _sharded_experiment(cfg, *, chunk, cache_cap, seed: int,
+                        smoke: bool, tp: int = 2) -> Dict[str, Any]:
+    """Tensor-parallel serving: the SAME paged engine shape at TP=1 and
+    TP=tp, scored on decode tokens/s and peak concurrent requests, with
+    token identity between the two checked on every request (the tp
+    attention backends promise bitwise-exact serving — False here is a
+    bug, and report.sharded_table renders it loudly).
+
+    On this harness's forced host devices the TP=2 number measures
+    dispatch/collective overhead, not kernel speedup (the "devices" are
+    one CPU); the record exists so the trajectory catches regressions in
+    the multi-device path, and so real-accelerator runs drop in with the
+    same schema."""
+    import jax
+    n_dev = len(jax.devices())
+    if n_dev < tp:
+        return {"enabled": False,
+                "reason": f"needs {tp} devices, have {n_dev} (set "
+                          f"XLA_FLAGS=--xla_force_host_platform_"
+                          f"device_count or run on real devices)"}
+
+    rng = np.random.default_rng(seed + 11)
+    n_requests, max_new, plen = (8, 8, 10) if smoke else (16, 16, 12)
+    workload = [(rng.integers(0, cfg.vocab, size=plen).astype(np.int32),
+                 max_new) for _ in range(n_requests)]
+    page_size = 8
+    n_blocks = n_requests * pages_needed(plen, max_new, page_size)
+
+    def run_one(tp_degree: Optional[int]):
+        engine, _ = build_lm_serving(
+            cfg, n_slots=min(n_requests, 8), chunk=chunk,
+            cache_cap=cache_cap, paged=True, page_size=page_size,
+            n_blocks=n_blocks, tp=tp_degree)
+        warm = EngineRequest(uid=-1, prompt=workload[0][0], max_new_tokens=2)
+        engine.submit(warm)
+        engine.run()                   # compile outside the timed region
+        engine.reset_metrics()
+        reqs = [EngineRequest(uid=i, prompt=p, max_new_tokens=m)
+                for i, (p, m) in enumerate(workload)]
+        for r in reqs:
+            assert engine.submit(r), r.dropped
+        peak = 0
+        while engine.has_work() and engine.tick < 100_000:
+            engine.step()
+            peak = max(peak, engine.sched.busy_slots)
+        summary = engine.metrics.summary()
+        assignment = _serving_assignment(engine.stepper)
+        return reqs, {"decode_tok_s": summary["spec"]["decode_tokens_per_s"],
+                      "tokens_per_s": summary["tokens_per_s"],
+                      "peak_concurrent": peak,
+                      "backends": assignment}
+
+    base_reqs, tp1 = run_one(None)
+    tp_reqs, tpn = run_one(tp)
+    exact = all(a.out_tokens == b.out_tokens and a.done and b.done
+                for a, b in zip(base_reqs, tp_reqs))
+    return {"enabled": True, "tp": tp, "devices": n_dev,
+            "workload": {"n_requests": n_requests, "max_new": max_new,
+                         "prompt_len": plen},
+            "tp1": tp1, f"tp{tp}": tpn,
+            "token_exact": bool(exact)}
+
+
 def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
                        ) -> Dict[str, float]:
     """µs/call of the kwargs Program path vs the bind() fast path on the
@@ -633,7 +702,8 @@ def _dispatch_overhead(cfg, *, n_slots, chunk, cache_cap, reps: int = 100
 
 def run(*, smoke: bool = False, quantize: Optional[str] = None,
         n_slots: Optional[int] = None, chunk: int = 8,
-        seed: int = 0, autotune_cache: Optional[str] = None) -> Dict[str, Any]:
+        seed: int = 0, autotune_cache: Optional[str] = None,
+        sharded: bool = False) -> Dict[str, Any]:
     cfg = SMOKE_CFG if smoke else FULL_CFG
     slots = n_slots or (2 if smoke else 4)
     cache_cap = 64 if smoke else 128
@@ -671,6 +741,10 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["load"] = _load_experiment(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         quantize=quantize, seed=seed, smoke=smoke)
+    result["sharded"] = (_sharded_experiment(
+        cfg, chunk=chunk, cache_cap=cache_cap, seed=seed, smoke=smoke)
+        if sharded else
+        {"enabled": False, "reason": "not requested (--sharded)"})
     params = init_lm_params(cfg, 0)
     result["backend_sweep"] = _backend_sweep(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
@@ -742,6 +816,30 @@ def validate_record(rec: Dict[str, Any]) -> List[str]:
                 and abs(ratio - fast / base) > 1e-6 * max(1.0, ratio)):
             problems.append(f"spec.decode_speedup {ratio!r} inconsistent "
                             f"with {fast!r} / {base!r}")
+    sh = rec.get("sharded")
+    if isinstance(sh, dict):
+        if sh.get("enabled") is True:
+            tp = sh.get("tp")
+            for key in ("tp", "devices", "tp1", f"tp{tp}", "token_exact"):
+                if key not in sh:
+                    problems.append(f"sharded (enabled) missing key {key!r}")
+            for side in ("tp1", f"tp{tp}"):
+                body = sh.get(side)
+                if isinstance(body, dict):
+                    for k in ("decode_tok_s", "peak_concurrent"):
+                        if k not in body:
+                            problems.append(
+                                f"sharded.{side} missing key {k!r}")
+                elif side in sh:
+                    problems.append(f"sharded.{side} is not a dict")
+            if not isinstance(sh.get("token_exact"), bool):
+                problems.append("sharded.token_exact is not a bool")
+        elif sh.get("enabled") is False:
+            if "reason" not in sh:
+                problems.append("sharded (disabled) missing 'reason'")
+        else:
+            problems.append(f"sharded.enabled {sh.get('enabled')!r} "
+                            "is not a bool")
     load = rec.get("load")
     if isinstance(load, dict):
         ov = load.get("overall", {})
@@ -770,6 +868,10 @@ def main(argv=None) -> int:
                     help="serve int8-quantized Programs")
     ap.add_argument("--slots", type=int, default=None)
     ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the tensor-parallel (TP=1 vs TP=2) serving "
+                         "comparison; needs >= 2 devices (CI forces host "
+                         "devices via XLA_FLAGS)")
     ap.add_argument("--autotune-cache", metavar="PATH", default=None,
                     help="persistent autotune cache file (default: "
                          "ORPHEUS_AUTOTUNE_CACHE or ~/.cache/orpheus)")
@@ -794,7 +896,7 @@ def main(argv=None) -> int:
 
     rec = run(smoke=args.smoke, quantize="int8" if args.int8 else None,
               n_slots=args.slots, chunk=args.chunk,
-              autotune_cache=args.autotune_cache)
+              autotune_cache=args.autotune_cache, sharded=args.sharded)
     eng, unb = rec["engine"], rec["unbatched"]
     gap = rec["prefill_gap"]
 
@@ -842,6 +944,16 @@ def main(argv=None) -> int:
           f"decode {sp['decode_tok_s_spec']:,.0f} tok/s vs base "
           f"{sp['decode_tok_s_base']:,.0f} ({sp['decode_speedup']:.2f}x); "
           f"exact={sp['token_exact']}")
+    sh = rec["sharded"]
+    if sh["enabled"]:
+        tpk = f"tp{sh['tp']}"
+        print(f"# sharded : TP={sh['tp']} on {sh['devices']} devices; "
+              f"decode {sh[tpk]['decode_tok_s']:,.0f} tok/s vs TP=1 "
+              f"{sh['tp1']['decode_tok_s']:,.0f}; peak concurrent "
+              f"{sh[tpk]['peak_concurrent']} vs {sh['tp1']['peak_concurrent']}; "
+              f"exact={sh['token_exact']}")
+    else:
+        print(f"# sharded : disabled ({sh['reason']})")
     ld = rec["load"]
     ov = ld["overall"]
     print(f"# load    : {ov['n_offered']} offered -> "

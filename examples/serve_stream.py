@@ -15,8 +15,13 @@ pool's hit/CoW/fragmentation stats are printed at the end.
 per-(page, kv-head) scales — same streams, ~4x the KV capacity per byte
 (implies --paged).
 
+--tp N serves tensor-parallel over the first N devices (attention
+sharded over heads, token-identical streams — docs/serving-guide.md
+§10); on a CPU-only host fake the devices first with
+XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
 Run:  PYTHONPATH=src python examples/serve_stream.py [--int8] [--paged]
-          [--kv-dtype {float32,int8}]
+          [--kv-dtype {float32,int8}] [--tp N]
 """
 
 import argparse
@@ -38,11 +43,11 @@ async def client(name: str, aeng: AsyncEngine, prompt, max_new: int, t0: float):
     return toks
 
 
-async def amain(quantize, paged, kv_dtype):
+async def amain(quantize, paged, kv_dtype, tp):
     cfg = GraphLMConfig()
     engine, ref = build_lm_serving(cfg, n_slots=4, chunk=8, cache_cap=96,
                                    quantize=quantize, paged=paged,
-                                   kv_dtype=kv_dtype)
+                                   kv_dtype=kv_dtype, tp=tp)
     aeng = AsyncEngine(engine)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
@@ -79,9 +84,12 @@ def main() -> None:
     ap.add_argument("--kv-dtype", choices=("float32", "int8"),
                     default="float32",
                     help="paged KV page storage dtype (int8 implies --paged)")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="tensor-parallel degree (needs >= N devices)")
     args = ap.parse_args()
     paged = args.paged or args.kv_dtype != "float32"
-    asyncio.run(amain("int8" if args.int8 else None, paged, args.kv_dtype))
+    asyncio.run(amain("int8" if args.int8 else None, paged, args.kv_dtype,
+                      args.tp))
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ __all__ = [
     "register_pass",
     "get_pass",
     "registered_passes",
+    "make_partition_pass",
     "default_pipeline",
     "DEFAULT_PASSES",
 ]
@@ -103,6 +104,40 @@ def get_pass(name: str) -> PassFn:
 
 def registered_passes() -> List[str]:
     return sorted(_PASSES)
+
+
+@register_pass("partition")
+def partition(graph: Graph) -> Graph:
+    """Stamp mesh partition specs onto the graph (no-op without a mesh).
+
+    The registry entry documents the stage; the working variant is the
+    closure from :func:`make_partition_pass`, which ``compile(mesh=...)``
+    appends as the *last* pass — rewrite passes rebuild Graph objects and
+    would drop the stamped attributes, so partitioning always runs on the
+    final graph."""
+    return graph
+
+
+def make_partition_pass(mesh) -> PassFn:
+    """Bind ``mesh`` into a `partition` pass instance.
+
+    The returned pass derives a PartitionSpec for every graph input, param
+    and output from the serving rules in :mod:`repro.sharding.specs` and
+    stores them as ``graph.partition_specs`` (name -> PartitionSpec) plus
+    ``graph.partition_mesh`` ({axis: size}).  :class:`~repro.core.program.
+    Program` freezes both into its ``partition`` property and serialises
+    them through OXF."""
+    def partition(graph: Graph) -> Graph:
+        """Stamp PartitionSpecs for a bound mesh onto the final graph."""
+        from repro.sharding.specs import graph_partition_specs, mesh_axes
+        missing = [o for o in graph.outputs
+                   if o not in graph.value_info and o not in graph.inputs]
+        if missing:  # pipeline=() loads arrive without value_info
+            graph = get_pass("infer_shapes")(graph)
+        graph.partition_specs = graph_partition_specs(graph, mesh)
+        graph.partition_mesh = mesh_axes(mesh)
+        return graph
+    return partition
 
 
 # --------------------------------------------------------------------------- #

@@ -42,6 +42,17 @@ from repro.core.selector import BackendPolicy, FixedPolicy
 __all__ = ["Program", "NodeReport", "compile"]
 
 
+def _partition_spec_to_json(spec) -> List[Any]:
+    """PartitionSpec -> JSON dim entries (None | axis name | [axis names])."""
+    return [list(e) if isinstance(e, (tuple, list)) else e for e in spec]
+
+
+def _partition_spec_from_json(entries: Sequence[Any]):
+    from jax.sharding import PartitionSpec
+    return PartitionSpec(
+        *[tuple(e) if isinstance(e, list) else e for e in entries])
+
+
 @dataclass
 class NodeReport:
     name: str
@@ -64,6 +75,16 @@ class Program:
     def __init__(self, graph: Graph, assignment: Mapping[str, str],
                  pass_stats: Sequence[PassStats] = ()):
         from repro.core.passes import infer_shapes
+        # freeze the partition layout stamped by the `partition` pass before
+        # any Graph rebuild below can drop the dynamic attributes
+        part_specs = getattr(graph, "partition_specs", None)
+        self._partition: Optional[Dict[str, Mapping[str, Any]]] = None
+        if part_specs is not None:
+            self._partition = {
+                "mesh": MappingProxyType(
+                    dict(getattr(graph, "partition_mesh", {}) or {})),
+                "specs": MappingProxyType(dict(part_specs)),
+            }
         self._graph = graph if graph.value_info else infer_shapes(graph)
         self._order = topological_order(self._graph)
         missing = [n.name for n in self._order if n.name not in assignment]
@@ -99,6 +120,17 @@ class Program:
     @property
     def cost_table(self) -> Mapping[str, Tuple[str, Cost]]:
         return self._cost_table
+
+    @property
+    def partition(self) -> Optional[Dict[str, Mapping[str, Any]]]:
+        """Frozen partition layout, or None for unpartitioned Programs.
+
+        ``{"mesh": {axis: size}, "specs": {value name: PartitionSpec}}``
+        with a spec for every graph input, param and output — stamped by
+        ``compile(mesh=...)``'s `partition` pass, serialized through OXF,
+        and used by the serving engine to ``jax.device_put`` caches and
+        params onto NamedShardings with zero re-planning after a load."""
+        return self._partition
 
     def costs(self) -> List[Tuple[Node, str, Cost]]:
         return [(node, *self._cost_table[node.name]) for node in self._order]
@@ -253,24 +285,58 @@ class Program:
                            for name, (b, c) in self._cost_table.items()},
             "quantized": is_quantized(self._graph),
         }
+        if self._partition is not None:
+            # written only for partitioned Programs — unpartitioned bundles
+            # keep their exact pre-existing bytes (OXF additive evolution)
+            meta["partition"] = {
+                "mesh": dict(self._partition["mesh"]),
+                "specs": {name: _partition_spec_to_json(spec)
+                          for name, spec in self._partition["specs"].items()},
+            }
         with open(os.path.join(path, "program.json"), "w") as f:
             json.dump(meta, f, indent=1, sort_keys=True)
 
     @classmethod
-    def load(cls, path: str, policy: Optional[BackendPolicy] = None) -> "Program":
+    def load(cls, path: str, policy: Optional[BackendPolicy] = None,
+             mesh: Optional[Any] = None) -> "Program":
         """Rebuild a Program from :meth:`save` output.  The pinned per-node
         backends win over ``policy`` (which only fills gaps, e.g. for
         bundles written by a plain ``save_graph``), so no re-tuning or
-        re-measurement happens here."""
+        re-measurement happens here.
+
+        A bundle saved from a partitioned Program restores its recorded
+        PartitionSpecs verbatim — zero re-planning.  Passing ``mesh``
+        validates the recorded axis layout against it (clear ValueError on
+        mismatch); for bundles without a recorded partition, ``mesh``
+        partitions the loaded graph fresh via the `partition` pass."""
         g = load_graph(path)
-        return compile(g, policy=policy, pipeline=())
+        part = None
+        meta_path = os.path.join(path, "program.json")
+        if os.path.exists(meta_path):
+            with open(meta_path) as f:
+                part = json.load(f).get("partition")
+        if part is None:
+            return compile(g, policy=policy, pipeline=(), mesh=mesh)
+        if mesh is not None:
+            from repro.sharding.specs import check_mesh_compat
+            check_mesh_compat(part["mesh"], mesh)
+        prog = compile(g, policy=policy, pipeline=())
+        prog._partition = {
+            "mesh": MappingProxyType(
+                {a: int(s) for a, s in part["mesh"].items()}),
+            "specs": MappingProxyType(
+                {n: _partition_spec_from_json(e)
+                 for n, e in part["specs"].items()}),
+        }
+        return prog
 
 
 def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
             pipeline: Optional[Union[PassManager, Sequence]] = None,
             *, validate: bool = False, quantize: Optional[str] = None,
             calib_data: Any = None,
-            calib_ranges: Optional[Mapping[str, Any]] = None) -> Program:
+            calib_ranges: Optional[Mapping[str, Any]] = None,
+            mesh: Optional[Any] = None) -> Program:
     """Graph -> Program: the staged compilation entrypoint.
 
     Parameters
@@ -307,6 +373,13 @@ def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
         different batch/chunk) share one set of activation scales and stay
         numerically identical per sequence.  Mutually exclusive with
         ``calib_data``.
+    mesh:
+        A ``jax.sharding.Mesh``.  When given, the `partition` pass runs as
+        the final compile stage (after every rewrite, so rebuilt Graph
+        objects cannot drop the layout): every input/param/output is
+        stamped with a PartitionSpec from the serving rules in
+        :mod:`repro.sharding.specs`, frozen into ``Program.partition`` and
+        serialized through OXF by :meth:`Program.save`.
     """
     from repro.core.passes import infer_shapes
     if pipeline is None:
@@ -328,9 +401,15 @@ def compile(graph: Graph, policy: Optional[BackendPolicy] = None,
         g = quant.quantize_graph(g, ranges)
     if not g.value_info:
         g = infer_shapes(g)
+    pass_stats = tuple(pipeline.stats)
+    if mesh is not None:
+        from repro.core.pipeline import make_partition_pass
+        pmesh = PassManager([make_partition_pass(mesh)], name="partition")
+        g = pmesh.run(g)
+        pass_stats += tuple(pmesh.stats)
     policy = policy or FixedPolicy()
     assignment: Dict[str, str] = {}
     for node in topological_order(g):
         in_specs = [g.spec_of(v) for v in node.inputs]
         assignment[node.name] = policy.resolve(node, in_specs)
-    return Program(g, assignment, pass_stats=tuple(pipeline.stats))
+    return Program(g, assignment, pass_stats=pass_stats)

@@ -44,26 +44,70 @@ fixed cache capacity), so each serving step jits exactly once.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Sequence
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core.ir import TensorSpec
-from repro.core.registry import Cost, defop, get_impl, impl
+from repro.core.registry import Cost, defop, get_impl, get_op, impl
 from repro.kernels import ref as R
 from repro.kernels.flash_attention import flash_chunk_attention
 from repro.kernels.ops import pallas_interpret
 
 __all__ = ["embedding", "cache_update", "chunk_attention", "greedy_token",
            "verify_attention", "paged_verify_attention",
-           "paged_verify_attention_q"]
+           "paged_verify_attention_q", "serving_mesh",
+           "current_serving_mesh"]
 
 Attrs = Dict[str, Any]
 
 
 def _bytes(specs: Sequence[TensorSpec]) -> float:
     return float(sum(s.nbytes for s in specs))
+
+
+# --------------------------------------------------------------------------- #
+# Serving mesh context — how the ``tp`` backends learn about the mesh.
+# supports()/cost() run at compile time and impl bodies at trace time, both
+# with only (specs/inputs, attrs) in hand, so the engine publishes its mesh
+# through this module-level context instead of threading it per call.
+# --------------------------------------------------------------------------- #
+
+_SERVING_MESH: Optional[Any] = None
+
+
+@contextmanager
+def serving_mesh(mesh):
+    """Make ``mesh`` visible to the ``tp`` serving backends.
+
+    The engine wraps both ``compile(mesh=...)`` (so ``supports()`` sees the
+    mesh during backend selection) and every Program call (so the shard_map
+    bodies see it at trace time) in this context."""
+    global _SERVING_MESH
+    prev = _SERVING_MESH
+    _SERVING_MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _SERVING_MESH = prev
+
+
+def current_serving_mesh():
+    """The mesh published by the innermost :func:`serving_mesh` (or None)."""
+    return _SERVING_MESH
+
+
+def _tp_state():
+    """(mesh, degree) when a serving mesh with a >1 "model" axis is active,
+    else (None, 1)."""
+    mesh = current_serving_mesh()
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return None, 1
+    tp = int(mesh.shape["model"])
+    return (mesh, tp) if tp > 1 else (None, 1)
 
 
 # --------------------------------------------------------------------------- #
@@ -1142,3 +1186,161 @@ def paged_verify_attention_q(q, pages_k, k_scales, pages_v, v_scales, tables,
     return get_impl("paged_verify_attention_q", backend)(
         [q, pages_k, k_scales, pages_v, v_scales, tables, start,
          k_new, v_new], {"scale": scale, **kw})[0]
+
+
+# --------------------------------------------------------------------------- #
+# ``tp`` backends — tensor-parallel attention over the head dim via
+# shard_map.  Heads are independent through the whole softmax, so each
+# device runs the stock xla lowering on its head slice with NO inner
+# collective and bit-identical arithmetic to the single-device run; the
+# only collective is the (exact, pure-data-movement) all-gather handing
+# the head-sharded output back to the replicated half of the Program.
+# supports() requires the serving mesh context (see serving_mesh above)
+# and whole GQA groups per device: tp must divide both Hq and Hk — a
+# GQA-small model falls back to the replicated backends instead.
+# --------------------------------------------------------------------------- #
+
+_HS4 = P(None, None, "model", None)   # (B,T,H,D) / (B,S,H,D) / (N,P,H,D)
+_HS3 = P(None, "model", None)         # decode q (B,H,D)
+_SS2 = P(None, "model")               # scale sidecar (N,Hk)
+_REP = P()
+
+
+def _tp_attn_supports(specs, attrs):
+    """serving mesh active with a "model" axis of size tp > 1 dividing
+    both Hq and Hk (whole GQA groups per device)"""
+    mesh, tp = _tp_state()
+    if mesh is None:
+        return False
+    hq = specs[0].shape[-2]
+    hk = specs[1].shape[2]
+    return hq % tp == 0 and hk % tp == 0
+
+
+def _tp_cost_fn(op: str):
+    base_cost, shape_fn = get_op(op).cost_fn, get_op(op).shape_fn
+
+    def cost(specs, attrs):
+        """op streaming cost plus the (tp-1)/tp all-gather returning the
+        head-sharded output to the replicated Program (collectives.
+        allgather_bytes)"""
+        from repro.sharding.collectives import allgather_bytes
+        _, tp = _tp_state()
+        base = base_cost(specs, attrs)
+        out = shape_fn(specs, attrs)[0]
+        return Cost(flops=base.flops,
+                    bytes=base.bytes + allgather_bytes(out.nbytes, tp))
+    return cost
+
+
+def _tp_call(local_fn, args, in_specs, out_spec):
+    from repro.sharding.collectives import replicate, shard_map_compat
+    mesh, _ = _tp_state()
+    out = shard_map_compat(local_fn, mesh, tuple(in_specs), out_spec)(*args)
+    return replicate(out, mesh)
+
+
+_TP_NOTE = ("shard_map over heads on the serving mesh; per-device xla "
+            "lowering, output all-gathered back to replicated")
+
+
+@impl("chunk_attention", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("chunk_attention"), note=_TP_NOTE)
+def _chunk_attention_tp(inputs, attrs):
+    q, k, v, start = inputs
+    def local(q_, k_, v_, s_):
+        return _chunk_attention_xla([q_, k_, v_, s_], attrs)[0]
+    return [_tp_call(local, (q, k, v, start),
+                     (_HS4, _HS4, _HS4, _REP), _HS4)]
+
+
+@impl("decode_attention", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("decode_attention"), note=_TP_NOTE)
+def _decode_attention_tp(inputs, attrs):
+    q, k, v, lengths = inputs
+    def local(q_, k_, v_, l_):
+        return _decode_attention_xla_dense(q_, k_, v_, l_, attrs)
+    return [_tp_call(local, (q, k, v, lengths),
+                     (_HS3, _HS4, _HS4, _REP), _HS3)]
+
+
+@impl("verify_attention", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("verify_attention"), note=_TP_NOTE)
+def _verify_attention_tp(inputs, attrs):
+    q, k, v, start = inputs
+    def local(q_, k_, v_, s_):
+        return _verify_attention_xla([q_, k_, v_, s_], attrs)[0]
+    return [_tp_call(local, (q, k, v, start),
+                     (_HS4, _HS4, _HS4, _REP), _HS4)]
+
+
+@impl("paged_chunk_attention", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("paged_chunk_attention"), note=_TP_NOTE)
+def _paged_chunk_attention_tp(inputs, attrs):
+    q, pk, pv, tables, start = inputs
+    def local(q_, pk_, pv_, t_, s_):
+        return _paged_chunk_attention_xla([q_, pk_, pv_, t_, s_], attrs)[0]
+    return [_tp_call(local, (q, pk, pv, tables, start),
+                     (_HS4, _HS4, _HS4, _REP, _REP), _HS4)]
+
+
+@impl("paged_decode_attention", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("paged_decode_attention"), note=_TP_NOTE)
+def _paged_decode_attention_tp(inputs, attrs):
+    q, pk, pv, tables, lengths = inputs
+    def local(q_, pk_, pv_, t_, l_):
+        return _paged_decode_attention_xla([q_, pk_, pv_, t_, l_], attrs)[0]
+    return [_tp_call(local, (q, pk, pv, tables, lengths),
+                     (_HS3, _HS4, _HS4, _REP, _REP), _HS3)]
+
+
+@impl("paged_verify_attention", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("paged_verify_attention"), note=_TP_NOTE)
+def _paged_verify_attention_tp(inputs, attrs):
+    q, pk, pv, tables, start = inputs
+    def local(q_, pk_, pv_, t_, s_):
+        return _paged_verify_attention_xla([q_, pk_, pv_, t_, s_], attrs)[0]
+    return [_tp_call(local, (q, pk, pv, tables, start),
+                     (_HS4, _HS4, _HS4, _REP, _REP), _HS4)]
+
+
+@impl("paged_chunk_attention_q", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("paged_chunk_attention_q"), note=_TP_NOTE)
+def _paged_chunk_attention_q_tp(inputs, attrs):
+    q, pk, ks, pv, vs, tables, start = inputs
+    def local(q_, pk_, ks_, pv_, vs_, t_, s_):
+        return _paged_chunk_attention_q_xla(
+            [q_, pk_, ks_, pv_, vs_, t_, s_], attrs)[0]
+    return [_tp_call(local, (q, pk, ks, pv, vs, tables, start),
+                     (_HS4, _HS4, _SS2, _HS4, _SS2, _REP, _REP), _HS4)]
+
+
+@impl("paged_decode_attention_q", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("paged_decode_attention_q"), note=_TP_NOTE)
+def _paged_decode_attention_q_tp(inputs, attrs):
+    q, pk, ks, pv, vs, tables, lengths = inputs
+    def local(q_, pk_, ks_, pv_, vs_, t_, l_):
+        return _paged_decode_attention_q_xla(
+            [q_, pk_, ks_, pv_, vs_, t_, l_], attrs)[0]
+    return [_tp_call(local, (q, pk, ks, pv, vs, tables, lengths),
+                     (_HS3, _HS4, _SS2, _HS4, _SS2, _REP, _REP), _HS3)]
+
+
+@impl("paged_verify_attention_q", "tp", supports=_tp_attn_supports,
+      cost_fn=_tp_cost_fn("paged_verify_attention_q"), note=_TP_NOTE)
+def _paged_verify_attention_q_tp(inputs, attrs):
+    q, pk, ks, pv, vs, tables, start, kn, vn = inputs
+    def local(q_, pk_, ks_, pv_, vs_, t_, s_, kn_, vn_):
+        return _paged_verify_attention_q_xla(
+            [q_, pk_, ks_, pv_, vs_, t_, s_, kn_, vn_], attrs)[0]
+    return [_tp_call(local, (q, pk, ks, pv, vs, tables, start, kn, vn),
+                     (_HS4, _HS4, _SS2, _HS4, _SS2, _REP, _REP, _HS4, _HS4),
+                     _HS4)]
+
+
+# the ops whose ``tp`` backend the engine prefers when given a mesh
+TP_ATTENTION_OPS = (
+    "chunk_attention", "decode_attention", "verify_attention",
+    "paged_chunk_attention", "paged_decode_attention",
+    "paged_verify_attention", "paged_chunk_attention_q",
+    "paged_decode_attention_q", "paged_verify_attention_q")

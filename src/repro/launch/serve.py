@@ -15,7 +15,10 @@ compiled Programs (``repro.runtime.engine``): chunked prefill, deadlines,
 per-token streaming, EngineMetrics — and with ``--int8`` the decode and
 prefill steps are post-training-quantized Programs.  ``--paged`` swaps in
 the paged KV cache; ``--kv-dtype int8`` stores its pages as int8 with
-per-(page, kv-head) scales (implies ``--paged``).
+per-(page, kv-head) scales (implies ``--paged``).  ``--tp N`` (or
+``--mesh model=N``) serves tensor-parallel over the first N devices —
+token-identical output, attention sharded over heads (see
+``docs/serving-guide.md`` §10).
 """
 
 from __future__ import annotations
@@ -39,10 +42,20 @@ def run_engine(args) -> None:
     cfg = GraphLMConfig()
     cache_cap = max(args.cache_cap, args.chunk + args.max_new + 16)
     paged = args.paged or args.kv_dtype != "float32"
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serving_mesh
+        # "model=N" (the serving shape); extra axes would need a custom
+        # Mesh — keep the flag honest about what the engine consumes
+        axis, _, size = args.mesh.partition("=")
+        if axis != "model":
+            raise SystemExit(f"--mesh wants model=N, got {args.mesh!r}")
+        mesh = make_serving_mesh(int(size))
     engine, _ = build_lm_serving(
         cfg, n_slots=args.slots, chunk=args.chunk, cache_cap=cache_cap,
         quantize="int8" if args.int8 else None,
-        paged=paged, kv_dtype=args.kv_dtype)
+        paged=paged, kv_dtype=args.kv_dtype,
+        mesh=mesh, tp=args.tp)
     rng = np.random.default_rng(0)
     reqs = []
     for i in range(args.requests):
@@ -54,9 +67,14 @@ def run_engine(args) -> None:
         engine.submit(r)
     engine.run(max_ticks=100_000)
     m = engine.metrics.summary()
+    tp_note = ""
+    if mesh is not None or args.tp:
+        part = engine.stepper.decode_program.partition
+        tp_note = (f" mesh={dict(part['mesh'])}" if part is not None
+                   else " mesh=?")
     print(f"engine: slots={args.slots} chunk={args.chunk} "
           f"int8={args.int8} paged={paged} kv_dtype={args.kv_dtype} "
-          f"requests={len(reqs)}")
+          f"requests={len(reqs)}{tp_note}")
     print(json.dumps(m, indent=1, sort_keys=True))
     if paged:
         s = engine.stepper.pool.stats()
@@ -85,6 +103,14 @@ def main() -> None:
                          "(int8 implies --paged)")
     ap.add_argument("--chunk", type=int, default=8,
                     help="with --engine: prefill chunk size")
+    ap.add_argument("--tp", type=int, default=None,
+                    help="with --engine: tensor-parallel degree (1-D "
+                         '("model",) serving mesh over the first N '
+                         "devices; fake devices via XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
+    ap.add_argument("--mesh", default=None, metavar="model=N",
+                    help="with --engine: explicit serving mesh spec "
+                         "(alternative to --tp)")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--cache-cap", type=int, default=64)

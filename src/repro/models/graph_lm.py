@@ -49,7 +49,7 @@ __all__ = ["GraphLMConfig", "init_lm_params", "build_decode_graph",
            "init_paged_cache_inputs", "build_verify_graph",
            "build_paged_verify_graph", "build_paged_verify_seq_graph",
            "build_spec_commit_graph",
-           "build_draft_graph", "expand_spec_ranges"]
+           "build_draft_graph", "expand_spec_ranges", "partition_roles"]
 
 
 @dataclass(frozen=True)
@@ -771,3 +771,33 @@ def expand_spec_ranges(ranges: Dict[str, Any], spec_k: int) -> Dict[str, Any]:
         for s in range(spec_k + 1):
             out[f"{name}.s{s}"] = vr
     return out
+
+
+def partition_roles(graph: Graph) -> Dict[str, str]:
+    """Serving-partition role of every value this graph exchanges with the
+    engine: maps each graph input and output name to one of ``"col"``
+    (column/head-parallel weight), ``"kv_col"`` (column-parallel iff the
+    KV-head count divides the TP degree — GQA-small falls back to
+    replication), ``"dense_cache"`` / ``"paged_pool"`` / ``"kv_scale"``
+    (head-sharded serving state), or ``"replicated"``.
+
+    Thin, mesh-free view over :func:`repro.sharding.specs.serving_value_role`
+    — the single source of the rules the ``partition`` compile stage
+    (``compile(graph, mesh=...)``) turns into concrete ``PartitionSpec``\\ s.
+    Builders need no annotations because every value these graphs emit is
+    named by role (``l{i}.wq``, ``cache_k{i}``, ``cache_k{i}_scale``,
+    ``block_tables``, ``new_``-prefixed outputs), and this helper makes
+    that implicit contract inspectable and testable.
+    """
+    from repro.core.pipeline import get_pass
+    from repro.sharding.specs import serving_value_role
+
+    if any(o not in graph.value_info and o not in graph.inputs
+           for o in graph.outputs):
+        graph = get_pass("infer_shapes")(graph)
+    paged = "block_tables" in graph.inputs
+    names = list(graph.inputs) + [o for o in graph.outputs
+                                  if o not in graph.inputs]
+    return {name: serving_value_role(name, graph.spec_of(name).shape,
+                                     paged=paged)
+            for name in names}

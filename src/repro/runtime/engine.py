@@ -52,14 +52,16 @@ from __future__ import annotations
 
 import asyncio
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.program import compile
-from repro.core.selector import BackendPolicy
+from repro.core.selector import BackendPolicy, FixedPolicy
 from repro.ft.coordinator import Coordinator
 from repro.ft.watchdog import HangDetector, StepWatchdog
 from repro.models.graph_lm import (GraphLMConfig, build_decode_graph,
@@ -252,6 +254,26 @@ class EngineMetrics:
 # Program-backed step functions
 # --------------------------------------------------------------------------- #
 
+class _TPFirstPolicy(BackendPolicy):
+    """Delegating wrapper used when serving on a mesh: the attention ops
+    take their ``tp`` (shard_map-over-heads) backend whenever it is
+    supported — i.e. the mesh's "model" axis divides both head counts —
+    and every other decision goes to the wrapped policy.  GQA-small
+    models simply never satisfy ``tp``'s supports() and fall through to
+    the replicated backends."""
+
+    def __init__(self, base: BackendPolicy):
+        self.base = base
+
+    def choose(self, node, in_specs):
+        from repro.core.registry import backends_for
+        from repro.kernels.serving_ops import TP_ATTENTION_OPS
+        if node.op in TP_ATTENTION_OPS and \
+                "tp" in backends_for(node.op, in_specs, node.attrs):
+            return "tp"
+        return self.base.choose(node, in_specs)
+
+
 class ProgramStepper:
     """Owns the two compiled Programs plus the cache arrays they thread.
 
@@ -268,45 +290,77 @@ class ProgramStepper:
                  policy: Optional[BackendPolicy] = None,
                  quantize: Optional[str] = None,
                  calib_ranges: Optional[Mapping[str, Any]] = None,
-                 spec_k: int = 0, draft_layers: Optional[int] = None):
+                 spec_k: int = 0, draft_layers: Optional[int] = None,
+                 mesh: Optional[Any] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.chunk = chunk
         self.cache_cap = cache_cap
-        dec_g = build_decode_graph(cfg, params, batch=n_slots,
-                                   cache_cap=cache_cap)
-        pre_g = build_prefill_graph(cfg, params, batch=n_slots, chunk=chunk,
-                                    cache_cap=cache_cap)
-        self.decode_program = compile(dec_g, policy=policy, quantize=quantize,
-                                      calib_ranges=calib_ranges)
-        self.prefill_program = compile(pre_g, policy=policy, quantize=quantize,
-                                       calib_ranges=calib_ranges)
-        self.cache_names = [v for v in dec_g.outputs[1:]]   # new_cache_*
-        cache_inputs = sorted(init_cache_inputs(cfg, 1, 1))
-        self._cache_input_names = cache_inputs
-        self._input_names = ("tokens", "start", "n_new", *cache_inputs)
-        # caches are threaded call-to-call and never reused -> donate them
-        # (aliased in place on backends that support it)
-        self._dec = self.decode_program.bind(*self._input_names,
-                                             donate=cache_inputs)
-        self._pre = self.prefill_program.bind(*self._input_names,
-                                              donate=cache_inputs)
-        self.caches: Dict[str, Any] = {
-            k: jnp.asarray(v)
-            for k, v in init_cache_inputs(cfg, n_slots, cache_cap).items()}
-        verify_g = None
-        if spec_k > 0:
-            verify_g = build_verify_graph(cfg, params, batch=n_slots,
-                                          width=spec_k + 1,
-                                          cache_cap=cache_cap)
-        self._init_spec(params, policy=policy, quantize=quantize,
-                        calib_ranges=calib_ranges, spec_k=spec_k,
-                        draft_layers=draft_layers, verify_graph=verify_g)
+        self.mesh = mesh
+        if mesh is not None:
+            policy = _TPFirstPolicy(policy or FixedPolicy())
+        with self._mesh_ctx():
+            dec_g = build_decode_graph(cfg, params, batch=n_slots,
+                                       cache_cap=cache_cap)
+            pre_g = build_prefill_graph(cfg, params, batch=n_slots,
+                                        chunk=chunk, cache_cap=cache_cap)
+            self.decode_program = compile(dec_g, policy=policy,
+                                          quantize=quantize,
+                                          calib_ranges=calib_ranges,
+                                          mesh=mesh)
+            self.prefill_program = compile(pre_g, policy=policy,
+                                           quantize=quantize,
+                                           calib_ranges=calib_ranges,
+                                           mesh=mesh)
+            self.cache_names = [v for v in dec_g.outputs[1:]]  # new_cache_*
+            cache_inputs = sorted(init_cache_inputs(cfg, 1, 1))
+            self._cache_input_names = cache_inputs
+            self._input_names = ("tokens", "start", "n_new", *cache_inputs)
+            # caches are threaded call-to-call and never reused -> donate
+            # them (aliased in place on backends that support it)
+            self._dec = self.decode_program.bind(*self._input_names,
+                                                 donate=cache_inputs)
+            self._pre = self.prefill_program.bind(*self._input_names,
+                                                  donate=cache_inputs)
+            self.caches: Dict[str, Any] = self._place_caches(
+                init_cache_inputs(cfg, n_slots, cache_cap))
+            verify_g = None
+            if spec_k > 0:
+                verify_g = build_verify_graph(cfg, params, batch=n_slots,
+                                              width=spec_k + 1,
+                                              cache_cap=cache_cap)
+            self._init_spec(params, policy=policy, quantize=quantize,
+                            calib_ranges=calib_ranges, spec_k=spec_k,
+                            draft_layers=draft_layers, verify_graph=verify_g)
+
+    def _mesh_ctx(self):
+        """serving-mesh context for compiles and Program calls (no-op when
+        single-device): publishes the mesh to the ``tp`` backends' supports
+        guards at compile time and their shard_map bodies at trace time."""
+        if self.mesh is None:
+            return nullcontext()
+        from repro.kernels.serving_ops import serving_mesh
+        return serving_mesh(self.mesh)
+
+    def _place_caches(self, caches: Mapping[str, Any]) -> Dict[str, Any]:
+        """Device cache arrays; on a mesh each is ``jax.device_put`` to the
+        NamedSharding the decode Program's partition stamped for it, so
+        pools/caches/sidecars start life sharded instead of being
+        resharded on the first call."""
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in caches.items()}
+        specs = self.decode_program.partition["specs"]
+        return {k: jax.device_put(
+                    jnp.asarray(v),
+                    jax.sharding.NamedSharding(self.mesh, specs[k]))
+                for k, v in caches.items()}
 
     def _call(self, fn, tokens, start, n_new, *extra):
         cache_args = [self.caches[n] for n in sorted(self.caches)]
-        outs = fn(jnp.asarray(tokens), jnp.asarray(start), jnp.asarray(n_new),
-                  *[jnp.asarray(e) for e in extra], *cache_args)
+        with self._mesh_ctx():
+            outs = fn(jnp.asarray(tokens), jnp.asarray(start),
+                      jnp.asarray(n_new),
+                      *[jnp.asarray(e) for e in extra], *cache_args)
         logits = np.asarray(outs[0])
         for name, arr in zip(self.cache_names, outs[1:]):
             self.caches[name.replace("new_", "")] = arr
@@ -438,8 +492,10 @@ class ProgramStepper:
         all just ``draft_len < length`` catch-up).  Logits are returned
         for symmetry but unused — drafting starts from the committed next
         token, not from these."""
-        outs = self._draft_pre(jnp.asarray(tokens), jnp.asarray(start),
-                               jnp.asarray(n_new), *self._draft_cache_args())
+        with self._mesh_ctx():
+            outs = self._draft_pre(jnp.asarray(tokens), jnp.asarray(start),
+                                   jnp.asarray(n_new),
+                                   *self._draft_cache_args())
         for name, arr in zip(self._draft_cache_names, outs[1:]):
             self.draft_caches[name.replace("new_", "")] = arr
         return np.asarray(outs[0])
@@ -450,8 +506,9 @@ class ProgramStepper:
         token — → (B, spec_k) greedy proposals; draft caches advance
         spec_k+1 rows (the final row makes a full accept need no
         catch-up before the next draft)."""
-        outs = self._draft(jnp.asarray(tokens), jnp.asarray(start),
-                           jnp.asarray(n_new), *self._draft_cache_args())
+        with self._mesh_ctx():
+            outs = self._draft(jnp.asarray(tokens), jnp.asarray(start),
+                               jnp.asarray(n_new), *self._draft_cache_args())
         k = self.spec_k
         for name, arr in zip(self._draft_cache_names, outs[k:]):
             self.draft_caches[name.replace("new_", "")] = arr
@@ -484,7 +541,8 @@ class PagedProgramStepper(ProgramStepper):
                  policy: Optional[BackendPolicy] = None,
                  quantize: Optional[str] = None,
                  calib_ranges: Optional[Mapping[str, Any]] = None,
-                 spec_k: int = 0, draft_layers: Optional[int] = None):
+                 spec_k: int = 0, draft_layers: Optional[int] = None,
+                 mesh: Optional[Any] = None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.chunk = chunk
@@ -493,6 +551,20 @@ class PagedProgramStepper(ProgramStepper):
         self.max_pages = max_pages
         self.kv_dtype = kv_dtype
         self.cache_cap = max_pages * page_size   # per-sequence logical cap
+        self.mesh = mesh
+        if mesh is not None:
+            policy = _TPFirstPolicy(policy or FixedPolicy())
+        with self._mesh_ctx():
+            self._paged_init(params, policy=policy, quantize=quantize,
+                             calib_ranges=calib_ranges, spec_k=spec_k,
+                             draft_layers=draft_layers)
+
+    def _paged_init(self, params, *, policy, quantize, calib_ranges,
+                    spec_k, draft_layers):
+        cfg, n_slots, chunk = self.cfg, self.n_slots, self.chunk
+        page_size, n_blocks = self.page_size, self.n_blocks
+        max_pages, kv_dtype = self.max_pages, self.kv_dtype
+        mesh = self.mesh
         dec_g = build_paged_decode_graph(cfg, params, batch=n_slots,
                                          n_blocks=n_blocks,
                                          page_size=page_size,
@@ -504,9 +576,9 @@ class PagedProgramStepper(ProgramStepper):
                                           max_pages=max_pages,
                                           kv_dtype=kv_dtype)
         self.decode_program = compile(dec_g, policy=policy, quantize=quantize,
-                                      calib_ranges=calib_ranges)
+                                      calib_ranges=calib_ranges, mesh=mesh)
         self.prefill_program = compile(pre_g, policy=policy, quantize=quantize,
-                                       calib_ranges=calib_ranges)
+                                       calib_ranges=calib_ranges, mesh=mesh)
         self.cache_names = [v for v in dec_g.outputs[1:]]
         cache_inputs = sorted(init_paged_cache_inputs(cfg, 1, 1,
                                                       kv_dtype=kv_dtype))
@@ -517,10 +589,9 @@ class PagedProgramStepper(ProgramStepper):
                                              donate=cache_inputs)
         self._pre = self.prefill_program.bind(*self._input_names,
                                               donate=cache_inputs)
-        self.caches: Dict[str, Any] = {
-            k: jnp.asarray(v)
-            for k, v in init_paged_cache_inputs(cfg, n_blocks, page_size,
-                                                kv_dtype=kv_dtype).items()}
+        self.caches: Dict[str, Any] = self._place_caches(
+            init_paged_cache_inputs(cfg, n_blocks, page_size,
+                                    kv_dtype=kv_dtype))
         self.pool = BlockPool(
             n_blocks, page_size, kv_dtype=kv_dtype,
             page_bytes=kv_page_bytes(cfg.n_layers, cfg.n_kv_heads,
@@ -1523,6 +1594,8 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                      coordinator: Optional[Coordinator] = None,
                      spec_k: int = 0,
                      draft_layers: Optional[int] = None,
+                     mesh: Optional[Any] = None,
+                     tp: Optional[int] = None,
                      ) -> Tuple[Engine, UnbatchedReference]:
     """Compile the serving Programs for a graph LM and return the engine
     plus its unbatched reference (sharing weights and, under int8, the
@@ -1544,10 +1617,24 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
     target's first ``draft_layers`` layers, default ``n_layers // 2``)
     and verifies them in one batched call — output stays token-identical
     to plain decode; only the number of Program calls per emitted token
-    changes."""
+    changes.
+
+    ``mesh`` (a ``jax.sharding.Mesh`` with a "model" axis) or ``tp`` (a
+    tensor-parallel degree, turned into such a mesh over the first ``tp``
+    local devices) serves the engine multi-device: Programs compile with
+    ``compile(mesh=...)``, caches/pools/sidecars are ``device_put`` onto
+    their stamped NamedShardings, and attention runs the shard_map ``tp``
+    backends — token-identical to the single-device engine (heads are
+    computed whole per device; the only collective is an exact output
+    all-gather).  The reference stays single-device: it is the oracle."""
     cfg = cfg or GraphLMConfig()
     if kv_dtype != "float32" and not paged:
         raise ValueError("kv_dtype requires paged=True")
+    if tp is not None:
+        if mesh is not None:
+            raise ValueError("pass mesh or tp, not both")
+        from repro.launch.mesh import make_serving_mesh
+        mesh = make_serving_mesh(tp)
     params = dict(params) if params is not None else init_lm_params(cfg, seed)
     ranges = None
     if quantize is not None:
@@ -1560,12 +1647,13 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
             cfg, params, n_slots=n_slots, chunk=chunk, page_size=page_size,
             n_blocks=nb, max_pages=mp, kv_dtype=kv_dtype, policy=policy,
             quantize=quantize, calib_ranges=ranges,
-            spec_k=spec_k, draft_layers=draft_layers)
+            spec_k=spec_k, draft_layers=draft_layers, mesh=mesh)
     else:
         stepper = ProgramStepper(cfg, params, n_slots=n_slots, chunk=chunk,
                                  cache_cap=cache_cap, policy=policy,
                                  quantize=quantize, calib_ranges=ranges,
-                                 spec_k=spec_k, draft_layers=draft_layers)
+                                 spec_k=spec_k, draft_layers=draft_layers,
+                                 mesh=mesh)
     engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue,
                     self_heal=self_heal, hang_timeout=hang_timeout,
                     max_recoveries=max_recoveries, coordinator=coordinator)

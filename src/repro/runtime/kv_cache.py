@@ -111,7 +111,17 @@ class SeqState:
 
 class BlockPool:
     """Fixed-size page pool with refcounting, prefix index, CoW and LRU
-    reclamation of cached (refcount-0 but indexed) blocks."""
+    reclamation of cached (refcount-0 but indexed) blocks.
+
+    Sharding-oblivious by design: the pool tracks *block ids*, never
+    tensor data, so it works unchanged when the engine serves
+    tensor-parallel and the device page arrays ``(N_pages, page, Hk, D)``
+    are head-sharded over the mesh's "model" axis (dim 2 — see
+    ``repro.sharding.specs.cache_specs``).  The CoW copies it schedules
+    (``pending_copies`` → the engine's ``arr.at[dst].set(arr[src])``)
+    index axis 0, which is never sharded, so each device copies exactly
+    its own head slice and ``snapshot()``/``restore()`` of the id-level
+    bookkeeping stays correct without touching device state."""
 
     def __init__(self, n_blocks: int, page_size: int, *,
                  kv_dtype: str = "float32",

@@ -32,7 +32,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ArchConfig
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "data_axes",
-           "named_shardings", "opt_state_specs"]
+           "named_shardings", "opt_state_specs",
+           "serving_value_role", "graph_partition_specs", "mesh_axes",
+           "check_mesh_compat"]
 
 
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -198,6 +200,22 @@ def cache_specs(cache_shape: Any, cfg: ArchConfig, mesh: Mesh, batch: int,
         core = list(shape[lead:])
         spec: list = [None] * len(core)
         leaf_name = names[-1]
+        paged_kv = (leaf_name in ("pages_k", "pages_v")
+                    or (leaf_name in ("k", "v") and len(core) == 4
+                        and core[0] != batch))
+        if paged_kv and len(core) == 4:
+            # paged pool (N_pages, page, Hk, D): rows are block-addressed
+            # through tables, so neither the pool dim nor the page dim can
+            # shard usefully — the kv-head dim carries TP, with full
+            # replication as the GQA-small fallback (never a crash).
+            if _div(core[2], mesh, "model"):
+                spec[2] = "model"
+            return P(*([None] * lead + spec))
+        if leaf_name.endswith("_scale") and len(core) == 2:
+            # (N_pages, Hk) dequant sidecar: mirrors its pool's head shard
+            if _div(core[1], mesh, "model"):
+                spec[1] = "model"
+            return P(*([None] * lead + spec))
         # core[0] = batch
         if core and core[0] == batch and batch % dp_size == 0 and dp_size > 1:
             spec[0] = dp
@@ -257,3 +275,130 @@ def named_shardings(spec_tree: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------- #
+# Serving-graph partitioning — rules behind compile(mesh=...)'s
+# `partition` pass.  Every Program input / param / output gets a
+# PartitionSpec derived from its *name* and *shape*; divisibility guards
+# fall back to replication (the GQA-small fallback), never crash.
+# --------------------------------------------------------------------- #
+
+# scalar/bookkeeping serving inputs that must stay replicated: token ids,
+# write cursors, and block tables (host-computed int32 indices)
+SERVING_REPLICATED = ("tokens", "start", "n_new", "kvlen", "block_tables")
+
+
+def serving_value_role(name: str, shape: Tuple[int, ...], *,
+                       paged: bool = False) -> str:
+    """Classify one serving-graph value into a partition role.
+
+    Roles: ``replicated`` (tokens, cursors, tables, norms, logits, and —
+    deliberately — the row-parallel candidates wo/wd/embed/head_w, see
+    below), ``col`` (column-parallel projection weight), ``kv_col``
+    (column-parallel iff whole kv heads divide the model axis),
+    ``dense_cache`` ((B, S, Hk, D) cache), ``paged_pool``
+    ((N_pages, page, Hk, D) pool), ``kv_scale`` ((N_pages, Hk) sidecar).
+
+    wo/wd (and embed/head_w) are kept replicated rather than row-parallel:
+    a row-parallel matmul splits the contraction dim and combines partial
+    products with a psum, whose float-addition order differs from the
+    single-device reduction — that breaks the engine's token-identity
+    guarantee.  The TP win on those layers is given up in exchange for
+    bitwise-exact serving; the attention shard_map backends charge the
+    resulting all-gather in their cost models instead.
+    """
+    base = name[4:] if name.startswith("new_") else name
+    leaf = base.rsplit(".", 1)[-1]
+    if base in SERVING_REPLICATED or base.startswith("tokens."):
+        return "replicated"
+    if base.startswith("cache_k") or base.startswith("cache_v"):
+        if base.endswith("_scale"):
+            return "kv_scale" if len(shape) == 2 else "replicated"
+        if len(shape) == 4:
+            return "paged_pool" if paged else "dense_cache"
+        return "replicated"
+    if leaf in ("wq", "wg", "wu"):
+        return "col"
+    if leaf in ("wk", "wv"):
+        return "kv_col"
+    return "replicated"
+
+
+def graph_partition_specs(graph: Any, mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpec for every input, param and output of a serving graph.
+
+    Name/shape-driven (the convention of :mod:`repro.models.graph_lm`'s
+    builders): caches and paged pools shard the kv-head dim on "model"
+    when it divides, scale sidecars mirror their pool, q/gate/up
+    projections go column-parallel, wk/wv go column-parallel only when
+    whole kv heads land on each device (GQA-small fallback: replicate),
+    everything else — tokens, cursors, block tables, norms, wo/wd, embed,
+    head_w, logits — is replicated.  Outputs mirror the input they update
+    (``new_<name>`` strips to ``<name>``); unknown names replicate.
+    """
+    paged = "block_tables" in graph.inputs
+    # kv-head count from any 4-D cache input (dim 2, dense and paged alike)
+    kv_heads = 0
+    for n, ts in graph.inputs.items():
+        if (n.startswith("cache_k") or n.startswith("cache_v")) \
+                and not n.endswith("_scale") and len(ts.shape) == 4:
+            kv_heads = int(ts.shape[2])
+            break
+
+    def spec_for(name: str, shape: Tuple[int, ...]) -> P:
+        role = serving_value_role(name, shape, paged=paged)
+        nd = len(shape)
+        if role == "col" and nd >= 1 and _div(shape[-1], mesh, "model"):
+            return P(*([None] * (nd - 1) + ["model"]))
+        if role == "kv_col":
+            # packed (d_model, Hk*dh): shard only on whole kv heads
+            if kv_heads and _div(kv_heads, mesh, "model") \
+                    and nd >= 1 and _div(shape[-1], mesh, "model"):
+                return P(*([None] * (nd - 1) + ["model"]))
+            return P()
+        if role in ("dense_cache", "paged_pool") and nd == 4 \
+                and _div(shape[2], mesh, "model"):
+            return P(None, None, "model", None)
+        if role == "kv_scale" and nd == 2 and _div(shape[1], mesh, "model"):
+            return P(None, "model")
+        return P()
+
+    specs: Dict[str, P] = {}
+    for name, ts in graph.inputs.items():
+        specs[name] = spec_for(name, tuple(ts.shape))
+    for name, arr in graph.params.items():
+        specs[name] = spec_for(name, tuple(np.shape(arr)))
+    for name in graph.outputs:
+        base = name[4:] if name.startswith("new_") else None
+        if base is not None and base in specs:
+            specs[name] = specs[base]    # cache outputs mirror their input
+        else:
+            try:
+                shape = tuple(graph.spec_of(name).shape)
+            except Exception:
+                specs[name] = P()        # shape unknown -> replicate
+                continue
+            specs[name] = spec_for(name, shape)
+    return specs
+
+
+def mesh_axes(mesh: Mesh) -> Dict[str, int]:
+    """``{axis_name: size}`` — the serialisable identity of a mesh."""
+    return {a: int(mesh.shape[a]) for a in mesh.axis_names}
+
+
+def check_mesh_compat(recorded: Dict[str, int], mesh: Mesh) -> None:
+    """Raise ValueError unless ``mesh`` matches a recorded axis layout.
+
+    Compatible means: same axis names with the same sizes (order-free).
+    Specs name mesh axes, so a renamed or resized axis would silently
+    re-plan the layout — exactly what a partitioned bundle promises not
+    to do."""
+    actual = mesh_axes(mesh)
+    if actual != dict(recorded):
+        raise ValueError(
+            f"partitioned Program was saved for mesh axes {dict(recorded)} "
+            f"but is being loaded onto {actual}; reload on a mesh with the "
+            f"same axis names and sizes, or load with mesh=None and "
+            f"re-partition via compile(mesh=...)")

@@ -25,7 +25,7 @@ import numpy as np
 __all__ = ["load_records", "roofline_table", "dryrun_table",
            "weight_bytes", "activation_bytes", "footprint_table",
            "serving_table", "backend_table", "paged_table", "load_table",
-           "spec_table"]
+           "spec_table", "sharded_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -149,6 +149,36 @@ def spec_table(records: Sequence[Tuple[str, Dict]]) -> str:
             f"{sp['decode_tok_s_base']:,.0f} | "
             f"{sp['decode_speedup']:.2f}x | "
             f"{'yes' if sp.get('token_exact') else 'NO'} |")
+    return "\n".join(out)
+
+
+def sharded_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown tensor-parallel serving table from serve_bench JSON
+    records (the ``"sharded"`` section, schema v5): decode tokens/s and
+    peak concurrent requests at TP=1 vs TP=N, plus the token-identity
+    flag (the tp backends promise bitwise-exact serving — ``NO`` here is
+    a bug, not a tolerance).  Disabled records render their reason so a
+    single-device run is visibly "not measured" rather than silently
+    absent."""
+    out = ["| config | TP | decode tok/s (TP=1) | decode tok/s (TP=N) | "
+           "peak concurrent (TP=1 / TP=N) | exact |",
+           "|---|---|---|---|---|---|"]
+    for label, rec in records:
+        sh = rec.get("sharded")
+        if not sh:
+            continue
+        if not sh.get("enabled"):
+            out.append(f"| {label} | — | — | — | — | "
+                       f"disabled: {sh.get('reason', '?')} |")
+            continue
+        tpk = f"tp{sh['tp']}"
+        out.append(
+            f"| {label} | {sh['tp']} | "
+            f"{sh['tp1']['decode_tok_s']:,.0f} | "
+            f"{sh[tpk]['decode_tok_s']:,.0f} | "
+            f"{sh['tp1']['peak_concurrent']} / "
+            f"{sh[tpk]['peak_concurrent']} | "
+            f"{'yes' if sh.get('token_exact') else 'NO'} |")
     return "\n".join(out)
 
 
@@ -353,6 +383,11 @@ def main() -> None:
         if any("load" in rec for _, rec in serve):
             print("## SLO goodput (serve_bench load section)\n")
             print(load_table(serve))
+            print()
+        if any("sharded" in rec for _, rec in serve):
+            print("## Tensor-parallel serving (serve_bench sharded "
+                  "section)\n")
+            print(sharded_table(serve))
             print()
     recs = load_records(args.dir)
     print("## Summary\n")

@@ -7,38 +7,7 @@ Covers: TP/DP train-step numerics vs single-device, tree-decode
 all-gather matmul, and the dry-run cell machinery on a small mesh.
 """
 
-import os
-import subprocess
-import sys
-import textwrap
-
-import jax
-import pytest
-
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-
-# The subprocess tests below force 8 virtual host devices via XLA_FLAGS,
-# so raw device count is not the limiting condition — the mesh code they
-# drive is: it uses the explicit-sharding API (jax.sharding.AxisType,
-# jax.make_mesh(axis_types=...)), which this host's jax may predate.
-# Encoding the real condition here keeps local `pytest -x -q` and CI in
-# agreement without a deselect list.
-multidev = pytest.mark.skipif(
-    not hasattr(jax.sharding, "AxisType"),
-    reason="needs jax.sharding.AxisType (explicit-sharding mesh API); "
-           "this jax predates it")
-
-
-def run_sub(code: str, n_dev: int = 8, timeout: int = 560) -> str:
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
-                        f" --xla_force_host_platform_device_count={n_dev}")
-    env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    res = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                         capture_output=True, text=True, timeout=timeout,
-                         env=env)
-    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
-    return res.stdout
+from conftest import multidev, run_sub
 
 
 PREAMBLE = """
