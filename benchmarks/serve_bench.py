@@ -21,6 +21,13 @@ Measures, on the example graph LM:
   against a paged self-healing engine with bounded admission — goodput
   under SLO (p99 TTFT + p99 inter-token gap in deterministic ticks),
   overload shedding and per-tier breakdowns;
+* tier-aware overload scheduling (``"overload"`` JSON section): the SAME
+  seeded 2x-offered-load trace against the same engine shape under two
+  policies — tier-blind FIFO (priorities stripped at submit) vs
+  tier-aware (low-tier queue shedding + TTFT-budget preemption) — scored
+  on high-tier SLO attainment.  ``validate_record`` enforces the strict
+  win: tier-aware high-tier attainment must exceed the tier-blind
+  baseline's, or the record is invalid;
 * the paged KV cache (``"paged"`` JSON section): max concurrent requests
   at equal memory, dense vs paged; prefix-hit vs cold TTFT (wall time AND
   deterministic prefill-tick counts) on a shared-prefix workload;
@@ -70,7 +77,10 @@ from repro.tools.report import _fmt_assignment
 # present; ``{"enabled": false, "reason": ...}`` when not requested
 # (--sharded) or when the process has a single device — the TP run needs
 # XLA_FLAGS=--xla_force_host_platform_device_count (or real devices).
-SCHEMA_VERSION = 5
+# v6: added the "overload" section (tier-aware scheduling vs tier-blind
+# FIFO on a 2x-offered-load trace: per-policy load reports, preemption
+# and tier-shed counts, high-tier SLO attainment under both policies).
+SCHEMA_VERSION = 6
 DEFAULT_JSON = "BENCH_serve.json"
 
 # section -> required keys; ``validate_record`` (and CI, via --validate)
@@ -86,6 +96,8 @@ REQUIRED_SECTIONS: Dict[str, Tuple[str, ...]] = {
     "spec": ("spec_k", "draft_layers", "accept_rate", "decode_tok_s_spec",
              "decode_tok_s_base", "decode_speedup", "token_exact"),
     "load": ("slo", "trace", "overall", "tiers"),
+    "overload": ("offered_x", "slo", "high_tier", "policies",
+                 "high_tier_attainment", "tier_aware_wins"),
     "backend_sweep": (),
     "autotune": ("assignment",),
     "sharded": ("enabled",),
@@ -607,6 +619,104 @@ def _load_experiment(cfg, *, n_slots, chunk, cache_cap, quantize,
     return run_load(engine, trace, slo)
 
 
+def _overload_experiment(cfg, *, n_slots, chunk, cache_cap, quantize,
+                         seed: int, smoke: bool) -> Dict[str, Any]:
+    """Tier-aware overload scheduling vs the tier-blind FIFO baseline.
+
+    One seeded trace offered at ~2x the engine's drain rate (the
+    interarrival is derived from the per-request tick cost, so "2x" holds
+    across smoke/full shapes), replayed against the SAME engine shape
+    under both policies:
+
+    * ``tier_blind`` — priorities stripped at submit
+      (``run_load(tier_blind=True)``); a full queue rejects arrivals
+      regardless of tier and nothing is ever preempted;
+    * ``tier_aware`` — the engine sheds the lowest queued tier to admit
+      higher ones and preempts a running low-tier decode when the queue
+      head would blow its TTFT budget (``slo_ttft_ticks``); paged
+      victims resume from their surviving pages, so preemption costs
+      pool capacity, not recompute.
+
+    The pool is provisioned generously (blocks are NOT the bottleneck —
+    slots are) so the section isolates the scheduling policy.  The
+    headline is high-tier SLO attainment under each policy, measured
+    against OFFERED requests (``n_slo_met / n_offered``), not finished
+    ones: under overload the baseline's failure mode is shedding
+    high-tier arrivals at the full queue, and a shed request certainly
+    did not meet its SLO — per-finished attainment would hide exactly
+    the behavior this section exists to measure.  The record is invalid
+    (``validate_record``) unless tier-aware strictly wins."""
+    from repro.runtime.loadgen import (SLO, TierSpec, TraceConfig,
+                                       generate_trace, run_load)
+    slo = SLO(ttft_ticks=12, gap_ticks=12)
+    high_tier = "interactive"
+    # per-request tick cost ~= prefill ticks + decode ticks; offered rate
+    # is 2x the slot drain rate n_slots / cost
+    prompt_mean, new_mean = 8.0, 6.0
+    cost = (prompt_mean // chunk + 1) + new_mean
+    offered_x = 2.0
+    trace_cfg = TraceConfig(
+        seed=seed + 3,
+        n_requests=32 if smoke else 96,
+        vocab=cfg.vocab,
+        mean_interarrival_ticks=cost / (offered_x * n_slots),
+        arrival="gamma",
+        burstiness=4.0,
+        prompt_len_mean=prompt_mean, prompt_len_sigma=0.4,
+        prompt_len_max=16,
+        # a fat decode tail (sigma 0.8, max 24): the long low-tier decodes
+        # that hold slots while a high-tier head's TTFT budget burns are
+        # what give preemption something to do
+        new_tokens_mean=new_mean, new_tokens_sigma=0.8, new_tokens_max=24,
+        tiers=(TierSpec(high_tier, priority=1, weight=0.35,
+                        deadline_ticks=400),
+               TierSpec("batch", priority=0, weight=0.65)))
+    trace = generate_trace(trace_cfg)
+    page_size = 8
+    # generous pool: every slot AND every queue entry could hold a
+    # worst-case request's pages at once
+    n_blocks = (n_slots + 2 * n_slots) * pages_needed(
+        trace_cfg.prompt_len_max, trace_cfg.new_tokens_max, page_size)
+
+    def run_policy(tier_aware: bool) -> Dict[str, Any]:
+        engine, _ = build_lm_serving(
+            cfg, n_slots=n_slots, chunk=chunk, cache_cap=cache_cap,
+            paged=True, page_size=page_size, n_blocks=n_blocks,
+            quantize=quantize, max_queue=2 * n_slots, self_heal=True,
+            tier_aware=tier_aware,
+            slo_ttft_ticks=slo.ttft_ticks if tier_aware else None)
+        warm = EngineRequest(uid=-1, prompt=trace.requests[0].prompt,
+                             max_new_tokens=2)
+        engine.submit(warm)
+        engine.run()
+        engine.reset_metrics()
+        report = run_load(engine, trace, slo, tier_blind=not tier_aware)
+        return {"report": report,
+                "n_preempted": engine.metrics.n_preempted,
+                "n_tier_shed": engine.metrics.n_tier_shed}
+
+    blind = run_policy(False)
+    aware = run_policy(True)
+
+    def att(pol: Dict[str, Any]) -> Optional[float]:
+        tr = pol["report"]["tiers"][high_tier]
+        return tr["n_slo_met"] / tr["n_offered"] if tr["n_offered"] else None
+
+    return {
+        "offered_x": offered_x,
+        "slo": {"ttft_ticks": slo.ttft_ticks, "gap_ticks": slo.gap_ticks},
+        "high_tier": high_tier,
+        "trace": {"digest": trace.digest(),
+                  "n_requests": trace_cfg.n_requests,
+                  "mean_interarrival_ticks":
+                      trace_cfg.mean_interarrival_ticks},
+        "policies": {"tier_blind": blind, "tier_aware": aware},
+        "high_tier_attainment": {"tier_blind": att(blind),
+                                 "tier_aware": att(aware)},
+        "tier_aware_wins": bool((att(aware) or 0.0) > (att(blind) or 0.0)),
+    }
+
+
 def _sharded_experiment(cfg, *, chunk, cache_cap, seed: int,
                         smoke: bool, tp: int = 2) -> Dict[str, Any]:
     """Tensor-parallel serving: the SAME paged engine shape at TP=1 and
@@ -741,6 +851,9 @@ def run(*, smoke: bool = False, quantize: Optional[str] = None,
     result["load"] = _load_experiment(
         cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
         quantize=quantize, seed=seed, smoke=smoke)
+    result["overload"] = _overload_experiment(
+        cfg, n_slots=slots, chunk=chunk, cache_cap=cache_cap,
+        quantize=quantize, seed=seed, smoke=smoke)
     result["sharded"] = (_sharded_experiment(
         cfg, chunk=chunk, cache_cap=cache_cap, seed=seed, smoke=smoke)
         if sharded else
@@ -857,6 +970,30 @@ def validate_record(rec: Dict[str, Any]) -> List[str]:
             problems.append("load.overall conservation violated: "
                             f"{accounted} accounted vs "
                             f"{ov.get('n_offered')} offered")
+    ovl = rec.get("overload")
+    if isinstance(ovl, dict) and isinstance(ovl.get("policies"), dict):
+        for policy in ("tier_blind", "tier_aware"):
+            pol = ovl["policies"].get(policy)
+            if not isinstance(pol, dict):
+                problems.append(f"overload.policies missing {policy!r}")
+                continue
+            for k in ("report", "n_preempted", "n_tier_shed"):
+                if k not in pol:
+                    problems.append(f"overload.{policy} missing key {k!r}")
+        # the headline claim is part of the schema: a record where
+        # tier-aware scheduling does NOT strictly beat the tier-blind
+        # baseline on high-tier SLO attainment is a regression, and it
+        # fails validation instead of landing in the trend history
+        att = ovl.get("high_tier_attainment", {})
+        aware, blind = att.get("tier_aware"), att.get("tier_blind")
+        if aware is None or not aware > (blind or 0.0):
+            problems.append(
+                f"overload: tier-aware high-tier attainment {aware!r} does "
+                f"not strictly beat tier-blind {blind!r}")
+        pre = ovl["policies"].get("tier_blind", {})
+        if pre.get("n_preempted") or pre.get("n_tier_shed"):
+            problems.append("overload: tier-blind baseline preempted or "
+                            "tier-shed (it must do neither)")
     return problems
 
 
@@ -964,6 +1101,19 @@ def main(argv=None) -> int:
           f"{ov['goodput_requests_per_s']:.1f} req/s goodput; "
           f"ttft p99 {_ticks(ov['ttft_ticks']['p99'])}, "
           f"gap p99 {_ticks(ov['gap_ticks']['p99'])}")
+    ovl = rec["overload"]
+    att = ovl["high_tier_attainment"]
+
+    def _pct_or_dash(x: Optional[float]) -> str:
+        return "—" if x is None else f"{x:.0%}"
+
+    aw = ovl["policies"]["tier_aware"]
+    print(f"# overload: {ovl['offered_x']:.0f}x offered load; "
+          f"{ovl['high_tier']!r} SLO attainment tier-aware "
+          f"{_pct_or_dash(att['tier_aware'])} vs tier-blind "
+          f"{_pct_or_dash(att['tier_blind'])} "
+          f"(preempted {aw['n_preempted']}, tier-shed {aw['n_tier_shed']}; "
+          f"wins={ovl['tier_aware_wins']})")
     for label, row in rec["backend_sweep"].items():
         print(f"# sweep[{label:>6}]: prefill {row['prefill_tok_s']:,.0f} tok/s "
               f"({row['prefill_vs_ref']:.2f}x ref), "

@@ -56,21 +56,51 @@ class StepWatchdog:
 
 
 class HangDetector:
-    """Arms a deadline around a step; fires ``on_hang`` if exceeded."""
+    """Arms a deadline around a step; fires ``on_hang`` if exceeded.
+
+    Re-armable: one detector guards many steps (the serving engine arms
+    it around every tick), and back-to-back arms must each observe their
+    own overrun.  Two races make the naive Timer-only version drop
+    hangs:
+
+    * a step that overruns the deadline but whose Timer thread has not
+      been scheduled by the time ``__exit__`` cancels it — the hang is
+      real (the deadline elapsed) but ``fired`` never flips, so a second
+      hang in the same recovery window is silently missed;
+    * a stale Timer from a PREVIOUS arm that slips past ``cancel()`` and
+      fires after the next arm reset ``fired`` — reporting a phantom
+      hang against a healthy step.
+
+    Each arm therefore carries a generation number (a stale fire against
+    a newer generation is ignored, under a lock) and ``__exit__`` checks
+    the elapsed ``time.perf_counter()`` clock against the deadline
+    directly — deterministic, thread-free, and what makes the overrun
+    path testable with a fake clock.  ``on_hang`` runs at most once per
+    arm: whichever of the Timer thread and ``__exit__`` flips ``fired``
+    first makes the call, the other sees the flag and stands down.
+    """
 
     def __init__(self, timeout: float, on_hang: Callable[[], None]):
         self.timeout = timeout
         self.on_hang = on_hang
         self._timer: Optional[threading.Timer] = None
         self.fired = False
+        self._gen = 0
+        self._armed_at: Optional[float] = None
+        self._lock = threading.Lock()
 
     def __enter__(self):
-        # re-armable: one detector can guard many steps (the serving
-        # engine arms it around every tick), so each arm starts clean
-        self.fired = False
+        with self._lock:
+            self._gen += 1
+            gen = self._gen
+            self.fired = False
+        self._armed_at = time.perf_counter()
 
-        def fire():
-            self.fired = True
+        def fire(gen: int = gen) -> None:
+            with self._lock:
+                if gen != self._gen or self.fired:
+                    return          # stale arm, or __exit__ beat us to it
+                self.fired = True
             self.on_hang()
 
         self._timer = threading.Timer(self.timeout, fire)
@@ -79,10 +109,19 @@ class HangDetector:
         return self
 
     def __exit__(self, *exc):
-        # disarm; if the timer already fired this is a no-op (cancel() on
-        # a completed Timer does nothing), so the callback runs at most
-        # once per arm — there is no disarm/fire double-report race
         if self._timer is not None:
             self._timer.cancel()
             self._timer = None
+        overran = (self._armed_at is not None
+                   and time.perf_counter() - self._armed_at >= self.timeout)
+        missed = False
+        with self._lock:
+            # invalidate the cancelled Timer even if its thread is past
+            # the cancel window — it must not touch the next arm's flag
+            self._gen += 1
+            if overran and not self.fired:
+                self.fired = True
+                missed = True
+        if missed:
+            self.on_hang()
         return False

@@ -44,7 +44,11 @@ class SlotScheduler:
     — FIFO among equal priorities (``priority`` is read via ``getattr``,
     default 0, so plain :class:`Request` objects work unchanged).  With
     ``max_queue`` set, :meth:`submit` applies admission control: a full
-    queue rejects instead of growing without bound.
+    queue rejects instead of growing without bound.  A tier-aware caller
+    can instead make room with :meth:`shed_lowest` — evict the lowest-
+    priority, most recently queued request below a priority floor — so
+    overload sheds low-tier work before high-tier work is turned away
+    (the policy lives in the engine; this is only the mechanism).
 
     Invariants (property-tested in ``tests/test_serving_engine.py``):
 
@@ -155,6 +159,28 @@ class SlotScheduler:
             raise ValueError(f"slot {slot} is not active")
         self.active[slot] = None
         self._active_seq.pop(slot, None)
+        return req
+
+    def shed_lowest(self, min_priority: int) -> Optional[Any]:
+        """Evict and return the queued request with the LOWEST priority
+        strictly below ``min_priority`` (ties broken toward the most
+        recently submitted — the entry with the least waiting time and
+        the least claim on FIFO fairness).  ``None`` when every queued
+        request is at or above the floor.  The victim is counted as
+        rejected: shed-at-admission is a terminal state, and conservation
+        (queued -> rejected) still balances."""
+        victim_i = None
+        for i, (neg_pri, seq, _req) in enumerate(self._heap):
+            if -neg_pri >= min_priority:
+                continue
+            if victim_i is None or (neg_pri, seq) > (
+                    self._heap[victim_i][0], self._heap[victim_i][1]):
+                victim_i = i
+        if victim_i is None:
+            return None
+        req = self._heap.pop(victim_i)[2]
+        heapq.heapify(self._heap)
+        self.n_rejected += 1
         return req
 
     def drop_queued(self, pred: Callable[[Any], bool]) -> List[Any]:

@@ -36,16 +36,32 @@ deadline (``hang_timeout``) and a :class:`~repro.ft.watchdog.StepWatchdog`
 straggler tracker.  A tick that raises, or that overruns the hang
 deadline, is DISCARDED: the engine restores the block pool to the
 checkpoint taken at the start of the tick (:meth:`Engine.checkpoint` —
-per-slot prompt + generated tokens + block table, plus a
-:meth:`~repro.runtime.kv_cache.BlockPool.snapshot`), tears the slots
-down, and requeues every in-flight request at its original queue
-position.  A requeued request resumes by prefilling its token stream
-(prompt + tokens generated so far); on the paged stepper it keeps its
-sequence and block tables, so prefill fast-forwards past every row that
-was already written — only the failed tick's work is recomputed.  The
-exactness contract extends across recovery: greedy output after a crash
-or hang is token-identical to an uninterrupted run, and no token is ever
-re-emitted to a streaming callback (``tests/test_fault_injection.py``).
+per-slot prompt + generated tokens + committed row count + block table,
+plus a :meth:`~repro.runtime.kv_cache.BlockPool.snapshot`), tears the
+slots down, and requeues every in-flight request at its original queue
+position.  Resume is PAGE-LEVEL on every stepper: a requeued request
+keeps every committed KV row it had — the paged stepper keeps its
+sequence and block tables (int8 scale sidecars live in the same
+block-id-indexed arrays, so they survive with their pages), and the
+dense stepper keeps its per-slot cache rows, relocating them when the
+request is re-admitted to a different slot — so prefill fast-forwards
+past everything already computed and only the failed tick's token
+position is re-executed.  The exactness contract extends across
+recovery: greedy output after a crash or hang is token-identical to an
+uninterrupted run, and no token is ever re-emitted to a streaming
+callback (``tests/test_fault_injection.py``).
+
+Tier-aware overload control (``tier_aware=True``): admission shedding
+and preemption become scheduling decisions driven by request priority
+(the loadgen's :class:`~repro.runtime.loadgen.TierSpec` tiers).  A full
+queue sheds the lowest-priority queued request to make room for a
+higher-priority arrival instead of turning the arrival away, and when
+the highest-priority queued request is about to blow its TTFT budget
+(``slo_ttft_ticks`` and/or its deadline) while every slot is busy, the
+engine preempts the lowest-priority running slot.  A preempted request
+requeues at its original position and resumes through the page-level
+path above — preemption costs pages (they stay reserved), not
+recompute.
 """
 
 from __future__ import annotations
@@ -116,7 +132,8 @@ class EngineRequest:
     submit_tick: int = -1
     first_token_tick: Optional[int] = None
     finish_tick: Optional[int] = None
-    n_requeues: int = 0                     # times recovery preempted us
+    n_requeues: int = 0                     # times we were requeued
+    #                                         (recovery or tier preemption)
     t_submit: float = 0.0
     t_first: Optional[float] = None
     t_done: Optional[float] = None
@@ -187,6 +204,14 @@ class EngineMetrics:
     n_recoveries: int = 0
     requeued_requests: int = 0  # slot preemptions summed over recoveries
     straggler_ticks: int = 0    # StepWatchdog rolling-median flags
+    recovered_rows: int = 0     # KV rows resumed from surviving state
+    #                             (pages / dense slot rows) instead of
+    #                             being re-prefilled after a requeue
+    # tier-aware overload counters (all zero when tier_aware is off)
+    n_preempted: int = 0        # running low-tier slots preempted for
+    #                             a high-tier request at TTFT risk
+    n_tier_shed: int = 0        # queued low-tier requests shed to make
+    #                             room for a higher-tier arrival
     # speculative decoding (all zero when spec_k == 0)
     spec_ticks: int = 0         # draft+verify ticks (counted in decode_ticks)
     spec_proposed: int = 0      # draft tokens offered to verification
@@ -237,6 +262,11 @@ class EngineMetrics:
                 "n_recoveries": self.n_recoveries,
                 "requeued_requests": self.requeued_requests,
                 "straggler_ticks": self.straggler_ticks,
+                "recovered_rows": self.recovered_rows,
+            },
+            "overload": {
+                "n_preempted": self.n_preempted,
+                "n_tier_shed": self.n_tier_shed,
             },
             "spec": {
                 "spec_ticks": self.spec_ticks,
@@ -441,6 +471,23 @@ class ProgramStepper:
             k: jnp.asarray(v)
             for k, v in init_cache_inputs(draft_cfg, self.n_slots,
                                           self.draft_cap).items()}
+
+    def relocate_slots(self, moves: Sequence[Tuple[int, int]]) -> None:
+        """Copy per-slot cache rows ``src -> dst`` — dense page-level
+        resume for a request re-admitted to a different slot than the
+        one whose rows it committed.  One batched gather per cache
+        array (axis 0 is the slot axis): every source is read before
+        any destination is written, so a pair of swapped slots
+        relocates correctly.  Only the main caches move; private draft
+        caches are rebuilt by draft catch-up (resume resets
+        ``draft_len`` to 0), the same path a cold admission takes."""
+        if not moves:
+            return
+        src = jnp.asarray([m[0] for m in moves], jnp.int32)
+        dst = jnp.asarray([m[1] for m in moves], jnp.int32)
+        for name in list(self.caches):
+            arr = self.caches[name]
+            self.caches[name] = arr.at[dst].set(arr[src])
 
     def backend_summary(self) -> Dict[str, Dict[str, Dict[str, int]]]:
         """Per-phase, per-op backend assignment counts — what the policy
@@ -798,13 +845,16 @@ class TickFailure(RuntimeError):
 class CheckpointSlot:
     """In-flight state of one slot, sufficient to rebuild it: the original
     request identity, every token generated so far (the resume stream is
-    ``prompt + out_tokens``), and — paged — the sequence id and block
-    table whose pages survive recovery."""
+    ``prompt + out_tokens``), the number of committed KV rows the slot
+    had written (``rows`` — what page-level resume fast-forwards past),
+    and — paged — the sequence id and block table whose pages survive
+    recovery."""
 
     slot: int
     uid: int
     prompt: np.ndarray
     out_tokens: List[int]
+    rows: int = 0
     sid: Optional[int] = None
     block_table: List[int] = field(default_factory=list)
 
@@ -828,10 +878,16 @@ class EngineCheckpoint:
 
 @dataclass
 class _Resume:
-    """Pending resume of a requeued in-flight request (keyed by uid)."""
+    """Pending resume of a requeued in-flight request (keyed by uid).
+    ``slot``/``rows`` drive dense page-level resume: the per-slot cache
+    rows this request committed in ``slot`` are still valid unless an
+    intervening admission overwrote them (``Engine._dense_rows`` tracks
+    the current owner of every slot's rows)."""
 
     stream: np.ndarray
     sid: Optional[int] = None
+    slot: Optional[int] = None
+    rows: int = 0
 
 
 class Engine:
@@ -850,7 +906,9 @@ class Engine:
                  hang_timeout: Optional[float] = None,
                  max_recoveries: int = 8,
                  coordinator: Optional[Coordinator] = None,
-                 host_id: str = "engine"):
+                 host_id: str = "engine",
+                 tier_aware: bool = False,
+                 slo_ttft_ticks: Optional[int] = None):
         self.stepper = stepper
         self.n_slots = stepper.n_slots
         self.chunk = stepper.chunk
@@ -870,6 +928,13 @@ class Engine:
         # skips re-running the prefix lookup every tick while nothing that
         # could free blocks has happened
         self._gate_blocked: Optional[Tuple[int, int]] = None
+        # ---- tier-aware overload control ----
+        self.tier_aware = tier_aware
+        self.slo_ttft_ticks = slo_ttft_ticks
+        # dense page-level resume: slot -> uid whose cache rows currently
+        # occupy that slot (an admission overwrites them; resume checks
+        # this before trusting surviving rows)
+        self._dense_rows: Dict[int, int] = {}
         # ---- self-healing (ft/ watchdogs wired into the tick loop) ----
         self.self_heal = self_heal
         self.hang_timeout = hang_timeout
@@ -906,6 +971,22 @@ class Engine:
         if self.paged and not self.stepper.pool.fits_ever(
                 len(req.prompt), req.max_new_tokens):
             return self._reject(req, "too_long")
+        if (self.tier_aware and self.sched.max_queue is not None
+                and self.sched.queue_len >= self.sched.max_queue):
+            # tier-aware shedding: a full queue evicts its lowest-priority
+            # member (strictly below the arrival's tier) instead of turning
+            # the arrival away — overload degrades the low tiers first
+            victim = self.sched.shed_lowest(getattr(req, "priority", 0))
+            if victim is not None:
+                victim.dropped = "shed_low_tier"
+                self.metrics.n_rejected += 1
+                self.metrics.n_tier_shed += 1
+                res = self._resume.pop(victim.uid, None)
+                if res is not None and res.sid is not None:
+                    # a preempted request shed from the queue still owns
+                    # its pool sequence; those blocks must come back
+                    self.stepper.pool.release(res.sid, register=False)
+                self._finalize(victim)
         if not self.sched.submit(req):
             req.dropped = "queue_full"
             self.metrics.n_rejected += 1
@@ -994,6 +1075,77 @@ class Engine:
                 self._drop_slot(slot, "deadline")
 
     # ------------------------------------------------------------------ #
+    # tier-aware overload control
+    # ------------------------------------------------------------------ #
+    def _ttft_budget(self, req: EngineRequest) -> Optional[int]:
+        """Absolute tick by which ``req`` must emit its first token: the
+        tighter of the engine-wide TTFT SLO (relative to submit) and the
+        request's own deadline.  ``None`` when neither applies."""
+        budget = (None if self.slo_ttft_ticks is None
+                  else req.submit_tick + self.slo_ttft_ticks)
+        if req.deadline_tick is not None:
+            budget = (req.deadline_tick if budget is None
+                      else min(budget, req.deadline_tick))
+        return budget
+
+    def _overload_control(self) -> None:
+        """Preempt a running low-tier slot when the highest-priority
+        queued request would otherwise blow its TTFT budget.
+
+        Deterministic trigger: every slot is busy, the queue head
+        outranks the lowest-priority running request, and the head's
+        remaining budget no longer covers its own chunked prefill (with
+        decode interleaving, one chunk lands roughly every other tick)
+        plus one tick of slack.  At most one slot is preempted per tick,
+        bounding the disruption; the victim is the lowest-priority slot,
+        ties broken toward the most remaining work (it would hold the
+        slot longest).  The victim requeues at its original position and
+        resumes via the page-level path — its pages stay live, so the
+        preemption costs pool capacity, not recompute."""
+        head = self.sched.peek()
+        if head is None or any(s is None for s in self.slots):
+            return
+        budget = self._ttft_budget(head)
+        if budget is None:
+            return
+        need = 2 * -(-len(head.prompt) // self.chunk) + 1
+        if self.tick + need < budget:
+            return
+        pri = getattr(head, "priority", 0)
+        victim: Optional[Tuple[Tuple[int, int], int]] = None
+        for slot, st in enumerate(self.slots):
+            p = getattr(st.req, "priority", 0)
+            if p >= pri:
+                continue
+            remaining = st.req.max_new_tokens - len(st.req.out_tokens)
+            key = (p, -remaining)
+            if victim is None or key < victim[0]:
+                victim = (key, slot)
+        if victim is not None:
+            self._preempt_slot(victim[1])
+
+    def _preempt_slot(self, slot: int) -> None:
+        """Move a running request back to the queue at its original
+        submit position, keeping everything it computed: its pool
+        sequence (paged — pages and reservations stay live) or its dense
+        cache rows, plus ``prompt + out_tokens`` as the resume stream.
+        Not a terminal state: busy -> queued keeps conservation, exactly
+        like recovery's requeue."""
+        st = self.slots[slot]
+        req = self.sched.preempt(slot)
+        assert req is st.req
+        req.n_requeues += 1
+        rows = st.length if st.decoding else st.pos
+        stream = np.concatenate([np.asarray(req.prompt, np.int32),
+                                 np.asarray(req.out_tokens, np.int32)])
+        sid = self.stepper._slot_seq.pop(slot) if self.paged else None
+        self._resume[req.uid] = _Resume(stream=stream, sid=sid,
+                                        slot=slot, rows=rows)
+        self.slots[slot] = None
+        self.metrics.n_preempted += 1
+        self._gate_blocked = None
+
+    # ------------------------------------------------------------------ #
     def step(self) -> None:
         """One scheduling tick (see class docstring)."""
         if self._t0 is None:
@@ -1001,6 +1153,8 @@ class Engine:
         self.tick += 1
         self.metrics.ticks += 1
         self._expire()
+        if self.tier_aware:
+            self._overload_control()
         if self.paged:
             # admission is gated on BLOCK availability, not slot count
             # alone.  The gate performs the pool admission (claims cached
@@ -1036,6 +1190,7 @@ class Engine:
                         done = self.stepper.pool.sequence(res.sid).n_tokens
                         self.slots[slot] = _SlotState(req=req, pos=done,
                                                       stream=res.stream)
+                        self.metrics.recovered_rows += done
                         continue
                     sid, reused = claims[id(req)]
                     self.stepper.attach(slot, sid)
@@ -1047,13 +1202,34 @@ class Engine:
                 self._gate_blocked = ((refused[0].uid, pool.version)
                                       if refused else None)
         else:
+            # dense page-level resume: committed per-slot cache rows
+            # survive a discarded tick or a preemption (writes are
+            # positional, and rows a failed tick wrote past the committed
+            # length are overwritten before they are ever read), so a
+            # resumed request fast-forwards past them — relocating the
+            # rows when it lands in a different slot.  An intervening
+            # admission overwrites a slot's rows; ``owners`` is checked
+            # against the pre-tick map (nothing is written until the
+            # prefill call later this tick), and a clobbered resume falls
+            # back to the always-correct full re-prefill of the stream.
+            owners = dict(self._dense_rows)
+            moves: List[Tuple[int, int]] = []
             for slot, req in self.sched.admit():
                 res = self._resume.pop(req.uid, None)
-                # dense recovery re-prefills the whole stream from row 0
-                # (per-slot caches are positional; the request may land in
-                # a different slot, so no rows can be trusted)
-                self.slots[slot] = _SlotState(
-                    req=req, stream=None if res is None else res.stream)
+                if res is None:
+                    self.slots[slot] = _SlotState(req=req)
+                elif (res.rows > 0 and res.slot is not None
+                        and owners.get(res.slot) == req.uid):
+                    if res.slot != slot:
+                        moves.append((res.slot, slot))
+                    self.slots[slot] = _SlotState(req=req, pos=res.rows,
+                                                  stream=res.stream)
+                    self.metrics.recovered_rows += res.rows
+                else:
+                    self.slots[slot] = _SlotState(req=req, stream=res.stream)
+                self._dense_rows[slot] = req.uid
+            if moves:
+                self.stepper.relocate_slots(moves)
         prefill = [i for i, st in enumerate(self.slots)
                    if st is not None and not st.decoding]
         decode = [i for i, st in enumerate(self.slots)
@@ -1307,7 +1483,8 @@ class Engine:
                 continue
             entry = CheckpointSlot(slot=slot, uid=st.req.uid,
                                    prompt=st.req.prompt,
-                                   out_tokens=list(st.req.out_tokens))
+                                   out_tokens=list(st.req.out_tokens),
+                                   rows=st.length if st.decoding else st.pos)
             if self.paged:
                 sid = self.stepper._slot_seq[slot]
                 entry.sid = sid
@@ -1343,7 +1520,9 @@ class Engine:
                 f"slot {entry.slot}: checkpoint uid {entry.uid}, live {req.uid}"
             req.n_requeues += 1
             self._resume[req.uid] = _Resume(stream=entry.stream,
-                                            sid=entry.sid)
+                                            sid=entry.sid,
+                                            slot=entry.slot,
+                                            rows=entry.rows)
             self.slots[entry.slot] = None
             self.metrics.requeued_requests += 1
         self._gate_blocked = None
@@ -1596,6 +1775,8 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                      draft_layers: Optional[int] = None,
                      mesh: Optional[Any] = None,
                      tp: Optional[int] = None,
+                     tier_aware: bool = False,
+                     slo_ttft_ticks: Optional[int] = None,
                      ) -> Tuple[Engine, UnbatchedReference]:
     """Compile the serving Programs for a graph LM and return the engine
     plus its unbatched reference (sharing weights and, under int8, the
@@ -1618,6 +1799,13 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
     and verifies them in one batched call — output stays token-identical
     to plain decode; only the number of Program calls per emitted token
     changes.
+
+    ``tier_aware=True`` turns on tier-aware overload control: a full
+    queue sheds its lowest-priority member to admit a higher-priority
+    arrival, and a running low-tier slot is preempted (resuming later via
+    the page-level path) when the highest-priority queued request would
+    otherwise miss its TTFT budget (``slo_ttft_ticks`` and/or its
+    deadline).
 
     ``mesh`` (a ``jax.sharding.Mesh`` with a "model" axis) or ``tp`` (a
     tensor-parallel degree, turned into such a mesh over the first ``tp``
@@ -1656,7 +1844,8 @@ def build_lm_serving(cfg: Optional[GraphLMConfig] = None, *,
                                  mesh=mesh)
     engine = Engine(stepper, eos_id=eos_id, max_queue=max_queue,
                     self_heal=self_heal, hang_timeout=hang_timeout,
-                    max_recoveries=max_recoveries, coordinator=coordinator)
+                    max_recoveries=max_recoveries, coordinator=coordinator,
+                    tier_aware=tier_aware, slo_ttft_ticks=slo_ttft_ticks)
     reference = UnbatchedReference(cfg, params,
                                    cache_cap=max(cache_cap,
                                                  stepper.cache_cap),

@@ -46,6 +46,17 @@ Prefix sharing has two granularities:
 Reuse is capped at ``len(prompt) - 1`` tokens so at least one prompt
 position is always prefilled — the first output token comes from that
 position's logits.
+
+The pool is also the engine's **resume substrate**: a sequence parked
+back in the queue by fault recovery or tier-aware preemption keeps its
+:class:`SeqState` (block table, tokens, reservation) live in the pool,
+and re-admission fast-forwards past every committed row instead of
+re-prefilling — :meth:`BlockPool.snapshot` / :meth:`BlockPool.restore`
+roll the bookkeeping back to the failed tick's start, and
+:meth:`BlockPool.truncate` unwinds rejected speculative rows (dropping
+their prefix-index registrations) the same transactional way.
+``tests/test_pool_properties.py`` drives random interleavings of all
+three against the pool invariants.
 """
 
 from __future__ import annotations

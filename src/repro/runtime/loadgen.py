@@ -260,9 +260,11 @@ class SLO:
                 and req.max_gap_ticks <= self.gap_ticks)
 
 
-# admission-time rejection reasons = "shed" (the request never ran);
-# anything else with `dropped` set (deadline expiry) is a mid-flight drop
-_SHED_REASONS = ("queue_full", "too_long", "empty")
+# admission-time rejection reasons = "shed" (the request was turned away
+# by admission control — including a queued victim evicted by tier-aware
+# overload shedding); anything else with `dropped` set (deadline expiry)
+# is a mid-flight drop
+_SHED_REASONS = ("queue_full", "too_long", "empty", "shed_low_tier")
 
 
 def _tier_summary(reqs: List[EngineRequest], slo: SLO,
@@ -283,7 +285,10 @@ def _tier_summary(reqs: List[EngineRequest], slo: SLO,
         "n_dropped": len(dropped),
         "n_incomplete": len(incomplete),   # 0 unless max_ticks cut us off
         "n_slo_met": len(met),
-        "slo_attainment": len(met) / len(fin) if fin else 0.0,
+        # None, not 0.0, when nothing finished: a tier with no data has
+        # no attainment — the same no-data-is-null contract as `_pct`
+        # (repro.tools.report renders it as an em-dash)
+        "slo_attainment": len(met) / len(fin) if fin else None,
         "goodput_requests_per_s": len(met) / wall_s if wall_s > 0 else 0.0,
         "goodput_tokens_per_s": good_tokens / wall_s if wall_s > 0 else 0.0,
         "ttft_ticks": _pct_dict(ttfts),
@@ -296,7 +301,8 @@ def _tier_summary(reqs: List[EngineRequest], slo: SLO,
 
 
 def run_load(engine: Engine, trace: Trace, slo: SLO, *,
-             max_ticks: int = 200_000) -> Dict[str, Any]:
+             max_ticks: int = 200_000,
+             tier_blind: bool = False) -> Dict[str, Any]:
     """Drive ``engine`` through ``trace`` and score it against ``slo``.
 
     Each request is submitted when the engine's tick clock reaches its
@@ -304,7 +310,12 @@ def run_load(engine: Engine, trace: Trace, slo: SLO, *,
     stretches of a bursty trace really are quiet).  Returns the load
     report: overall + per-tier goodput/shedding/percentiles, trace stats,
     the engine metrics summary, and pool stats when paged.  Conservation
-    (offered == finished + shed + dropped) is asserted, not assumed."""
+    (offered == finished + shed + dropped) is asserted, not assumed.
+
+    ``tier_blind=True`` strips every request's priority at submit (tier
+    labels are kept for scoring): the engine schedules pure FIFO with
+    tier-blind queue-full shedding — the baseline the serve_bench
+    ``overload`` section compares tier-aware scheduling against."""
     pending = sorted(trace.requests, key=lambda r: (r.arrival_tick, r.uid))
     base = engine.tick      # engine may have been warmed already
     submitted: List[EngineRequest] = []
@@ -316,7 +327,8 @@ def run_load(engine: Engine, trace: Trace, slo: SLO, *,
             tr = pending[i]
             req = EngineRequest(
                 uid=tr.uid, prompt=tr.prompt,
-                max_new_tokens=tr.max_new_tokens, priority=tr.priority,
+                max_new_tokens=tr.max_new_tokens,
+                priority=0 if tier_blind else tr.priority,
                 tier=tr.tier,
                 deadline_tick=(None if tr.deadline_ticks is None
                                else engine.tick + tr.deadline_ticks))

@@ -25,7 +25,7 @@ import numpy as np
 __all__ = ["load_records", "roofline_table", "dryrun_table",
            "weight_bytes", "activation_bytes", "footprint_table",
            "serving_table", "backend_table", "paged_table", "load_table",
-           "spec_table", "sharded_table"]
+           "spec_table", "sharded_table", "overload_table"]
 
 
 def load_records(dirpath: str) -> List[Dict]:
@@ -272,7 +272,12 @@ def load_table(records: Sequence[Tuple[str, Dict]]) -> str:
     ``"load"`` section): one row per (config, tier) plus an overall row —
     offered/finished/shed/dropped counts, SLO attainment, goodput in
     requests/s, and the deterministic p99 TTFT and inter-token gap in
-    engine ticks against the SLO bounds."""
+    engine ticks against the SLO bounds.
+
+    A tier with zero finished requests (everything shed or expired under
+    overload) reports ``slo_attainment: null`` — there is nothing to
+    attain over — and renders as an em dash, mirroring the empty-window
+    percentile contract."""
     out = ["| config | tier | offered | finished | shed | dropped | "
            "SLO met | attainment | goodput req/s | ttft p99 (ticks) | "
            "gap p99 (ticks) |",
@@ -288,12 +293,47 @@ def load_table(records: Sequence[Tuple[str, Dict]]) -> str:
             out.append(
                 f"| {label} | {tier} | {tr['n_offered']} | "
                 f"{tr['n_finished']} | {tr['n_shed']} | {tr['n_dropped']} | "
-                f"{tr['n_slo_met']} | {tr['slo_attainment']:.0%} | "
+                f"{tr['n_slo_met']} | {_fmt_count(tr['slo_attainment'], '.0%')} | "
                 f"{tr['goodput_requests_per_s']:.1f} | "
                 f"{_fmt_count(tr['ttft_ticks']['p99'])} / "
                 f"{slo.get('ttft_ticks', '-')} | "
                 f"{_fmt_count(tr['gap_ticks']['p99'])} / "
                 f"{slo.get('gap_ticks', '-')} |")
+    return "\n".join(out)
+
+
+def overload_table(records: Sequence[Tuple[str, Dict]]) -> str:
+    """Markdown overload-scheduling table from serve_bench JSON records
+    (the ``"overload"`` section, schema v6): the same 2x-offered-load
+    trace replayed under the tier-blind FIFO baseline and under
+    tier-aware shedding/preemption, one row per (config, policy, tier).
+    The attainment column is **SLO-met over OFFERED** (the section's
+    headline metric — a request shed at admission did not meet its SLO;
+    met-over-finished would hide exactly the baseline's failure mode).
+    The headline claim is the high-tier rows: tier-aware must strictly
+    beat tier-blind on attainment (``validate_record`` enforces this
+    before artifacts upload).  Zero-offered tiers render an em dash,
+    never a fake 0% or 100%."""
+    out = ["| config | policy | tier | offered | finished | shed | "
+           "dropped | attainment (met/offered) | preempted | tier-shed |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for label, rec in records:
+        ov = rec.get("overload")
+        if not ov:
+            continue
+        for policy in ("tier_blind", "tier_aware"):
+            pol = ov["policies"][policy]
+            rep = pol["report"]
+            for tier, tr in sorted(rep.get("tiers", {}).items()):
+                mark = " *" if tier == ov.get("high_tier") else ""
+                att = (tr["n_slo_met"] / tr["n_offered"]
+                       if tr["n_offered"] else None)
+                out.append(
+                    f"| {label} | {policy} | {tier}{mark} | "
+                    f"{tr['n_offered']} | {tr['n_finished']} | "
+                    f"{tr['n_shed']} | {tr['n_dropped']} | "
+                    f"{_fmt_count(att, '.0%')} | "
+                    f"{pol['n_preempted']} | {pol['n_tier_shed']} |")
     return "\n".join(out)
 
 
@@ -383,6 +423,10 @@ def main() -> None:
         if any("load" in rec for _, rec in serve):
             print("## SLO goodput (serve_bench load section)\n")
             print(load_table(serve))
+            print()
+        if any("overload" in rec for _, rec in serve):
+            print("## Tier-aware overload (serve_bench overload section)\n")
+            print(overload_table(serve))
             print()
         if any("sharded" in rec for _, rec in serve):
             print("## Tensor-parallel serving (serve_bench sharded "

@@ -72,13 +72,87 @@ def test_summary_has_p99_and_self_heal():
     assert s["ttft_s"]["n_samples"] == 1
     sh = s["self_heal"]
     assert set(sh) == {"failed_ticks", "n_crash_failures", "n_hang_failures",
-                       "n_recoveries", "requeued_requests", "straggler_ticks"}
+                       "n_recoveries", "requeued_requests", "straggler_ticks",
+                       "recovered_rows"}
     assert all(v == 0 for v in sh.values())    # zero when self_heal is off
+    ov = s["overload"]
+    assert set(ov) == {"n_preempted", "n_tier_shed"}
+    assert all(v == 0 for v in ov.values())    # zero when tier_aware is off
     sp = s["spec"]
     assert set(sp) == {"spec_ticks", "proposed", "accepted", "accept_rate",
                        "decode_tokens", "decode_wall_s",
                        "decode_tokens_per_s"}
     assert all(v == 0 for v in sp.values())    # zero when spec_k == 0
+
+
+# --------------------------------------------------------------------------- #
+# report rendering on starved tiers (ISSUE 10 satellite)
+# --------------------------------------------------------------------------- #
+
+def _tier_row(offered, finished, met, shed=0):
+    from repro.runtime.engine import _pct_dict
+    samples = [3.0] * finished
+    return {"n_offered": offered, "n_finished": finished, "n_shed": shed,
+            "n_dropped": offered - finished - shed,
+            "n_slo_met": met,
+            "slo_attainment": met / finished if finished else None,
+            "goodput_requests_per_s": float(met),
+            "ttft_ticks": _pct_dict(samples), "gap_ticks": _pct_dict(samples)}
+
+
+def test_load_table_renders_zero_finished_tier_as_dash():
+    """Regression: a tier whose every request was shed under overload has
+    ``slo_attainment: null`` and empty percentile windows; load_table
+    used to feed the None straight into a ``%`` format spec and crash.
+    It must render em dashes — and never a fake 0% or perfect 100%."""
+    from repro.tools.report import load_table
+    rec = {"load": {
+        "slo": {"ttft_ticks": 12, "gap_ticks": 4},
+        "overall": _tier_row(6, 4, 3, shed=2),
+        "tiers": {"interactive": _tier_row(4, 4, 3),
+                  "batch": _tier_row(2, 0, 0, shed=2)}}}
+    table = load_table([("starved", rec)])
+    starved = [ln for ln in table.splitlines() if "| batch |" in ln]
+    assert len(starved) == 1
+    assert "—" in starved[0]
+    assert "0%" not in starved[0] and "100%" not in starved[0]
+    healthy = [ln for ln in table.splitlines() if "| interactive |" in ln][0]
+    assert "75%" in healthy and "—" not in healthy
+
+
+def test_overload_table_attainment_is_met_over_offered():
+    """The overload table scores attainment against OFFERED requests (a
+    shed request missed its SLO by definition); a zero-offered tier is an
+    em dash.  The high tier is starred so the headline rows are findable
+    in a multi-config report."""
+    from repro.tools.report import overload_table
+    pol = lambda tiers, pre, shed: {                       # noqa: E731
+        "report": {"tiers": tiers}, "n_preempted": pre, "n_tier_shed": shed}
+    rec = {"overload": {
+        "high_tier": "interactive",
+        "policies": {
+            "tier_blind": pol({"interactive": _tier_row(4, 2, 1, shed=2),
+                               "idle": _tier_row(0, 0, 0)}, 0, 0),
+            "tier_aware": pol({"interactive": _tier_row(4, 4, 4),
+                               "idle": _tier_row(0, 0, 0)}, 1, 2)}}}
+    table = overload_table([("cfg", rec)])
+    lines = table.splitlines()
+    blind = [ln for ln in lines if "tier_blind | interactive" in ln][0]
+    aware = [ln for ln in lines if "tier_aware | interactive" in ln][0]
+    assert "interactive *" in blind          # high tier is starred
+    assert "25%" in blind                    # 1 met / 4 OFFERED, not 1/2
+    assert "100%" in aware
+    idle_rows = [ln for ln in lines if "| idle |" in ln]
+    assert len(idle_rows) == 2 and all("—" in ln for ln in idle_rows)
+
+
+def test_empty_sections_render_no_rows():
+    """Records without the section produce a header-only table instead of
+    crashing (reports span mixed-schema record sets)."""
+    from repro.tools.report import load_table, overload_table
+    for fn in (load_table, overload_table):
+        table = fn([("old", {"engine": {}})])
+        assert len(table.splitlines()) == 2  # header + separator only
 
 
 # --------------------------------------------------------------------------- #

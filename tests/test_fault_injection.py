@@ -1,32 +1,41 @@
-"""Fault injection against the self-healing serving engine.
+"""Fault injection against the self-healing serving engine — the unified
+engine fault matrix.
 
-The bar (see runtime/engine.py "Self-healing"): kill the engine mid-burst
-— an injected Program exception ("crash") or an injected overrun of the
-hang deadline ("hang") at randomized tick indices — and recovery must be
-invisible in the output:
+Every cache variant of the engine (``conftest.ENGINE_VARIANTS``: dense,
+paged-fp32, paged-int8, speculative; TP=2 via subprocess) is killed
+mid-burst — an injected Program exception ("crash") or an injected
+overrun of the hang deadline ("hang") at randomized tick indices — and
+recovery must be invisible in the output:
 
 * no request lost: every submitted request still reaches ``done``;
 * no token duplicated or skipped: the per-token streaming callbacks see
   exactly the tokens of an uninterrupted run, in order;
 * token-identical: greedy output after recovery equals the uninterrupted
-  run's, for the dense engine AND the paged engine (fp32 and int8 KV);
+  same-variant run's (and the fp32 variants equal the unbatched
+  reference);
 * the block pool passes ``check_integrity`` after every recovery (the
   failed tick's recorded-but-never-written rows must not survive);
+* page-level resume (ISSUE 10): a recovered request fast-forwards past
+  every row that survived the failure — KV pages for the paged engines,
+  committed cache rows for the dense engine — re-executing ONLY the
+  failed tick, with deterministic prefill-tick counts to prove it;
 * the ft/ coordinator sees the restart as a membership event.
+
+The randomized crash/hang tick indices derive from the ``fault_seed``
+fixture, which CI's fault-matrix job rotates per run.
 """
 
 import time
 
 import numpy as np
 import pytest
+from conftest import TINY_LM, engine_variants, make_engine, run_sub
 
 from repro.ft.coordinator import Coordinator
 from repro.models.graph_lm import GraphLMConfig
-from repro.runtime.engine import (Engine, EngineRequest, TickFailure,
-                                  build_lm_serving)
+from repro.runtime.engine import Engine, EngineRequest, TickFailure
 
-TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
-                     n_kv_heads=2, d_ff=64)
+TINY = GraphLMConfig(**TINY_LM)
 
 N_REQS = 6
 MAX_NEW = 6
@@ -62,11 +71,16 @@ def _submit_all(engine):
     return reqs, streams
 
 
-def _inject_crash(stepper, fail_calls, phases=("decode", "prefill")):
+# every phase a stepper may expose; injection wraps the ones present, so
+# one helper serves the plain AND the speculative steppers
+ALL_PHASES = ("decode", "prefill", "draft_prefill", "draft", "verify")
+
+
+def _inject_crash(stepper, fail_calls, phases=None):
     """Wrap the stepper's step functions: the Nth guarded call (counting
-    across both phases) raises for N in ``fail_calls``."""
+    across every wrapped phase) raises for N in ``fail_calls``."""
     calls = [0]
-    for phase in phases:
+    for phase in phases or [p for p in ALL_PHASES if hasattr(stepper, p)]:
         orig = getattr(stepper, phase)
 
         def wrapped(*args, _orig=orig):
@@ -79,9 +93,9 @@ def _inject_crash(stepper, fail_calls, phases=("decode", "prefill")):
     return calls
 
 
-def _inject_hang(stepper, hang_calls, sleep_s):
+def _inject_hang(stepper, hang_calls, sleep_s, phases=None):
     calls = [0]
-    for phase in ("decode", "prefill"):
+    for phase in phases or [p for p in ALL_PHASES if hasattr(stepper, p)]:
         orig = getattr(stepper, phase)
 
         def wrapped(*args, _orig=orig):
@@ -96,26 +110,34 @@ def _inject_hang(stepper, hang_calls, sleep_s):
 
 
 def _random_fail_calls(seed, n=3, lo=2, hi=16):
-    # the uninterrupted burst makes ~19 guarded calls; stay under that so
-    # every sampled index actually fires whatever the seed
+    # the uninterrupted burst makes ~19 guarded calls on the slowest
+    # variant; stay under that so every sampled index actually fires
+    # whatever the seed
     rng = np.random.default_rng(seed)
     return set(int(c) for c in rng.choice(np.arange(lo, hi), size=n,
                                           replace=False))
 
 
-@pytest.fixture(scope="module")
-def baseline():
-    """Uninterrupted dense run: the token-identity oracle for every
-    fp32 recovery scenario (dense==paged exactness is pinned elsewhere)."""
-    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48)
-    reqs, streams = _submit_all(engine)
-    engine.run()
-    outputs = {}
-    for r, toks in zip(reqs, streams):
-        assert r.done and toks == r.out_tokens
-        assert r.out_tokens == ref.generate(r.prompt, MAX_NEW, chunk=4)
-        outputs[r.uid] = list(r.out_tokens)
-    return engine.stepper, outputs
+# one uninterrupted run per variant: the token-identity oracle.  The
+# fp32 variants are additionally pinned to the unbatched reference; the
+# int8 variant's oracle is its own clean run (int8 dequant noise may
+# legitimately diverge from fp32 — the bounded-error contract lives in
+# test_kv8_serving.py).
+_ORACLES = {}
+
+
+def _oracle(variant):
+    if variant not in _ORACLES:
+        engine, ref = make_engine(variant)
+        reqs, streams = _submit_all(engine)
+        engine.run()
+        for r, toks in zip(reqs, streams):
+            assert r.done and toks == r.out_tokens
+            if "int8" not in variant:
+                assert r.out_tokens == ref.generate(r.prompt, MAX_NEW,
+                                                    chunk=4)
+        _ORACLES[variant] = {r.uid: list(r.out_tokens) for r in reqs}
+    return _ORACLES[variant]
 
 
 def _check_identical(reqs, streams, outputs):
@@ -129,12 +151,30 @@ def _check_identical(reqs, streams, outputs):
             f"request holds {r.out_tokens} (dup or skip)")
 
 
+def _check_pool_clean(engine):
+    if not engine.paged:
+        return
+    engine.stepper.pool.check_integrity()
+    # recovery must not leak sequences: every request finished, so no
+    # live sequences remain and reservations are all returned
+    assert engine.stepper.pool.live_sequences == 0
+    assert engine.stepper.pool.stats()["reserved_blocks"] == 0
+
+
+# --------------------------------------------------------------------------- #
+# the matrix: crash + hang recovery on every in-process variant
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("dense", "paged-fp32",
+                                         "paged-int8", "spec"))
 @pytest.mark.parametrize("seed", [0, 1])
-def test_dense_crash_recovery_token_identical(baseline, seed):
-    stepper, outputs = baseline
-    engine = Engine(stepper, self_heal=True)    # fresh engine, same Programs
+def test_crash_recovery_token_identical(variant, engine_kw, seed,
+                                        fault_seed):
+    outputs = _oracle(variant)
+    engine, _ = make_engine(variant, self_heal=True)
     reqs, streams = _submit_all(engine)
-    _inject_crash(engine.stepper, _random_fail_calls(seed))
+    _inject_crash(engine.stepper, _random_fail_calls(1000 * fault_seed + seed))
     engine.run()
     assert engine.metrics.n_recoveries >= 1
     assert engine.metrics.n_crash_failures == engine.metrics.failed_ticks
@@ -142,48 +182,171 @@ def test_dense_crash_recovery_token_identical(baseline, seed):
     _check_identical(reqs, streams, outputs)
     assert sum(r.n_requeues for r in reqs) == engine.metrics.requeued_requests
     engine.sched.check_conservation()
+    _check_pool_clean(engine)
 
 
-@pytest.mark.parametrize("seed", [0, 3])
-def test_paged_crash_recovery_token_identical(baseline, seed):
-    _, outputs = baseline
-    engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                 paged=True, self_heal=True)
-    reqs, streams = _submit_all(engine)
-    _inject_crash(engine.stepper, _random_fail_calls(seed + 10))
-    engine.run()
-    assert engine.metrics.n_recoveries >= 1
-    _check_identical(reqs, streams, outputs)
-    engine.stepper.pool.check_integrity()
-    engine.sched.check_conservation()
-    # recovery must not leak sequences: every request finished, so no live
-    # sequences remain and reservations are all returned
-    assert engine.stepper.pool.live_sequences == 0
-    assert engine.stepper.pool.stats()["reserved_blocks"] == 0
-
-
-def test_paged_hang_recovery_token_identical(baseline):
-    _, outputs = baseline
-    engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                 paged=True, self_heal=True,
-                                 hang_timeout=0.25)
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("dense", "paged-fp32",
+                                         "paged-int8", "spec"))
+def test_hang_recovery_token_identical(variant, engine_kw):
+    outputs = _oracle(variant)
+    engine, _ = make_engine(variant, self_heal=True, hang_timeout=0.25)
     reqs, streams = _submit_all(engine)
     _inject_hang(engine.stepper, {3, 9}, sleep_s=0.6)
     engine.run()
     assert engine.metrics.n_hang_failures >= 2
     assert engine.metrics.n_recoveries >= 2
     _check_identical(reqs, streams, outputs)
-    engine.stepper.pool.check_integrity()
+    engine.sched.check_conservation()
+    _check_pool_clean(engine)
 
 
-def test_int8_kv_crash_recovery_token_identical():
-    """Quantized KV pages through recovery: the restored pool bookkeeping
-    must stay bit-consistent with the int8 device pages AND their scale
-    sidecars — compared against an uninterrupted int8 run."""
+# --------------------------------------------------------------------------- #
+# page-level resume: deterministic tick counts (the tentpole bar)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("dense", "paged-fp32",
+                                         "paged-int8"))
+def test_page_level_resume_skips_committed_rows(variant, engine_kw):
+    """A recovered request re-executes ZERO prefill ticks for rows that
+    survived the failure.  One request, 16-token prompt, chunk 4: clean
+    run prefills in 4 ticks; crash the second decode call and the resume
+    prefill must cost exactly ONE more tick (the failed tick's token
+    position) — not the 5 a cold re-prefill of the 17 committed rows
+    would take — with ``recovered_rows`` accounting for the fast-forward
+    row for row."""
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(2, TINY.vocab, size=16).astype(np.int32)
+
     def run(inject):
-        engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                     paged=True, kv_dtype="int8",
-                                     quantize="int8", self_heal=inject)
+        engine, _ = make_engine(variant, self_heal=True)
+        req = EngineRequest(uid=0, prompt=prompt, max_new_tokens=6)
+        if inject:
+            _inject_crash(engine.stepper, {2}, phases=("decode",))
+        assert engine.submit(req)
+        engine.run()
+        assert req.done and req.dropped is None
+        return engine, req
+
+    base_engine, base_req = run(inject=False)
+    # the controlled crash point assumes the clean run decodes past call
+    # 2 (no early EOS) — pin that so a model change can't silence this
+    assert len(base_req.out_tokens) >= 3
+    cold_prefill = base_engine.metrics.prefill_ticks
+    assert cold_prefill == 4                       # ceil(16 / chunk=4)
+    rec_engine, rec_req = run(inject=True)
+    assert rec_engine.metrics.n_recoveries == 1
+    assert rec_req.out_tokens == base_req.out_tokens
+    # prompt rows + the one committed decode row all survived ...
+    assert rec_engine.metrics.recovered_rows == len(prompt) + 1
+    # ... so resume re-executes exactly one prefill tick, not ceil(17/4)
+    assert rec_engine.metrics.prefill_ticks == cold_prefill + 1
+    _check_pool_clean(rec_engine)
+
+
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("paged-fp32", "paged-int8"))
+def test_page_level_resume_burst_never_reprefills(variant, engine_kw,
+                                                  fault_seed):
+    """Burst-level version of the tick-count bar: with every injected
+    failure landing in decode, the recovered run's TOTAL prefill ticks
+    exceed the clean run's by at most one resume tick per requeue —
+    impossible under whole-stream re-prefill of multi-chunk streams."""
+    outputs = _oracle(variant)
+    clean_engine, _ = make_engine(variant)
+    reqs, streams = _submit_all(clean_engine)
+    clean_engine.run()
+    clean_prefill = clean_engine.metrics.prefill_ticks
+
+    engine, _ = make_engine(variant, self_heal=True)
+    reqs, streams = _submit_all(engine)
+    _inject_crash(engine.stepper,
+                  _random_fail_calls(3000 + fault_seed, lo=8, hi=16),
+                  phases=("decode",))
+    engine.run()
+    assert engine.metrics.n_recoveries >= 1
+    _check_identical(reqs, streams, outputs)
+    assert engine.metrics.recovered_rows > 0
+    assert (engine.metrics.prefill_ticks
+            <= clean_prefill + engine.metrics.requeued_requests)
+    engine.sched.check_conservation()
+    _check_pool_clean(engine)
+
+
+# --------------------------------------------------------------------------- #
+# TP=2: the same matrix bars under tensor parallelism (subprocess)
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("variant,engine_kw", engine_variants("tp2"))
+def test_tp2_crash_recovery_and_page_level_resume(variant, engine_kw):
+    """The tp2 matrix column: crash recovery stays token-identical to
+    the single-device clean run AND resumes from surviving pages (the
+    sharded caches are slot/block-indexed on axis 0 exactly like the
+    single-device ones, so the id-level resume bookkeeping carries
+    over unchanged)."""
+    run_sub("""
+import numpy as np, jax
+import repro
+from repro.models.graph_lm import GraphLMConfig
+from repro.runtime.engine import EngineRequest, build_lm_serving
+
+assert len(jax.devices()) == 8, jax.devices()
+TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
+                     n_kv_heads=2, d_ff=64)
+rng = np.random.default_rng(42)
+head = rng.integers(0, 61, size=6).astype(np.int32)
+prompts = []
+for i in range(6):
+    tail = rng.integers(0, 61, size=int(rng.integers(2, 9))).astype(np.int32)
+    prompts.append(np.concatenate([head, tail]) if i % 2 else tail)
+
+def run(tp, inject):
+    engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
+                                 paged=True, self_heal=True, tp=tp)
+    rs = []
+    for i, p in enumerate(prompts):
+        r = EngineRequest(uid=i, prompt=p, max_new_tokens=6)
+        assert engine.submit(r); rs.append(r)
+    if inject:
+        calls = [0]
+        for phase in ("decode", "prefill"):
+            orig = getattr(engine.stepper, phase)
+            def wrapped(*args, _orig=orig):
+                calls[0] += 1
+                if calls[0] in (9, 13):
+                    raise RuntimeError("injected fault")
+                return _orig(*args)
+            setattr(engine.stepper, phase, wrapped)
+    engine.run()
+    assert all(r.done and r.dropped is None for r in rs)
+    if inject:
+        assert engine.metrics.n_recoveries >= 1
+        # resume came from surviving pages, not a cold re-prefill
+        assert engine.metrics.recovered_rows > 0, "page-level resume idle"
+    engine.stepper.pool.check_integrity()
+    assert engine.stepper.pool.live_sequences == 0
+    return [tuple(r.out_tokens) for r in rs]
+
+base = run(None, False)
+assert run(2, False) == base, "tp clean run differs"
+assert run(2, True) == base, "tp recovery run differs"
+print("OK")
+""")
+
+
+# --------------------------------------------------------------------------- #
+# scheduler/recovery interactions (variant-independent)
+# --------------------------------------------------------------------------- #
+
+def test_int8_weights_compose_with_recovery():
+    """kv_dtype="int8" pages + quantize="int8" weight Programs through
+    recovery: the restored pool bookkeeping must stay bit-consistent
+    with the int8 device pages AND their scale sidecars — compared
+    against an uninterrupted run of the same stack."""
+    def run(inject):
+        engine, _ = make_engine("paged-int8", quantize="int8",
+                                self_heal=inject)
         reqs, streams = _submit_all(engine)
         if inject:
             _inject_crash(engine.stepper, _random_fail_calls(7))
@@ -198,7 +361,7 @@ def test_int8_kv_crash_recovery_token_identical():
     assert run(inject=False) == run(inject=True)
 
 
-def test_recovery_requeue_never_sheds_admitted_requests(baseline):
+def test_recovery_requeue_never_sheds_admitted_requests():
     """Bounded-queue interaction with recovery (ISSUE 8 audit):
     ``_recover()`` requeues every in-flight request via
     ``SlotScheduler.preempt()``, which pushes straight into the heap and
@@ -208,9 +371,8 @@ def test_recovery_requeue_never_sheds_admitted_requests(baseline):
     with crashes timed so slots are busy and the queue is full at
     recovery: everything admitted still finishes, nothing is rejected
     after submit time, and conservation holds."""
-    _, outputs = baseline
-    engine, _ = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=48,
-                                 self_heal=True, max_queue=2)
+    outputs = _oracle("dense")
+    engine, _ = make_engine("dense", n_slots=2, self_heal=True, max_queue=2)
     reqs, streams = [], []
     for i, p in enumerate(PROMPTS):
         toks = []
@@ -233,7 +395,7 @@ def test_recovery_requeue_never_sheds_admitted_requests(baseline):
     assert len(reqs) >= 4
     assert engine.sched.queue_len == 2 and engine.sched.busy_slots == 2
     # crash early ticks: 2 busy slots + a full queue get preempt()ed
-    _inject_crash(engine.stepper, {2, 4, 7})
+    _inject_crash(engine.stepper, {2, 4, 7}, phases=("decode", "prefill"))
     engine.run()
     assert engine.metrics.n_recoveries >= 1
     assert engine.metrics.requeued_requests >= 1
@@ -244,15 +406,16 @@ def test_recovery_requeue_never_sheds_admitted_requests(baseline):
     engine.sched.check_conservation()
 
 
-def test_recovery_is_a_membership_event(baseline):
-    stepper, outputs = baseline
+def test_recovery_is_a_membership_event():
+    outputs = _oracle("dense")
+    engine, _ = make_engine("dense")
     coord = Coordinator(deadline=60.0)
-    engine = Engine(stepper, self_heal=True, coordinator=coord,
+    engine = Engine(engine.stepper, self_heal=True, coordinator=coord,
                     host_id="engine-0")
     gen0 = coord.generation
     assert coord.alive() == ["engine-0"]
     reqs, streams = _submit_all(engine)
-    _inject_crash(engine.stepper, {4})
+    _inject_crash(engine.stepper, {4}, phases=("decode", "prefill"))
     engine.run()
     assert engine.metrics.n_recoveries == 1
     # the re-registration after recovery bumps the membership generation
@@ -261,19 +424,17 @@ def test_recovery_is_a_membership_event(baseline):
     _check_identical(reqs, streams, outputs)
 
 
-def test_gives_up_after_max_recoveries(baseline):
-    stepper, _ = baseline
-    engine = Engine(stepper, self_heal=True, max_recoveries=3)
-    reqs, _ = _submit_all(engine)
+def test_gives_up_after_max_recoveries():
+    engine, _ = make_engine("dense", self_heal=True, max_recoveries=3)
+    _submit_all(engine)
     _inject_crash(engine.stepper, set(range(1, 10_000)))   # every tick fails
     with pytest.raises(TickFailure, match="giving up"):
         engine.run()
     assert engine.metrics.n_recoveries == 3
 
 
-def test_without_self_heal_faults_propagate(baseline):
-    stepper, _ = baseline
-    engine = Engine(stepper)                     # self_heal off
+def test_without_self_heal_faults_propagate():
+    engine, _ = make_engine("dense")                # self_heal off
     _submit_all(engine)
     _inject_crash(engine.stepper, {2})
     with pytest.raises(RuntimeError, match="injected fault"):

@@ -139,3 +139,74 @@ def test_exit_after_fire_is_clean():
             time.sleep(0.05)
         assert hd.fired
     assert len(calls) == 3                  # once per arm, never double
+
+
+# --------------------------------------------------------------------------- #
+# HangDetector re-arm races (ISSUE 10 pin) — fake clock, no sleeps
+# --------------------------------------------------------------------------- #
+
+def test_overrun_detected_even_when_timer_never_ran(clock):
+    """The race the engine hit on back-to-back recoveries: a step
+    overruns the deadline, but __exit__ cancels the Timer before its
+    thread is ever scheduled.  The hang is real — the deadline elapsed —
+    so __exit__ itself must detect the overrun from the (fake) clock and
+    fire, deterministically, with no Timer thread involved at all."""
+    fired = []
+    # huge real timeout: the Timer thread can never be the one firing
+    hd = HangDetector(10.0, lambda: fired.append(1))
+    with hd:
+        clock.t += 11.0                     # overrun, Timer still pending
+    assert hd.fired
+    assert fired == [1]
+    assert hd._timer is None
+
+
+def test_back_to_back_overruns_each_fire_once(clock):
+    """Two consecutive hung recoveries: each arm observes ITS OWN
+    overrun — the second hang must not be silently swallowed by state
+    left over from the first (the re-arm bug this pins)."""
+    fired = []
+    hd = HangDetector(10.0, lambda: fired.append(len(fired) + 1))
+    for arm in (1, 2):
+        with hd:
+            clock.t += 11.0
+        assert hd.fired, f"arm {arm} missed its overrun"
+    assert fired == [1, 2]
+    # and a healthy arm in between resets cleanly
+    with hd:
+        clock.t += 1.0
+    assert not hd.fired
+    assert fired == [1, 2]
+
+
+def test_stale_timer_fire_cannot_corrupt_next_arm(clock):
+    """A Timer thread from arm N that slips past cancel() and runs
+    during arm N+1 must be ignored: its generation is stale, so it
+    neither flips ``fired`` nor invokes the callback against the
+    healthy step."""
+    fired = []
+    hd = HangDetector(10.0, lambda: fired.append(1))
+    with hd:
+        stale_fire = hd._timer.function     # arm 1's pending callback
+        clock.t += 1.0                      # arm 1 is healthy
+    assert not hd.fired
+    with hd:
+        stale_fire()                        # arm 1's Timer runs late
+        assert not hd.fired, "stale fire corrupted the live arm"
+        clock.t += 1.0
+    assert not hd.fired
+    assert fired == []
+
+
+def test_exit_and_timer_agree_on_single_fire(clock):
+    """When the Timer DID fire and __exit__ also sees the overrun on the
+    clock, exactly one of them reports: whoever flips ``fired`` first
+    wins and the other stands down."""
+    fired = []
+    hd = HangDetector(10.0, lambda: fired.append(1))
+    with hd:
+        timer_fire = hd._timer.function
+        clock.t += 11.0
+        timer_fire()                        # Timer beats __exit__
+        assert hd.fired
+    assert fired == [1]                     # __exit__ stood down

@@ -13,6 +13,7 @@ cold, prefix-hit and copy-on-write paths, with logit error bounded.
 
 import numpy as np
 import pytest
+from conftest import TINY_LM, make_engine
 
 import repro  # noqa: F401  (registers every op/backend)
 from repro.core import backends_for, compile
@@ -27,8 +28,7 @@ from repro.models.graph_lm import (GraphLMConfig, build_paged_prefill_graph,
 from repro.runtime.engine import EngineRequest, build_lm_serving
 from repro.runtime.kv_cache import BlockPool, kv_page_bytes
 
-TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
-                     n_kv_heads=2, d_ff=64)
+TINY = GraphLMConfig(**TINY_LM)
 
 
 def _rng():
@@ -273,8 +273,8 @@ def test_kv8_prefill_logits_bounded_and_top1_exact():
 
 @pytest.fixture(scope="module")
 def kv8_engine():
-    return build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                            paged=True, page_size=8, kv_dtype="int8")
+    # the shared paged-int8 matrix variant (conftest.ENGINE_VARIANTS)
+    return make_engine("paged-int8")
 
 
 def _exact(engine, ref, reqs):
@@ -340,9 +340,8 @@ def test_kv8_composes_with_int8_programs():
     """kv_dtype="int8" (cache pages) and quantize="int8" (weights) are
     orthogonal; together they must still match the fp32 dense-cache
     int8-Program reference token for token."""
-    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
-                                   paged=True, page_size=8,
-                                   kv_dtype="int8", quantize="int8")
+    engine, ref = make_engine("paged-int8", n_slots=2, cache_cap=32,
+                              quantize="int8")
     rng = np.random.default_rng(24)
     reqs = [EngineRequest(
         uid=i, prompt=rng.integers(0, TINY.vocab,

@@ -1,0 +1,217 @@
+"""BlockPool snapshot / restore / truncate property suite (ISSUE 10).
+
+The self-healing engine's page-level resume and the speculative reject
+path both lean on three pool guarantees that this suite drives with
+randomized op interleavings (hypothesis when installed, a seeded
+deterministic sweep otherwise):
+
+* **restore is idempotent** — ``restore(snap)`` brings the pool to a
+  state whose own ``snapshot()`` equals ``snap``, and restoring the same
+  snapshot again (a recovered engine may crash again) changes nothing;
+* **restore lands on a valid pool** — ``check_integrity`` passes after
+  every restore, whatever ops ran since the checkpoint;
+* **truncated speculative pages never resurrect** — a page filled by a
+  speculative write is registered in the prefix index; rejecting those
+  rows must pull it back out, so no later lookup can reuse content that
+  encodes rejected tokens;
+* **int8 metadata round-trips** — ``kv_dtype`` / ``page_bytes`` survive
+  snapshot/restore cycles byte-for-byte in ``stats()`` (the device-side
+  scale-sidecar exactness is pinned by the kv8 fault tests: sidecars are
+  block-id-indexed arrays, so they ride the same block tables).
+
+Speculative rows are drawn from a disjoint token range so a rejected
+chain is globally unique: any post-truncate lookup reuse beyond the
+kept length would be unambiguous resurrection, not a small-vocab
+collision.
+"""
+
+import numpy as np
+import pytest
+
+from repro.runtime.kv_cache import BlockPool, kv_page_bytes
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+OPS = ("admit", "append", "spec", "fork", "finish", "drop",
+       "checkpoint", "crash")
+
+
+def _prompt(rng, n, vocab=7):
+    # small vocab on purpose: shared prefixes, CoW and index collisions
+    return [int(t) for t in rng.integers(0, vocab, size=n)]
+
+
+def _drive(n_blocks, page, ops, seed, kv_dtype="float32"):
+    """Replay a random op sequence with checkpoint/crash interleaved.
+
+    ``checkpoint`` captures ``pool.snapshot()`` plus a shadow copy of
+    the live-sequence map; ``crash`` restores the latest checkpoint
+    (twice — idempotence) and rolls the shadow back with it, exactly
+    like the engine's ``_recover``.  ``spec`` models one speculative
+    verify: append K rows from the unique-token range, then truncate an
+    arbitrary tail of them back off."""
+    page_bytes = kv_page_bytes(2, 2, page, 8, kv_dtype)
+    pool = BlockPool(n_blocks, page, kv_dtype=kv_dtype,
+                     page_bytes=page_bytes)
+    rng = np.random.default_rng(seed)
+    maxrows = {}                  # sid -> admitted row cap (L + new - 1)
+    snaps = []                    # (snapshot, shadow maxrows)
+    unique = [10_000]             # spec tokens: globally unique
+    stats = {"crashes": 0, "specs": 0}
+
+    for op in ops:
+        if op == "admit":
+            plen = int(rng.integers(1, 3 * page))
+            max_new = int(rng.integers(1, 2 * page))
+            if not pool.fits_ever(plen, max_new):
+                continue
+            res = pool.admit(_prompt(rng, plen), max_new)
+            if res is not None:
+                sid, reused = res
+                prompt = pool.sequence(sid).tokens + _prompt(
+                    rng, plen - reused)
+                pool.append(sid, prompt[reused:])
+                maxrows[sid] = plen + max_new - 1
+        elif op == "append" and maxrows:
+            sid = int(rng.choice(list(maxrows)))
+            if pool.sequence(sid).n_tokens < maxrows[sid]:
+                pool.append(sid, _prompt(rng, 1))
+        elif op == "spec" and maxrows:
+            sid = int(rng.choice(list(maxrows)))
+            seq = pool.sequence(sid)
+            room = maxrows[sid] - seq.n_tokens
+            if room < 1:
+                continue
+            stats["specs"] += 1
+            n0 = seq.n_tokens
+            k = int(rng.integers(1, room + 1))
+            rows = list(range(unique[0], unique[0] + k))
+            unique[0] += k
+            pool.append(sid, rows)
+            chain = list(seq.tokens)              # committed + speculative
+            n_keep = n0 + int(rng.integers(0, k))  # reject >= 1 row
+            pool.truncate(sid, n_keep)
+            pool.check_integrity()
+            # rejected full-page keys are out of the index ...
+            for end in range(page, n0 + k + 1, page):
+                if end > n_keep:
+                    assert tuple(chain[:end]) not in pool._full, \
+                        "truncated speculative page still indexed"
+            # ... and no lookup can reuse past the kept rows (the chain
+            # is unique beyond n0, so any excess would be resurrection)
+            assert pool.lookup(chain + [1])[2] <= n_keep
+        elif op == "fork" and maxrows:
+            sid = int(rng.choice(list(maxrows)))
+            grow = int(rng.integers(1, page + 1))
+            nsid = pool.fork(sid, grow)
+            if nsid is not None:
+                maxrows[nsid] = pool.sequence(nsid).n_tokens + grow
+        elif op in ("finish", "drop") and maxrows:
+            sid = int(rng.choice(list(maxrows)))
+            del maxrows[sid]
+            pool.release(sid, register=op == "finish")
+        elif op == "checkpoint":
+            snaps.append((pool.snapshot(), dict(maxrows)))
+        elif op == "crash" and snaps:
+            stats["crashes"] += 1
+            snap, shadow = snaps[-1]
+            pool.restore(snap)
+            pool.check_integrity()
+            assert pool.snapshot() == snap, "restore not faithful"
+            pool.restore(snap)                    # restore is re-runnable
+            assert pool.snapshot() == snap, "second restore diverged"
+            maxrows = dict(shadow)
+        pool.check_integrity()
+        s = pool.stats()
+        assert s["kv_dtype"] == kv_dtype
+        assert s["page_bytes"] == page_bytes
+
+    for sid in list(maxrows):
+        pool.release(sid)
+    pool.check_integrity()
+    s = pool.stats()
+    assert s["live_blocks"] == 0 and s["reserved_blocks"] == 0
+    assert s["free_blocks"] + s["cached_blocks"] == n_blocks
+    return stats
+
+
+@pytest.mark.parametrize("kv_dtype", ["float32", "int8"])
+def test_snapshot_restore_truncate_randomized(kv_dtype):
+    rng = np.random.default_rng(7)
+    totals = {"crashes": 0, "specs": 0}
+    for trial in range(25):
+        n_blocks = int(rng.integers(4, 24))
+        page = int(rng.integers(2, 9))
+        ops = list(rng.choice(OPS, size=int(rng.integers(10, 80))))
+        # guarantee restore pressure even on short sequences
+        ops = ["checkpoint"] + ops + ["crash"]
+        got = _drive(n_blocks, page, ops, seed=1000 * trial + 13,
+                     kv_dtype=kv_dtype)
+        for key in totals:
+            totals[key] += got[key]
+    assert totals["crashes"] >= 25 and totals["specs"] >= 25, (
+        "random drive never exercised the paths under test", totals)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(4, 24), st.integers(2, 8),
+           st.lists(st.sampled_from(OPS), min_size=1, max_size=80),
+           st.integers(0, 2 ** 16))
+    @settings(max_examples=60, deadline=None)
+    def test_snapshot_restore_truncate_hypothesis(n_blocks, page, ops, seed):
+        _drive(n_blocks, page, ["checkpoint"] + ops + ["crash"], seed)
+
+
+# --------------------------------------------------------------------------- #
+# directed edges
+# --------------------------------------------------------------------------- #
+
+def test_restore_rejects_mismatched_pool():
+    pool = BlockPool(8, 4)
+    snap = pool.snapshot()
+    other = BlockPool(4, 4)
+    with pytest.raises(ValueError, match="blocks"):
+        other.restore(snap)
+
+
+def test_restore_rolls_back_post_snapshot_admissions():
+    """Sequences admitted after the checkpoint vanish on restore, and
+    sequences released after it come back — the exact shape of a failed
+    tick that both admitted and finished work before dying."""
+    pool = BlockPool(16, 4)
+    sid0, _ = pool.admit(list(range(6)), 4)
+    pool.append(sid0, list(range(6)))
+    snap = pool.snapshot()
+    sid1, _ = pool.admit(list(range(20, 30)), 4)     # post-ckpt admit
+    pool.append(sid1, list(range(20, 30)))
+    pool.release(sid0)                               # post-ckpt finish
+    pool.restore(snap)
+    assert pool.sequence(sid0).n_tokens == 6         # resurrected
+    with pytest.raises(KeyError):
+        pool.sequence(sid1)                          # rolled back
+    assert pool.snapshot() == snap
+    pool.release(sid0, register=False)
+    pool.check_integrity()
+
+
+def test_truncate_then_restore_round_trips_the_index():
+    """Checkpoint -> speculative fill+register -> truncate/deindex ->
+    crash-restore must land back on the checkpoint's index exactly (the
+    failed tick's register AND deindex both unwind)."""
+    pool = BlockPool(8, 4)
+    sid, _ = pool.admit([1, 2, 3], 8)
+    pool.append(sid, [1, 2, 3])
+    snap = pool.snapshot()
+    idx0 = pool.stats()["indexed_full_pages"]
+    pool.append(sid, [4, 5, 6, 7, 8])                # fills pages -> indexed
+    assert pool.stats()["indexed_full_pages"] > idx0
+    pool.truncate(sid, 3)
+    pool.restore(snap)
+    assert pool.stats()["indexed_full_pages"] == idx0
+    assert pool.snapshot() == snap
+    pool.release(sid, register=False)
+    pool.check_integrity()

@@ -14,18 +14,17 @@ rows must vanish from the pool bookkeeping (``BlockPool.truncate``)
 without corrupting shared or indexed pages.
 """
 
-import time
-
 import numpy as np
 import pytest
+from conftest import TINY_LM, engine_variants, make_engine
+from test_fault_injection import _inject_crash, _inject_hang
 
 import repro  # noqa: F401  (registers every op/backend)
 from repro.models.graph_lm import GraphLMConfig
-from repro.runtime.engine import Engine, EngineRequest, build_lm_serving
+from repro.runtime.engine import EngineRequest
 from repro.runtime.kv_cache import BlockPool
 
-TINY = GraphLMConfig(vocab=61, d_model=32, n_layers=2, n_heads=4,
-                     n_kv_heads=2, d_ff=64)
+TINY = GraphLMConfig(**TINY_LM)
 
 
 def _reqs(seed, n=7, plo=1, phi=13, mlo=1, mhi=7):
@@ -55,8 +54,7 @@ def _exact(engine, ref, reqs):
 # --------------------------------------------------------------------------- #
 
 def test_spec_dense_token_exact():
-    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                   spec_k=3)
+    engine, ref = make_engine("spec")
     assert engine.spec_k == 3
     _exact(engine, ref, _reqs(21))
     m = engine.metrics
@@ -65,8 +63,7 @@ def test_spec_dense_token_exact():
 
 
 def test_spec_paged_fp32_token_exact_cold_and_prefix_hit():
-    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                   paged=True, page_size=8, spec_k=3)
+    engine, ref = make_engine("paged-fp32", spec_k=3)
     _exact(engine, ref, _reqs(21))
     assert engine.stepper.pool.stats()["live_blocks"] == 0
     # a warm request sharing a long prefix: speculation must compose with
@@ -87,17 +84,13 @@ def test_spec_paged_fp32_token_exact_cold_and_prefix_hit():
 
 
 def test_spec_kv8_token_exact_cold():
-    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                   paged=True, page_size=8,
-                                   kv_dtype="int8", spec_k=3)
+    engine, ref = make_engine("paged-int8", spec_k=3)
     _exact(engine, ref, _reqs(21))
     assert engine.stepper.pool.stats()["live_blocks"] == 0
 
 
 def test_spec_kv8_prefix_hit_exact():
-    engine, ref = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                   paged=True, page_size=8,
-                                   kv_dtype="int8", spec_k=3)
+    engine, ref = make_engine("paged-int8", spec_k=3)
     rng = np.random.default_rng(22)
     prefix = rng.integers(0, TINY.vocab, size=24).astype(np.int32)
     cold = EngineRequest(uid=100, prompt=np.concatenate(
@@ -115,10 +108,8 @@ def test_spec_kv8_prefix_hit_exact():
 def test_spec_composes_with_int8_weight_programs():
     """quantize="int8" (weights) + kv_dtype="int8" (pages) + speculation,
     against the int8-Program dense reference."""
-    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
-                                   paged=True, page_size=8,
-                                   kv_dtype="int8", quantize="int8",
-                                   spec_k=2)
+    engine, ref = make_engine("paged-int8", n_slots=2, cache_cap=32,
+                              quantize="int8", spec_k=2)
     _exact(engine, ref, _reqs(24, n=4, phi=11, mhi=5))
 
 
@@ -132,9 +123,7 @@ def test_spec_kv8_bitwise_matches_nonspec_engine(seed):
     reference (these two seeds do, with longer outputs than the
     reference-exactness tests pin)."""
     def run(spec_k):
-        engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                     paged=True, page_size=8,
-                                     kv_dtype="int8", spec_k=spec_k)
+        engine, _ = make_engine("paged-int8", spec_k=spec_k)
         reqs = _reqs(seed, n=6, mlo=1, mhi=9)
         for r in reqs:
             assert engine.submit(r)
@@ -156,8 +145,8 @@ def test_full_model_draft_accepts_everything():
     matches the target's argmax, so the accept rate is exactly 1.0 and
     each request finishes in ~ceil(new/width) spec ticks — the upper
     bound the serve_bench speedup smoke leans on."""
-    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=48,
-                                   spec_k=3, draft_layers=TINY.n_layers)
+    engine, ref = make_engine("spec", n_slots=2,
+                              draft_layers=TINY.n_layers)
     reqs = [EngineRequest(uid=i, prompt=np.asarray([3 + i, 5, 7], np.int32),
                           max_new_tokens=12) for i in range(2)]
     _exact(engine, ref, reqs)
@@ -176,7 +165,7 @@ def test_full_model_draft_accepts_everything():
 
 
 def test_spec_metrics_zero_when_disabled():
-    engine, ref = build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32)
+    engine, ref = make_engine("dense", n_slots=2, cache_cap=32)
     _exact(engine, ref, _reqs(5, n=3, phi=8, mhi=4))
     m = engine.metrics
     assert m.spec_ticks == 0 and m.spec_proposed == 0
@@ -186,11 +175,11 @@ def test_spec_metrics_zero_when_disabled():
 
 def test_draft_layers_validation():
     with pytest.raises(ValueError, match="draft_layers"):
-        build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
-                         spec_k=2, draft_layers=TINY.n_layers + 1)
+        make_engine("dense", n_slots=2, cache_cap=32, spec_k=2,
+                    draft_layers=TINY.n_layers + 1)
     with pytest.raises(ValueError, match="draft_layers"):
-        build_lm_serving(TINY, n_slots=2, chunk=4, cache_cap=32,
-                         spec_k=2, draft_layers=0)
+        make_engine("dense", n_slots=2, cache_cap=32, spec_k=2,
+                    draft_layers=0)
 
 
 # --------------------------------------------------------------------------- #
@@ -256,38 +245,9 @@ def test_truncate_bounds_checked():
 # fault injection through the speculative phases (satellite: recovery)
 # --------------------------------------------------------------------------- #
 
+# injection helpers are shared with the unified fault matrix
+# (test_fault_injection._inject_crash / _inject_hang, imported above)
 SPEC_PHASES = ("prefill", "draft_prefill", "draft", "verify")
-
-
-def _inject_crash(stepper, fail_calls, phases):
-    calls = [0]
-    for phase in phases:
-        orig = getattr(stepper, phase)
-
-        def wrapped(*args, _orig=orig):
-            calls[0] += 1
-            if calls[0] in fail_calls:
-                raise RuntimeError(f"injected fault at call {calls[0]}")
-            return _orig(*args)
-
-        setattr(stepper, phase, wrapped)
-    return calls
-
-
-def _inject_hang(stepper, hang_calls, sleep_s, phases):
-    calls = [0]
-    for phase in phases:
-        orig = getattr(stepper, phase)
-
-        def wrapped(*args, _orig=orig):
-            calls[0] += 1
-            out = _orig(*args)
-            if calls[0] in hang_calls:
-                time.sleep(sleep_s)     # overrun the deadline, then return
-            return out
-
-        setattr(stepper, phase, wrapped)
-    return calls
 
 
 def _run_burst(engine, seed=42):
@@ -307,26 +267,24 @@ def _run_burst(engine, seed=42):
     return {r.uid: list(r.out_tokens) for r in reqs}
 
 
-def _spec_engine(self_heal=False, hang_timeout=None, **kw):
-    engine, _ = build_lm_serving(TINY, n_slots=3, chunk=4, cache_cap=48,
-                                 spec_k=3, self_heal=self_heal,
-                                 hang_timeout=hang_timeout, **kw)
+def _spec_engine(variant, self_heal=False, hang_timeout=None, **kw):
+    engine, _ = make_engine(variant, spec_k=3, self_heal=self_heal,
+                            hang_timeout=hang_timeout, **kw)
     return engine
 
 
-@pytest.mark.parametrize("kw", [
-    {},                                              # dense
-    {"paged": True, "page_size": 8},                 # paged fp32
-    {"paged": True, "page_size": 8, "kv_dtype": "int8"},
-], ids=["dense", "paged", "kv8"])
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("dense", "paged-fp32",
+                                         "paged-int8"))
 @pytest.mark.parametrize("seed", [0, 1])
-def test_spec_crash_recovery_token_identical(kw, seed):
+def test_spec_crash_recovery_token_identical(variant, engine_kw, seed,
+                                             fault_seed):
     """Crashes landing in prefill / draft-catch-up / draft / verify: the
     accepted-but-uncommitted draft tokens of the failed tick must be
     neither duplicated nor lost after recovery."""
-    want = _run_burst(_spec_engine(**kw))
-    engine = _spec_engine(self_heal=True, **kw)
-    rng = np.random.default_rng(seed)
+    want = _run_burst(_spec_engine(variant))
+    engine = _spec_engine(variant, self_heal=True)
+    rng = np.random.default_rng(1000 * fault_seed + seed)
     fails = set(int(c) for c in rng.choice(np.arange(2, 20), size=3,
                                            replace=False))
     _inject_crash(engine.stepper, fails, SPEC_PHASES)
@@ -339,18 +297,16 @@ def test_spec_crash_recovery_token_identical(kw, seed):
         assert engine.stepper.pool.live_sequences == 0
 
 
-@pytest.mark.parametrize("kw", [
-    {},
-    {"paged": True, "page_size": 8},
-    {"paged": True, "page_size": 8, "kv_dtype": "int8"},
-], ids=["dense", "paged", "kv8"])
-def test_spec_hang_recovery_token_identical(kw):
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("dense", "paged-fp32",
+                                         "paged-int8"))
+def test_spec_hang_recovery_token_identical(variant, engine_kw):
     """Hangs (the call completes but overruns the deadline, so its result
     is discarded): draft-cache and fp32 page writes of the discarded tick
     are overwritten identically on retry; the kv8 verify leaves the live
     pages untouched, so its discarded tick leaves no residue at all."""
-    want = _run_burst(_spec_engine(**kw))
-    engine = _spec_engine(self_heal=True, hang_timeout=0.25, **kw)
+    want = _run_burst(_spec_engine(variant))
+    engine = _spec_engine(variant, self_heal=True, hang_timeout=0.25)
     _inject_hang(engine.stepper, {3, 9}, sleep_s=0.6, phases=SPEC_PHASES)
     got = _run_burst(engine)
     assert engine.metrics.n_hang_failures >= 2
@@ -364,9 +320,8 @@ def test_spec_kv8_commit_crash_recovery_token_identical():
     """A crash on the spec-commit call itself: the tick's pool bookkeeping
     rolls back to the checkpoint, the retried verify re-reads the
     untouched pages, and the replayed commit lands the same rows."""
-    kw = {"paged": True, "page_size": 8, "kv_dtype": "int8"}
-    want = _run_burst(_spec_engine(**kw))
-    engine = _spec_engine(self_heal=True, **kw)
+    want = _run_burst(_spec_engine("paged-int8"))
+    engine = _spec_engine("paged-int8", self_heal=True)
     _inject_crash(engine.stepper, {1, 3}, phases=("commit_spec",))
     got = _run_burst(engine)
     assert engine.metrics.n_recoveries >= 2
@@ -380,9 +335,8 @@ def test_spec_kv8_commit_hang_recovery_token_identical():
     device before being discarded, and the retried commit replays the
     identical single-row writes — identical rows quantize to identical
     bytes and never raise a page scale, so the replay is idempotent."""
-    kw = {"paged": True, "page_size": 8, "kv_dtype": "int8"}
-    want = _run_burst(_spec_engine(**kw))
-    engine = _spec_engine(self_heal=True, hang_timeout=0.25, **kw)
+    want = _run_burst(_spec_engine("paged-int8"))
+    engine = _spec_engine("paged-int8", self_heal=True, hang_timeout=0.25)
     _inject_hang(engine.stepper, {2}, sleep_s=0.6, phases=("commit_spec",))
     got = _run_burst(engine)
     assert engine.metrics.n_hang_failures >= 1

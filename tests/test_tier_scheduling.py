@@ -1,0 +1,275 @@
+"""Tier-aware overload scheduling (ISSUE 10 tentpole b).
+
+Under overload the engine must degrade the LOW tiers first, on two
+paths, with the mechanism/policy split pinned here:
+
+* queue shedding — a full queue evicts its lowest-priority member
+  (``SlotScheduler.shed_lowest``, the mechanism) instead of turning a
+  higher-tier arrival away (``Engine.submit``, the policy), with the
+  victim terminal as ``dropped == "shed_low_tier"``;
+* preemption — when the queue head would blow its TTFT budget
+  (``slo_ttft_ticks`` or its own deadline) and every slot is busy, the
+  lowest-priority running slot is preempted.  The victim requeues at its
+  original position and resumes via the page-level path: its KV pages
+  (or dense cache rows) stay live, so preemption costs pool capacity,
+  not recompute — and its greedy output is token-identical to an
+  undisturbed run.
+
+Conservation (submitted == rejected + finished + dropped + queued +
+busy) must survive both paths; the serve_bench ``overload`` section
+turns these unit bars into the macro claim (tier-aware high-tier SLO
+attainment beats tier-blind FIFO at 2x offered load).
+"""
+
+import numpy as np
+import pytest
+from conftest import engine_variants, make_engine
+
+from repro.runtime.batching import SlotScheduler
+from repro.runtime.engine import EngineRequest
+
+
+def _req(uid, priority=0, n=4, max_new=4, deadline=None):
+    rng = np.random.default_rng(100 + uid)
+    return EngineRequest(uid=uid, priority=priority,
+                         prompt=rng.integers(2, 61, size=n).astype(np.int32),
+                         max_new_tokens=max_new, deadline_tick=deadline)
+
+
+# --------------------------------------------------------------------------- #
+# SlotScheduler.shed_lowest — the mechanism
+# --------------------------------------------------------------------------- #
+
+def test_shed_lowest_picks_lowest_priority_then_most_recent():
+    sched = SlotScheduler(n_slots=1)
+    reqs = [_req(0, priority=1), _req(1, priority=0), _req(2, priority=0),
+            _req(3, priority=2)]
+    for r in reqs:
+        assert sched.submit(r)
+    # two priority-0 entries below the floor: the most recently submitted
+    # one (uid 2) is shed — it waited least and has the weakest FIFO claim
+    victim = sched.shed_lowest(min_priority=2)
+    assert victim is reqs[2]
+    assert sched.n_rejected == 1
+    assert sched.queue_len == 3
+    sched.check_conservation()
+    # next shed at the same floor takes the remaining priority-0, then
+    # the priority-1; the priority-2 head is at the floor and untouchable
+    assert sched.shed_lowest(2) is reqs[1]
+    assert sched.shed_lowest(2) is reqs[0]
+    assert sched.shed_lowest(2) is None
+    assert sched.queue_len == 1 and sched.peek() is reqs[3]
+    sched.check_conservation()
+
+
+def test_shed_lowest_floor_is_strict():
+    sched = SlotScheduler(n_slots=1)
+    a, b = _req(0, priority=1), _req(1, priority=1)
+    sched.submit(a)
+    sched.submit(b)
+    # equal-priority entries are AT the floor, never below it
+    assert sched.shed_lowest(min_priority=1) is None
+    assert sched.shed_lowest(min_priority=2) is b   # most recent tie-break
+    sched.check_conservation()
+
+
+def test_shed_lowest_preserves_admission_order():
+    sched = SlotScheduler(n_slots=2)
+    reqs = [_req(i, priority=p) for i, p in enumerate([0, 2, 0, 1])]
+    for r in reqs:
+        sched.submit(r)
+    assert sched.shed_lowest(2) is reqs[2]
+    # the heap survives the mid-heap pop: admission still drains in
+    # (priority desc, submit order)
+    admitted = [r for _, r in sched.admit()]
+    assert admitted == [reqs[1], reqs[3]]
+    sched.check_conservation()
+
+
+# --------------------------------------------------------------------------- #
+# Engine.submit — tier-aware queue shedding (the policy)
+# --------------------------------------------------------------------------- #
+
+def test_full_queue_sheds_low_tier_for_high_tier():
+    engine, _ = make_engine("dense", n_slots=1, tier_aware=True, max_queue=2)
+    busy = _req(0, priority=1, max_new=8)
+    assert engine.submit(busy)
+    engine.step()                                   # into the slot
+    low1, low2 = _req(1, priority=0), _req(2, priority=0)
+    assert engine.submit(low1) and engine.submit(low2)
+    assert engine.sched.queue_len == 2              # queue now full
+    high = _req(3, priority=1)
+    assert engine.submit(high), high.dropped
+    # the most recent low-tier entry made room; terminal + accounted
+    assert low2.dropped == "shed_low_tier"
+    assert low2.finish_tick is not None
+    assert engine.metrics.n_tier_shed == 1
+    assert engine.sched.queue_len == 2
+    engine.sched.check_conservation()
+    engine.run()
+    assert busy.done and low1.done and high.done
+    assert not low2.done
+    engine.sched.check_conservation()
+
+
+def test_full_queue_shed_skips_equal_tier():
+    """An arrival never sheds its own tier: FIFO fairness within a tier
+    is preserved and the arrival takes the queue_full rejection."""
+    engine, _ = make_engine("dense", n_slots=1, tier_aware=True, max_queue=1)
+    assert engine.submit(_req(0, priority=0, max_new=8))
+    engine.step()
+    queued = _req(1, priority=0)
+    assert engine.submit(queued)
+    same = _req(2, priority=0)
+    assert not engine.submit(same)
+    assert same.dropped == "queue_full" and queued.dropped is None
+    assert engine.metrics.n_tier_shed == 0
+    engine.sched.check_conservation()
+    engine.run()
+
+
+def test_tier_blind_engine_rejects_high_tier_instead():
+    """The baseline the serve_bench overload section measures against:
+    without tier_aware, a full queue turns the high-tier arrival away
+    even though a low-tier request is sitting in the queue."""
+    engine, _ = make_engine("dense", n_slots=1, max_queue=1)
+    assert engine.submit(_req(0, priority=0, max_new=8))
+    engine.step()
+    low = _req(1, priority=0)
+    assert engine.submit(low)
+    high = _req(2, priority=1)
+    assert not engine.submit(high)
+    assert high.dropped == "queue_full" and low.dropped is None
+    engine.sched.check_conservation()
+    engine.run()
+
+
+# --------------------------------------------------------------------------- #
+# preemption — pages, not recompute
+# --------------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("variant,engine_kw",
+                         engine_variants("dense", "paged-fp32",
+                                         "paged-int8"))
+def test_preemption_admits_high_tier_and_victim_is_token_identical(
+        variant, engine_kw):
+    """One slot, a long low-tier decode, then a high-tier arrival with a
+    tight TTFT budget: the low-tier slot is preempted, the high-tier
+    request meets its budget, and the victim resumes token-identical to
+    an undisturbed run.
+
+    The paged engines resume FROM THEIR SURVIVING PAGES (pages live in
+    the pool, not the slot, so the preemptor can take the slot without
+    destroying them) — ``recovered_rows`` proves the fast-forward.  The
+    dense engine's rows DO live in the slot, and the preemptor's prefill
+    overwrites them; the bar there is that the owner map detects the
+    clobber and falls back to the always-correct full re-prefill instead
+    of resuming from another request's rows."""
+    def undisturbed(req_fn):
+        engine, _ = make_engine(variant, n_slots=1)
+        r = req_fn()
+        assert engine.submit(r)
+        engine.run()
+        assert r.done
+        return list(r.out_tokens)
+
+    low_fn = lambda: _req(0, priority=0, n=12, max_new=12)   # noqa: E731
+    high_fn = lambda: _req(1, priority=1, n=3, max_new=3)    # noqa: E731
+    want_low, want_high = undisturbed(low_fn), undisturbed(high_fn)
+
+    engine, _ = make_engine(variant, n_slots=1, tier_aware=True,
+                            slo_ttft_ticks=6)
+    low = low_fn()
+    assert engine.submit(low)
+    for _ in range(4):                  # low is mid-stream in the slot
+        engine.step()
+    high = high_fn()
+    assert engine.submit(high)
+    engine.run()
+    assert engine.metrics.n_preempted >= 1
+    assert low.n_requeues >= 1
+    assert low.done and high.done
+    # the high tier got the slot: it finished before the (earlier,
+    # longer) low-tier request and met its TTFT budget
+    assert high.finish_tick < low.finish_tick
+    assert high.ttft_ticks <= 6 + 1     # +1: preemption frees the slot
+    #                                     for the NEXT tick's admission
+    # preemption cost pages, not recompute: the victim fast-forwarded
+    # past every row it had committed — except dense, whose slot rows
+    # the preemptor overwrote; there the clobber-detected fallback
+    # re-prefills rather than resume from the wrong request's rows
+    if engine.paged:
+        assert engine.metrics.recovered_rows > 0
+    else:
+        assert engine.metrics.recovered_rows == 0
+    assert low.out_tokens == want_low
+    assert high.out_tokens == want_high
+    engine.sched.check_conservation()
+    if engine.paged:
+        engine.stepper.pool.check_integrity()
+        assert engine.stepper.pool.live_sequences == 0
+
+
+def test_preemption_never_fires_against_equal_or_higher_tier():
+    engine, _ = make_engine("dense", n_slots=1, tier_aware=True,
+                            slo_ttft_ticks=2)
+    first = _req(0, priority=1, max_new=10)
+    assert engine.submit(first)
+    engine.step()
+    # a same-tier arrival with an already-blown budget still waits: only
+    # strictly lower-priority slots are preemptable
+    second = _req(1, priority=1)
+    assert engine.submit(second)
+    engine.run()
+    assert engine.metrics.n_preempted == 0
+    assert first.done and second.done
+    assert first.finish_tick <= second.finish_tick
+    engine.sched.check_conservation()
+
+
+def test_preemption_requires_tier_aware():
+    """Same squeeze as the matrix test, tier_aware off: no preemption,
+    the high-tier request simply waits its turn."""
+    engine, _ = make_engine("dense", n_slots=1, slo_ttft_ticks=6)
+    low = _req(0, priority=0, n=12, max_new=12)
+    assert engine.submit(low)
+    for _ in range(4):
+        engine.step()
+    high = _req(1, priority=1, n=3, max_new=3)
+    assert engine.submit(high)
+    engine.run()
+    assert engine.metrics.n_preempted == 0
+    assert low.finish_tick < high.finish_tick
+    engine.sched.check_conservation()
+
+
+def test_preempted_then_shed_victim_releases_its_pages():
+    """A preempted request owns live pool pages while it waits in the
+    queue.  If the queue then sheds it for an even higher tier, those
+    pages must come back — the shed path must release the resume's
+    sequence or the pool leaks."""
+    engine, _ = make_engine("paged-fp32", n_slots=1, tier_aware=True,
+                            slo_ttft_ticks=6, max_queue=1)
+    low = _req(0, priority=0, n=12, max_new=12)
+    assert engine.submit(low)
+    for _ in range(4):
+        engine.step()
+    mid = _req(1, priority=1, n=3, max_new=6)
+    assert engine.submit(mid)
+    # run until the preemption parks `low` (holding pages) in the queue
+    for _ in range(12):
+        engine.step()
+        if engine.metrics.n_preempted:
+            break
+    assert engine.metrics.n_preempted == 1 and not low.done
+    live0 = engine.stepper.pool.live_sequences
+    assert live0 >= 1
+    high = _req(2, priority=2, n=3, max_new=3)
+    assert engine.submit(high)
+    assert low.dropped == "shed_low_tier"
+    engine.run()
+    assert mid.done and high.done
+    assert engine.metrics.n_tier_shed == 1
+    engine.sched.check_conservation()
+    engine.stepper.pool.check_integrity()
+    assert engine.stepper.pool.live_sequences == 0
